@@ -1,0 +1,102 @@
+"""Shared benchmark utilities: method registry, the paper's storage-size
+accounting, error metric, and CSV emission.
+
+Storage accounting (Section 5 "Storage Size"): linear sketches store m
+doubles; sampling sketches store an (idx: 32-bit, value: 64-bit) pair per
+sample, i.e. 1.5 doubles per sample.  Given a storage budget of ``m``
+doubles, sampling methods therefore get ``m / 1.5`` samples and linear
+methods get ``m`` entries — all comparisons below are at equal storage.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (countsketch, countsketch_estimate, estimate_inner_product,
+                        jl_estimate, jl_sketch, minhash_estimate, minhash_sketch,
+                        priority_sketch, threshold_sketch, wmh_estimate,
+                        wmh_sketch)
+
+SAMPLING_FACTOR = 1.5
+
+
+def samples_for_budget(m_doubles: int) -> int:
+    return max(int(m_doubles / SAMPLING_FACTOR), 4)
+
+
+def scaled_error(est: float, true: float, a: np.ndarray, b: np.ndarray) -> float:
+    """|est - true| / (||a|| ||b||) — the paper's error measure."""
+    denom = float(np.linalg.norm(a) * np.linalg.norm(b))
+    return abs(est - true) / max(denom, 1e-12)
+
+
+# method name -> (sketch_fn(vec, m_budget, seed), estimate_fn(sa, sb))
+def make_methods(include_wmh: bool = True, include_mh: bool = True):
+    methods = {
+        "JL": (lambda v, m, s: jl_sketch(v, m, s), jl_estimate),
+        "CS": (lambda v, m, s: countsketch(v, m, s), countsketch_estimate),
+        "TS-weighted": (
+            lambda v, m, s: threshold_sketch(v, samples_for_budget(m), s),
+            lambda a, b: estimate_inner_product(a, b)),
+        "PS-weighted": (
+            lambda v, m, s: priority_sketch(v, samples_for_budget(m), s),
+            lambda a, b: estimate_inner_product(a, b)),
+        "TS-uniform": (
+            lambda v, m, s: threshold_sketch(v, samples_for_budget(m), s,
+                                             variant="uniform"),
+            lambda a, b: estimate_inner_product(a, b, variant="uniform")),
+        "PS-uniform": (
+            lambda v, m, s: priority_sketch(v, samples_for_budget(m), s,
+                                            variant="uniform"),
+            lambda a, b: estimate_inner_product(a, b, variant="uniform")),
+    }
+    if include_mh:
+        methods["MH"] = (
+            lambda v, m, s: minhash_sketch(v, samples_for_budget(m), s),
+            minhash_estimate)
+    if include_wmh:
+        methods["MH-weighted"] = (
+            lambda v, m, s: wmh_sketch(v, samples_for_budget(m), s),
+            wmh_estimate)
+    return methods
+
+
+def mean_scaled_error(method, pairs, m_budget: int, n_trials: int = 1) -> float:
+    sketch_fn, est_fn = method
+    errs = []
+    for i, (a, b) in enumerate(pairs):
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        true = float(np.dot(a, b))
+        for t in range(n_trials):
+            seed = i * 131 + t
+            sa = sketch_fn(aj, m_budget, seed)
+            sb = sketch_fn(bj, m_budget, seed)
+            errs.append(scaled_error(float(est_fn(sa, sb)), true, a, b))
+    return float(np.mean(errs))
+
+
+def time_callable(fn, *args, n_rep: int = 5, warmup: int = 2) -> float:
+    """Median wall time (us) of a jax callable, post-warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(n_rep):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+class Csv:
+    def __init__(self):
+        self.rows = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.1f},{derived}")
+
+    def extend(self, other: "Csv"):
+        self.rows.extend(other.rows)

@@ -1,0 +1,74 @@
+"""Figure 7: sketch construction time vs sketch size (n=250k, nnz=50k).
+
+Validation: TS/PS/CS construction time is ~flat in m; JL and MH-weighted
+scale with m (the paper's O(Nm) vs O(N)/O(N log m) separation).  Absolute
+times are XLA:CPU, but the scaling behaviour is the claim."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (countsketch, jl_sketch, minhash_sketch,
+                        priority_sketch, threshold_sketch, wmh_sketch)
+from repro.data.synthetic import vector_pair
+from .common import Csv, time_callable
+
+
+def run(quick: bool = True) -> Csv:
+    csv = Csv()
+    rng = np.random.default_rng(4)
+    if quick:
+        n, nnz = 50_000, 10_000
+        sizes = (100, 400, 1600)
+        include_slow = False
+    else:
+        n, nnz = 250_000, 50_000
+        sizes = (100, 200, 400, 800, 1600, 3200, 5000)
+        include_slow = True
+    a, _ = vector_pair(rng, n, nnz, 0.5, outlier_frac=0.1)
+    aj = jnp.asarray(a)
+
+    methods = {
+        "TS-weighted": lambda v, m, s: threshold_sketch(v, m, s).idx,
+        "PS-weighted": lambda v, m, s: priority_sketch(v, m, s).idx,
+        "CS": countsketch,
+        "JL": lambda v, m, s: jl_sketch(v, m, s),
+        "MH": lambda v, m, s: minhash_sketch(v, m, s).idx,
+    }
+    if include_slow:
+        methods["MH-weighted"] = lambda v, m, s: wmh_sketch(v, m, s).idx
+
+    times = {}
+    for name, fn in methods.items():
+        for m in sizes:
+            if name in ("MH", "MH-weighted") and m > 1600:
+                continue
+            jitted = jax.jit(lambda v, fn=fn, m=m: fn(v, m, 7))
+            us = time_callable(jitted, aj, n_rep=3, warmup=1)
+            times[(name, m)] = us
+            csv.add(f"fig7/{name}/m={m}", us, f"construction")
+
+    lo, hi = sizes[0], sizes[-1]
+    m_ratio = hi / lo
+    flat_ts = times[("TS-weighted", hi)] < 3 * times[("TS-weighted", lo)]
+    # PS is O(N log m) vs JL's O(Nm): PS must grow much slower than JL
+    ps_ratio = times[("PS-weighted", hi)] / times[("PS-weighted", lo)]
+    jl_ratio = times[("JL", hi)] / times[("JL", lo)]
+    subl_ps = ps_ratio < 0.6 * m_ratio or ps_ratio * 1.5 < jl_ratio
+    hi_mh = max(m for m in sizes if (("MH", m) in times))
+    jl_scales = times[("JL", hi)] > 3 * times[("JL", lo)]
+    csv.add("fig7/validate/ts_ps_flat_in_m", 0,
+            f"{'ok' if flat_ts and subl_ps else 'FAIL'} "
+            f"ts_ratio={times[('TS-weighted', hi)]/times[('TS-weighted', lo)]:.2f} "
+            f"ps_ratio={ps_ratio:.2f} jl_ratio={jl_ratio:.2f} m_ratio={m_ratio:.0f}")
+    csv.add("fig7/validate/jl_scales_with_m", 0,
+            f"{'ok' if jl_scales else 'FAIL'}")
+    faster = times[("PS-weighted", hi_mh)] * 3 < times[("MH", hi_mh)]
+    csv.add("fig7/validate/ps_much_faster_than_minhash", 0,
+            f"{'ok' if faster else 'FAIL'}")
+    return csv
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Figure 9: text similarity on TF-IDF document vectors (20-Newsgroups is
+unavailable offline; the stand-in draws zipf unigrams, applies tf-idf and
+unit-normalizes — substitution recorded in EXPERIMENTS.md).
+
+Validation: sampling methods beat linear sketches; weighted vs uniform gap
+appears for long documents (panel b)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.data.synthetic import tfidf_documents
+from .common import Csv, make_methods, scaled_error
+
+
+def run(quick: bool = True) -> Csv:
+    csv = Csv()
+    rng = np.random.default_rng(6)
+    if quick:
+        n_docs, vocab, n_query_pairs, m = 60, 20_000, 60, 256
+    else:
+        n_docs, vocab, n_query_pairs, m = 300, 50_000, 400, 400
+    docs_short = tfidf_documents(rng, n_docs, vocab, (50, 400))
+    docs_long = tfidf_documents(rng, n_docs, vocab, (600, 2500))
+    methods = {k: v for k, v in make_methods(include_wmh=False).items()
+               if k in ("JL", "CS", "TS-weighted", "PS-weighted",
+                        "TS-uniform", "PS-uniform")}
+
+    def panel(docs, tag):
+        out = {}
+        pairs = [(rng.integers(0, len(docs)), rng.integers(0, len(docs)))
+                 for _ in range(n_query_pairs)]
+        for name, (sk, est) in methods.items():
+            t0 = time.perf_counter()
+            errs = []
+            cache = {}
+            for s, (i, j) in enumerate(pairs):
+                seed = 17
+                for d in (i, j):
+                    if d not in cache:
+                        cache[d] = sk(jnp.asarray(docs[d]), m, seed)
+                true = float(np.dot(docs[i], docs[j]))
+                errs.append(scaled_error(float(est(cache[i], cache[j])),
+                                         true, docs[i], docs[j]))
+            dt = (time.perf_counter() - t0) / len(pairs) * 1e6
+            err = float(np.mean(errs))
+            out[name] = err
+            csv.add(f"fig9/{tag}/{name}", dt, f"cos_err={err:.5f}")
+        return out
+
+    res_a = panel(docs_short, "all_docs")
+    res_b = panel(docs_long, "long_docs")
+    ok = res_a["PS-weighted"] < res_a["JL"] and res_a["PS-weighted"] < res_a["CS"]
+    csv.add("fig9/validate/sampling_beats_linear", 0, f"{'ok' if ok else 'FAIL'}")
+    ok2 = res_b["PS-weighted"] <= res_b["PS-uniform"] * 1.1
+    csv.add("fig9/validate/weighted_helps_long_docs", 0,
+            f"{'ok' if ok2 else 'FAIL'}")
+    return csv
+
+
+if __name__ == "__main__":
+    run()

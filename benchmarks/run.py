@@ -1,0 +1,57 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows; each module also emits
+``<fig>/validate/...`` rows checking the paper's qualitative claims
+against our implementation (EXPERIMENTS.md cross-references these).
+
+Default profile is ``quick`` (scaled-down sizes, ~15 min CPU); pass
+``--full`` for the paper-scale settings.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig3_synthetic_ip, fig4_binary, fig5_endbiased, fig6_join_corr,
+               fig7_runtime, fig9_textsim, fig10_joinsize, table2_realworld)
+
+MODULES = [
+    ("fig3_synthetic_ip", fig3_synthetic_ip),
+    ("fig4_binary", fig4_binary),
+    ("fig5_endbiased", fig5_endbiased),
+    ("fig6_join_corr", fig6_join_corr),
+    ("fig7_runtime", fig7_runtime),
+    ("table2_realworld", table2_realworld),
+    ("fig9_textsim", fig9_textsim),
+    ("fig10_joinsize", fig10_joinsize),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale settings (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module substrings")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = []
+    for name, mod in MODULES:
+        if args.only and not any(tok in name for tok in args.only.split(",")):
+            continue
+        t0 = time.time()
+        print(f"# --- {name} ---", file=sys.stderr)
+        csv = mod.run(quick=not args.full)
+        for row_name, _, derived in csv.rows:
+            if "/validate/" in row_name and "FAIL" in derived:
+                failures.append((row_name, derived))
+        print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+    if failures:
+        print(f"# VALIDATION FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("# all validations ok", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

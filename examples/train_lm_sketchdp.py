@@ -1,0 +1,19 @@
+"""End-to-end training driver: train an LM with checkpoint/restart and
+(optionally, multi-device) SketchDP compressed gradients.
+
+Default is a CPU-friendly reduced gemma2; the FULL ~100M-and-up configs run
+through the same driver on a TPU slice:
+
+    PYTHONPATH=src python examples/train_lm_sketchdp.py                 # tiny, CPU
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python examples/train_lm_sketchdp.py --sketchdp    # compressed DP
+"""
+import subprocess
+import sys
+
+args = [sys.executable, "-m", "repro.launch.train", "--arch", "gemma2-2b",
+        "--reduced", "--steps", "60", "--batch", "8", "--seq", "64",
+        "--ckpt-dir", "/tmp/repro_ckpt_example"]
+if "--sketchdp" in sys.argv:
+    args += ["--sketchdp-m", "20000"]
+sys.exit(subprocess.call(args))

@@ -1,0 +1,4 @@
+"""repro: Sampling Methods for Inner Product Sketching — a production-grade
+multi-pod JAX framework (core sketching library, Pallas TPU kernels, 10-arch
+model zoo, distributed training/serving runtime)."""
+__version__ = "0.1.0"

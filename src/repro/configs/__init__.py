@@ -1,0 +1,3 @@
+from .base import ARCH_IDS, SHAPES, ModelConfig, get_config
+
+__all__ = ["ARCH_IDS", "SHAPES", "ModelConfig", "get_config"]

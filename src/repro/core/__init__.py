@@ -1,0 +1,51 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+Sampling-based inner product sketching (Daliri, Freire, Musco, Santos,
+Zhang — "Sampling Methods for Inner Product Sketching", PVLDB):
+
+- :func:`threshold_sketch` — Algorithm 1 (+ adaptive Algorithm 4), O(N);
+- :func:`priority_sketch` — Algorithm 3, O(N log m), fixed size m;
+- :func:`estimate_inner_product` — Algorithm 2, unbiased, Var bounds of
+  Theorems 1/3;
+- join-correlation via Eq. (9) with the optimized combined sketches of
+  Algorithms 5/6;
+- baselines used in the paper's evaluation (JL, CountSketch, MinHash, WMH;
+  KMV == priority_sketch(variant="uniform"), End-Biased ==
+  threshold_sketch(variant="l1")).
+"""
+from .hashing import fold_seed, hash_bucket, hash_sign, hash_u32, hash_unit, mix32
+from .sketches import INVALID_IDX, Sketch, default_capacity, densify, weight
+from .threshold import adaptive_tau, threshold_sketch
+from .priority import priority_sketch
+from .estimator import (estimate_inner_product, estimate_inner_product_dense,
+                        intersection_size)
+from .join_correlation import (CombinedSketch, combined_estimates,
+                               combined_priority_sketch,
+                               combined_threshold_sketch,
+                               correlation_from_estimates,
+                               empirical_correlation,
+                               estimate_join_correlation)
+from .baselines import (MinHashSketch, WMHSketch, countsketch,
+                        countsketch_estimate, jl_estimate, jl_sketch,
+                        minhash_estimate, minhash_sketch, wmh_estimate,
+                        wmh_sketch)
+from .batched import estimate_all_pairs, estimate_query, sketch_corpus
+from .variance import (chebyshev_interval, error_guarantee,
+                       linear_sketch_error, sketch_size_high_prob,
+                       variance_bound)
+
+__all__ = [
+    "fold_seed", "hash_bucket", "hash_sign", "hash_u32", "hash_unit", "mix32",
+    "INVALID_IDX", "Sketch", "default_capacity", "densify", "weight",
+    "adaptive_tau", "threshold_sketch", "priority_sketch",
+    "estimate_inner_product", "estimate_inner_product_dense", "intersection_size",
+    "CombinedSketch", "combined_estimates", "combined_priority_sketch",
+    "combined_threshold_sketch", "correlation_from_estimates",
+    "empirical_correlation", "estimate_join_correlation",
+    "MinHashSketch", "WMHSketch", "countsketch", "countsketch_estimate",
+    "jl_estimate", "jl_sketch", "minhash_estimate", "minhash_sketch",
+    "wmh_estimate", "wmh_sketch",
+    "estimate_all_pairs", "estimate_query", "sketch_corpus",
+    "chebyshev_interval", "error_guarantee", "linear_sketch_error",
+    "sketch_size_high_prob", "variance_bound",
+]

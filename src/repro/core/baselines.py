@@ -1,0 +1,170 @@
+"""Baseline sketches from the paper's evaluation (Section 5).
+
+- JL / AMS: dense Rademacher projection.  Implemented *matrix-free*: the
+  +-1 entries are re-generated from the shared hash, so sketching is O(Nm)
+  compute but O(m) memory (the paper stores a dense Pi).
+- CountSketch / Fast-AGMS: one repetition, signed bucket scatter.  O(N).
+- MinHash (MH): k independent unweighted min-hash samples with the union
+  estimated from the min hash values (as in Bessa et al. [7]).
+- WMH: weighted MinHash via Ioffe-style consistent weighted sampling on
+  the squared weights a_i^2.  Collisions of coordinated CWS samples occur
+  with per-index probability min(a_i^2, b_i^2)/U (U = weighted union), so
+  the unbiased estimator divides matched products by min(a_i^2, b_i^2) and
+  scales by an estimate of U.  O(Nm) — this is the cost the paper's methods
+  remove.
+- KMV == PS-uniform and End-Biased == TS-l1 are provided by the main
+  methods with ``variant=...`` (Appendix A.2) and need no separate code.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import fold_seed, hash_bucket, hash_sign, hash_unit
+
+# ----------------------------------------------------------------------------
+# Johnson-Lindenstrauss / AMS
+# ----------------------------------------------------------------------------
+
+
+def jl_sketch(a: jnp.ndarray, m: int, seed, *, row_block: int = 64) -> jnp.ndarray:
+    """S(a) = Pi a / sqrt(m) with Pi in {+-1}^{m x n}, hash-generated."""
+    a = jnp.asarray(a, jnp.float32)
+    n = a.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+
+    def row_chunk(r0):
+        rows = r0 + jnp.arange(row_block, dtype=jnp.int32)
+        signs = jax.vmap(lambda r: hash_sign(fold_seed(seed, 0) + r.astype(jnp.uint32), idx))(rows)
+        return signs @ a  # (row_block,)
+
+    n_chunks = -(-m // row_block)
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * row_block
+    out = jax.lax.map(row_chunk, starts).reshape(-1)[:m]
+    return out / jnp.sqrt(jnp.float32(m))
+
+
+def jl_estimate(sa: jnp.ndarray, sb: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(sa, sb)
+
+
+# ----------------------------------------------------------------------------
+# CountSketch / Fast-AGMS
+# ----------------------------------------------------------------------------
+
+
+def countsketch(a: jnp.ndarray, m: int, seed) -> jnp.ndarray:
+    a = jnp.asarray(a, jnp.float32)
+    n = a.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    bucket = hash_bucket(fold_seed(seed, 1), idx, m)
+    sign = hash_sign(fold_seed(seed, 2), idx)
+    return jnp.zeros((m,), jnp.float32).at[bucket].add(sign * a)
+
+
+def countsketch_estimate(sa: jnp.ndarray, sb: jnp.ndarray) -> jnp.ndarray:
+    return jnp.dot(sa, sb)
+
+
+# ----------------------------------------------------------------------------
+# MinHash (unweighted, k repetitions)
+# ----------------------------------------------------------------------------
+
+
+class MinHashSketch(NamedTuple):
+    idx: jnp.ndarray    # int32[k] argmin index per repetition
+    val: jnp.ndarray    # f32[k] vector value at that index
+    minv: jnp.ndarray   # f32[k] the min hash value (union-size estimation)
+
+
+def minhash_sketch(a: jnp.ndarray, k: int, seed, *, rep_block: int = 32) -> MinHashSketch:
+    a = jnp.asarray(a, jnp.float32)
+    n = a.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    support = a != 0
+
+    def rep_chunk(j0):
+        reps = j0 + jnp.arange(rep_block, dtype=jnp.int32)
+
+        def one(j):
+            h = hash_unit(fold_seed(seed, 3) + j.astype(jnp.uint32), idx)
+            h = jnp.where(support, h, jnp.inf)
+            i = jnp.argmin(h)
+            return i.astype(jnp.int32), a[i], h[i]
+
+        return jax.vmap(one)(reps)
+
+    n_chunks = -(-k // rep_block)
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * rep_block
+    ii, vv, hh = jax.lax.map(rep_chunk, starts)
+    return MinHashSketch(ii.reshape(-1)[:k], vv.reshape(-1)[:k], hh.reshape(-1)[:k])
+
+
+def minhash_estimate(sa: MinHashSketch, sb: MinHashSketch) -> jnp.ndarray:
+    k = sa.idx.shape[0]
+    match = sa.idx == sb.idx
+    # Union size from min-of-min hash values: E[min over union] = 1/(U+1).
+    w = jnp.minimum(sa.minv, sb.minv)
+    u_est = jnp.maximum(k / jnp.sum(w) - 1.0, 1.0)
+    s = jnp.sum(jnp.where(match, sa.val * sb.val, 0.0))
+    return u_est / k * s
+
+
+# ----------------------------------------------------------------------------
+# Weighted MinHash via consistent weighted sampling (Ioffe-style)
+# ----------------------------------------------------------------------------
+
+
+class WMHSketch(NamedTuple):
+    idx: jnp.ndarray   # int32[k]
+    val: jnp.ndarray   # f32[k]
+    wsum: jnp.ndarray  # scalar ||a||_2^2 (for union estimation)
+
+
+def wmh_sketch(a: jnp.ndarray, k: int, seed, *, rep_block: int = 8) -> WMHSketch:
+    """CWS samples with weights w_i = a_i^2 (the paper's WMH weighting)."""
+    a = jnp.asarray(a, jnp.float32)
+    n = a.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    w = a * a
+    logw = jnp.where(w > 0, jnp.log(jnp.where(w > 0, w, 1.0)), -jnp.inf)
+
+    def rep_chunk(j0):
+        reps = j0 + jnp.arange(rep_block, dtype=jnp.int32)
+
+        def one(j):
+            js = j.astype(jnp.uint32)
+            u = [hash_unit(fold_seed(seed, 4 + t) + js, idx) for t in range(5)]
+            r = -jnp.log(u[0]) - jnp.log(u[1])      # Gamma(2,1)
+            c = -jnp.log(u[2]) - jnp.log(u[3])      # Gamma(2,1)
+            beta = u[4]
+            t = jnp.floor(logw / r + beta)
+            logy = r * (t - beta)
+            log_aq = jnp.log(c) - (logy + r)        # rank = c / (y e^r)
+            log_aq = jnp.where(w > 0, log_aq, jnp.inf)
+            i = jnp.argmin(log_aq)
+            return i.astype(jnp.int32), a[i]
+
+        return jax.vmap(one)(reps)
+
+    n_chunks = -(-k // rep_block)
+    starts = jnp.arange(n_chunks, dtype=jnp.int32) * rep_block
+    ii, vv = jax.lax.map(rep_chunk, starts)
+    return WMHSketch(ii.reshape(-1)[:k], vv.reshape(-1)[:k], jnp.sum(w))
+
+
+def wmh_estimate(sa: WMHSketch, sb: WMHSketch) -> jnp.ndarray:
+    k = sa.idx.shape[0]
+    match = sa.idx == sb.idx
+    wa = sa.val * sa.val
+    wb = sb.val * sb.val
+    # P[coordinated CWS samples collide at i] = min(wa_i, wb_i) / U with
+    # U = sum_i max(wa_i, wb_i).  Estimate U from the collision rate J:
+    # U = (Wa + Wb) / (1 + J) since sum min + sum max = Wa + Wb.
+    j_hat = jnp.mean(match.astype(jnp.float32))
+    u_est = (sa.wsum + sb.wsum) / (1.0 + j_hat)
+    denom = jnp.where(match, jnp.minimum(wa, wb), 1.0)
+    s = jnp.sum(jnp.where(match, sa.val * sb.val / denom, 0.0))
+    return u_est / k * s

@@ -1,0 +1,50 @@
+"""Batched sketching and estimation (the O(nD) sketch / O(D^2 m) compare path).
+
+These wrappers vmap the single-vector primitives so a corpus of D vectors is
+sketched in one fused XLA program and all pairwise estimates come from one
+searchsorted-join kernel.  The Pallas serving path (kernels/intersect_estimate)
+replaces the join with a bucketized layout for TPU; this module is the
+reference implementation and the CPU path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .estimator import estimate_inner_product
+from .priority import priority_sketch
+from .sketches import Sketch
+from .threshold import threshold_sketch
+
+
+def sketch_corpus(A: jnp.ndarray, m: int, seed, *, method: str = "priority",
+                  variant: str = "l2") -> Sketch:
+    """Sketch every row of A: (D, n) -> Sketch with leading batch dim D.
+
+    All rows share the same seed — that is what makes the samples
+    *coordinated* across vectors (Section 2 of the paper).
+    """
+    if method == "priority":
+        fn = functools.partial(priority_sketch, m=m, seed=seed, variant=variant)
+    elif method == "threshold":
+        fn = functools.partial(threshold_sketch, m=m, seed=seed, variant=variant)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return jax.vmap(lambda row: fn(row))(A)
+
+
+def estimate_all_pairs(SA: Sketch, SB: Sketch, *, variant: str = "l2") -> jnp.ndarray:
+    """(D1, cap) x (D2, cap) sketches -> (D1, D2) inner product estimates."""
+    def one_vs_all(sa_idx, sa_val, sa_tau):
+        sa = Sketch(sa_idx, sa_val, sa_tau)
+        return jax.vmap(lambda bi, bv, bt: estimate_inner_product(
+            sa, Sketch(bi, bv, bt), variant=variant))(SB.idx, SB.val, SB.tau)
+    return jax.vmap(one_vs_all)(SA.idx, SA.val, SA.tau)
+
+
+def estimate_query(sq: Sketch, SB: Sketch, *, variant: str = "l2") -> jnp.ndarray:
+    """One query sketch vs a corpus: (D,) estimates."""
+    return jax.vmap(lambda bi, bv, bt: estimate_inner_product(
+        sq, Sketch(bi, bv, bt), variant=variant))(SB.idx, SB.val, SB.tau)

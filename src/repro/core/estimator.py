@@ -1,0 +1,66 @@
+"""Inner product estimation from coordinated sketches (Algorithm 2).
+
+``W = sum_{i in K_a ∩ K_b} a_i b_i / min(1, w(a_i) tau_a, w(b_i) tau_b)``
+
+Both sketch kinds (threshold and priority) publish ``tau`` such that the
+(conditional) inclusion probability of entry ``i`` is ``min(1, tau * w_i)``;
+the estimator is therefore shared.  Sketches store indices sorted ascending,
+so the intersection is a searchsorted join: O(m log m), no hash tables —
+TPU-friendly (see DESIGN.md §4; the Pallas serving path uses a bucketized
+layout instead).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .sketches import INVALID_IDX, Sketch, weight
+
+
+def _match(sa_idx: jnp.ndarray, sb_idx: jnp.ndarray):
+    """Join two sorted index arrays; returns (match_mask, positions_in_b)."""
+    cap_b = sb_idx.shape[-1]
+    pos = jnp.searchsorted(sb_idx, sa_idx)
+    pos = jnp.clip(pos, 0, cap_b - 1)
+    match = (jnp.take(sb_idx, pos) == sa_idx) & (sa_idx != INVALID_IDX)
+    return match, pos
+
+
+def estimate_inner_product(sa: Sketch, sb: Sketch, *, variant: str = "l2") -> jnp.ndarray:
+    """Unbiased estimate of <a, b> from two same-seed sketches."""
+    match, pos = _match(sa.idx, sb.idx)
+    bval = jnp.take(sb.val, pos)
+    wa = weight(sa.val, variant)
+    wb = weight(bval, variant)
+    # min(1, tau_a w_a, tau_b w_b); taus may be +inf (keep-everything case):
+    # inf * w>0 = inf -> min() = 1, correct. Padding lanes are masked below.
+    p = jnp.minimum(1.0, jnp.minimum(_safe_mul(sa.tau, wa), _safe_mul(sb.tau, wb)))
+    p = jnp.where(match, p, 1.0)  # avoid 0/0 on padding
+    terms = jnp.where(match, sa.val * bval / p, 0.0)
+    return jnp.sum(terms, axis=-1)
+
+
+def _safe_mul(tau: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """tau * w with inf * 0 -> inf (treat zero-weight lanes as 'certain')."""
+    return jnp.where(w > 0, tau * w, jnp.inf)
+
+
+def estimate_inner_product_dense(sa: Sketch, b: jnp.ndarray, *, variant: str = "l2") -> jnp.ndarray:
+    """One-sided estimate: sketch of ``a`` against a *fully known* vector b.
+
+    Inclusion probability only involves a's threshold; used when the query
+    vector is available in full (e.g. online gradient telemetry).
+    """
+    valid = sa.idx != INVALID_IDX
+    safe_idx = jnp.where(valid, sa.idx, 0)
+    bval = jnp.take(b, safe_idx)
+    wa = weight(sa.val, variant)
+    p = jnp.minimum(1.0, _safe_mul(sa.tau, wa))
+    p = jnp.where(valid, p, 1.0)
+    terms = jnp.where(valid, sa.val * bval / p, 0.0)
+    return jnp.sum(terms, axis=-1)
+
+
+def intersection_size(sa: Sketch, sb: Sketch) -> jnp.ndarray:
+    """Number of indices present in both sketches (diagnostic)."""
+    match, _ = _match(sa.idx, sb.idx)
+    return jnp.sum(match, axis=-1)

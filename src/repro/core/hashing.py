@@ -1,0 +1,72 @@
+"""Stateless integer hashing shared by every sketching method.
+
+The paper assumes a uniformly random hash ``h: {1..n} -> [0, 1]`` and notes
+(Section 2) that in practice a pseudorandom map onto ``{1/U, ..., 1}`` with
+``U = 2^32`` suffices.  We use a 32-bit finalizer (xorshift/multiply, the
+"lowbias32" family) and keep the top 24 bits so the uniform value is exactly
+representable in float32 — the same code path runs on the host (jnp) and
+inside Pallas kernels, which guarantees bit-identical *coordination* between
+independently computed sketches.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Golden-ratio constant for index dispersion (Fibonacci hashing).
+GOLDEN = np.uint32(0x9E3779B9)
+_M1 = np.uint32(0x21F0AAAD)
+_M2 = np.uint32(0x735A2D97)
+# 2^-24: scale for a 24-bit mantissa-exact uniform in (0, 1).
+UNIT = np.float32(1.0 / (1 << 24))
+
+
+def mix32(x: jnp.ndarray) -> jnp.ndarray:
+    """32-bit finalizer (low-bias avalanche). Input/output uint32."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * _M1
+    x = x ^ (x >> 15)
+    x = x * _M2
+    x = x ^ (x >> 15)
+    return x
+
+
+def fold_seed(seed, stream: int = 0) -> jnp.ndarray:
+    """Derive an independent uint32 stream seed from (seed, stream)."""
+    s = jnp.asarray(seed, dtype=jnp.uint32)
+    return mix32(s + jnp.uint32(stream) * GOLDEN + jnp.uint32(1))
+
+
+def hash_u32(seed, idx: jnp.ndarray) -> jnp.ndarray:
+    """Uniform uint32 hash of integer indices under ``seed``."""
+    i = idx.astype(jnp.uint32)
+    return mix32(i * GOLDEN + jnp.asarray(seed, jnp.uint32))
+
+
+def hash_unit(seed, idx: jnp.ndarray) -> jnp.ndarray:
+    """Uniform float32 in (0, 1): top 24 bits of the hash, offset by 1/2 ulp.
+
+    Strictly positive so ranks ``h/w`` are never exactly zero and the
+    threshold comparison ``h <= tau`` has no degenerate always-true lane.
+    """
+    h = hash_u32(seed, idx)
+    return ((h >> np.uint32(8)).astype(jnp.float32) + np.float32(0.5)) * UNIT
+
+
+def hash_sign(seed, idx: jnp.ndarray) -> jnp.ndarray:
+    """Rademacher +-1 (float32) from the hash's low bit."""
+    h = hash_u32(seed, idx)
+    return jnp.where((h & np.uint32(1)) == 0, np.float32(1.0), np.float32(-1.0))
+
+
+def hash_bucket(seed, idx: jnp.ndarray, n_buckets: int) -> jnp.ndarray:
+    """Uniform bucket id in [0, n_buckets) (int32).
+
+    Power-of-two bucket counts use a mask on the high-quality mixed bits;
+    general counts fall back to modulo (bias < B/2^32, negligible here).
+    """
+    h = hash_u32(seed, idx)
+    if n_buckets & (n_buckets - 1) == 0:
+        return (h & np.uint32(n_buckets - 1)).astype(jnp.int32)
+    return (h % np.uint32(n_buckets)).astype(jnp.int32)

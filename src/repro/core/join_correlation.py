@@ -1,0 +1,209 @@
+"""Join-correlation estimation via inner product sketching (Section 4 + App. A.4).
+
+The post-join Pearson correlation is a rational function of six inner
+products of the derived vectors (1_a, a, a^2) x (1_b, b, b^2) (Eq. 9).  The
+*optimized* sampling sketches (Algorithms 5/6) store one global sample set
+chosen with the max of the three families' probabilities, plus one tau per
+family, and recover all six estimates from the single sketch.
+
+Numerical note: a_i^4 overflows float32 for |a_i| > ~3e9, so weights/ranks
+are computed on ``a / max|a|`` and the per-family taus are stored in that
+normalized space together with ``scale``; probabilities are scale-invariant
+so the estimates are unchanged (DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import hash_unit
+from .sketches import INVALID_IDX, default_capacity, select_and_pack
+
+
+class CombinedSketch(NamedTuple):
+    idx: jnp.ndarray       # int32[cap], sorted ascending
+    val: jnp.ndarray       # f32[cap] original-scale values
+    tau_ones: jnp.ndarray  # f32 scalars, normalized-space inclusion scales
+    tau_val: jnp.ndarray
+    tau_sq: jnp.ndarray
+    scale: jnp.ndarray     # f32 max|a| used for normalization
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[-1]
+
+    def size(self) -> jnp.ndarray:
+        return jnp.sum(self.idx != INVALID_IDX, axis=-1)
+
+
+def _normalized_weights(a: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(a)), 1e-30)
+    an = a / scale
+    w_ones = (a != 0).astype(jnp.float32)
+    w_val = an * an
+    w_sq = w_val * w_val
+    return scale, w_ones, w_val, w_sq
+
+
+def combined_threshold_sketch(a: jnp.ndarray, m: int, seed, *,
+                              cap: int | None = None,
+                              bisect_iters: int = 50) -> CombinedSketch:
+    """Algorithm 5 with adaptive m' (bisection so E[size] == min(m, nnz))."""
+    a = jnp.asarray(a, jnp.float32)
+    n = a.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    scale, w1, wv, ws = _normalized_weights(a)
+    nnz = jnp.sum(w1)
+    W1 = jnp.maximum(nnz, 1e-30)
+    Wv = jnp.maximum(jnp.sum(wv), 1e-30)
+    Ws = jnp.maximum(jnp.sum(ws), 1e-30)
+    u1 = w1 / W1
+    uv = wv / Wv
+    us = ws / Ws
+    umax = jnp.maximum(u1, jnp.maximum(uv, us))
+    target = jnp.minimum(jnp.float32(m), nnz)
+
+    def expected_size(mp):
+        return jnp.sum(jnp.minimum(1.0, mp * umax))
+
+    lo = jnp.float32(0.0)
+    hi = jnp.maximum(W1, 1.0)  # mp = nnz -> T_i >= 1 everywhere -> size = nnz
+    def body(_, lohi):
+        lo, hi = lohi
+        mid = 0.5 * (lo + hi)
+        too_small = expected_size(mid) < target
+        return jnp.where(too_small, mid, lo), jnp.where(too_small, hi, mid)
+    lo, hi = jax.lax.fori_loop(0, bisect_iters, body, (lo, hi))
+    mp = 0.5 * (lo + hi)
+
+    tau1 = mp / W1
+    tauv = mp / Wv
+    taus = mp / Ws
+    h = hash_unit(seed, idx)
+    T = jnp.minimum(1.0, mp * umax)
+    include = (w1 > 0) & (h <= T)
+    scores = jnp.where(w1 > 0, h / jnp.maximum(umax, 1e-30), jnp.inf)
+    if cap is None:
+        cap = default_capacity(m)
+    kidx, kval = select_and_pack(scores, include, idx, a, cap)
+    return CombinedSketch(kidx, kval, jnp.float32(tau1), jnp.float32(tauv),
+                          jnp.float32(taus), jnp.float32(scale))
+
+
+def combined_priority_sketch(a: jnp.ndarray, m: int, seed) -> CombinedSketch:
+    """Algorithm 6 with the exact-m' closed form.
+
+    m' = largest value such that the union of the three families' top-m'
+    rank sets has size <= m.  With pos_f(i) = position of i in family f's
+    rank order and q_i = min_f pos_f(i), that is m' = q_sorted[m].
+    """
+    a = jnp.asarray(a, jnp.float32)
+    n = a.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    scale, w1, wv, ws = _normalized_weights(a)
+    nnz = jnp.sum(w1 > 0)
+    h = hash_unit(seed, idx)
+
+    def ranks_of(w):
+        return jnp.where(w > 0, h / jnp.maximum(w, 1e-30), jnp.inf)
+
+    r1, rv, rs = ranks_of(w1), ranks_of(wv), ranks_of(ws)
+
+    def positions(r):
+        order = jnp.argsort(r)
+        pos = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+        return pos
+
+    q = jnp.minimum(positions(r1), jnp.minimum(positions(rv), positions(rs)))
+    q_sorted = jnp.sort(q)
+    # m' (guard m < n; when nnz <= m everything is kept and taus are inf).
+    mp = q_sorted[jnp.minimum(m, n - 1)]
+
+    def fam_tau(r):
+        r_sorted = jnp.sort(r)
+        return r_sorted[jnp.clip(mp, 0, n - 1)]
+
+    keep_all = nnz <= m
+    tau1 = jnp.where(keep_all, jnp.inf, fam_tau(r1))
+    tauv = jnp.where(keep_all, jnp.inf, fam_tau(rv))
+    taus = jnp.where(keep_all, jnp.inf, fam_tau(rs))
+    include = (w1 > 0) & ((r1 < tau1) | (rv < tauv) | (rs < taus))
+    include = jnp.where(keep_all, w1 > 0, include)
+    scores = jnp.minimum(r1, jnp.minimum(rv, rs))
+    kidx, kval = select_and_pack(scores, include, idx, a, cap=m)
+    return CombinedSketch(kidx, kval, jnp.float32(tau1), jnp.float32(tauv),
+                          jnp.float32(taus), jnp.float32(scale))
+
+
+# ----------------------------------------------------------------------------
+# Estimation
+# ----------------------------------------------------------------------------
+
+
+def _inclusion_scale(s: CombinedSketch, val: jnp.ndarray) -> jnp.ndarray:
+    """max(tau_ones, w_v * tau_val, w_sq * tau_sq) in normalized space."""
+    vn = val / s.scale
+    wv = vn * vn
+    wsq = wv * wv
+    def safe(tau, w):
+        return jnp.where(w > 0, tau * w, jnp.where(jnp.isinf(tau), jnp.inf, 0.0))
+    t = jnp.maximum(safe(s.tau_ones, jnp.ones_like(wv)),
+                    jnp.maximum(safe(s.tau_val, wv), safe(s.tau_sq, wsq)))
+    return t
+
+
+def combined_estimates(sa: CombinedSketch, sb: CombinedSketch) -> dict:
+    """All six inner products of Eq. (9) from one pair of combined sketches."""
+    cap_b = sb.idx.shape[-1]
+    pos = jnp.clip(jnp.searchsorted(sb.idx, sa.idx), 0, cap_b - 1)
+    match = (jnp.take(sb.idx, pos) == sa.idx) & (sa.idx != INVALID_IDX)
+    av = sa.val
+    bv = jnp.take(sb.val, pos)
+    p = jnp.minimum(1.0, jnp.minimum(_inclusion_scale(sa, av), _inclusion_scale(sb, bv)))
+    p = jnp.where(match, p, 1.0)
+
+    def est(fa, gb):
+        return jnp.sum(jnp.where(match, fa * gb / p, 0.0))
+
+    ones_a = jnp.where(match, 1.0, 0.0)
+    ones_b = ones_a
+    return {
+        "n": est(ones_a, ones_b),
+        "sum_x": est(av, ones_b),
+        "sum_y": est(ones_a, bv),
+        "xy": est(av, bv),
+        "sum_x2": est(av * av, ones_b),
+        "sum_y2": est(ones_a, bv * bv),
+    }
+
+
+def correlation_from_estimates(e: dict, eps: float = 1e-12) -> jnp.ndarray:
+    """Eq. (8)/(9): Pearson correlation from the six estimates, clipped."""
+    num = e["n"] * e["xy"] - e["sum_x"] * e["sum_y"]
+    vx = jnp.maximum(e["n"] * e["sum_x2"] - e["sum_x"] ** 2, eps)
+    vy = jnp.maximum(e["n"] * e["sum_y2"] - e["sum_y"] ** 2, eps)
+    return jnp.clip(num / jnp.sqrt(vx * vy), -1.0, 1.0)
+
+
+def estimate_join_correlation(sa: CombinedSketch, sb: CombinedSketch) -> jnp.ndarray:
+    return correlation_from_estimates(combined_estimates(sa, sb))
+
+
+def empirical_correlation(sa, sb) -> jnp.ndarray:
+    """Correlation of the *matched sample values* (the [52]-style estimator
+    used by the uniform-sampling baselines in Section 5.1.3)."""
+    cap_b = sb.idx.shape[-1]
+    pos = jnp.clip(jnp.searchsorted(sb.idx, sa.idx), 0, cap_b - 1)
+    match = (jnp.take(sb.idx, pos) == sa.idx) & (sa.idx != INVALID_IDX)
+    x = sa.val
+    y = jnp.take(sb.val, pos)
+    w = match.astype(jnp.float32)
+    n = jnp.maximum(jnp.sum(w), 1.0)
+    mx = jnp.sum(w * x) / n
+    my = jnp.sum(w * y) / n
+    cov = jnp.sum(w * (x - mx) * (y - my))
+    vx = jnp.maximum(jnp.sum(w * (x - mx) ** 2), 1e-12)
+    vy = jnp.maximum(jnp.sum(w * (y - my) ** 2), 1e-12)
+    return jnp.clip(cov / jnp.sqrt(vx * vy), -1.0, 1.0)

@@ -1,0 +1,37 @@
+"""Priority Sampling (Algorithm 3).
+
+Rank ``R_i = h(i) / w_i`` for nonzero entries; keep the ``m`` smallest ranks
+and publish ``tau`` = the (m+1)-st smallest rank (infinity when the vector
+has at most ``m`` nonzeros, exactly as in the paper).  The estimator
+(Algorithm 2) is shared with threshold sampling: the conditional inclusion
+probability is ``min(1, tau * w_i)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import hash_unit
+from .sketches import Sketch, select_and_pack, weight
+
+
+def priority_sketch(a: jnp.ndarray, m: int, seed, *, variant: str = "l2",
+                    indices: jnp.ndarray | None = None) -> Sketch:
+    """Fixed-size-m sketch of a dense vector ``a`` (or sparse (indices, a))."""
+    a = jnp.asarray(a)
+    n = a.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32) if indices is None else indices.astype(jnp.int32)
+    w = weight(a.astype(jnp.float32), variant)
+    h = hash_unit(seed, idx)
+    ranks = jnp.where(w > 0, h / jnp.where(w > 0, w, 1.0), jnp.inf)
+    # (m+1)-st smallest rank -> tau. Pad so top_k(m+1) is always legal.
+    k = m + 1
+    if n < k:
+        ranks_p = jnp.concatenate([ranks, jnp.full((k - n,), jnp.inf, ranks.dtype)])
+    else:
+        ranks_p = ranks
+    smallest = -jax.lax.top_k(-ranks_p, k)[0]  # ascending m+1 smallest ranks
+    tau = smallest[m]
+    include = ranks < tau
+    kidx, kval = select_and_pack(ranks, include, idx, a.astype(jnp.float32), cap=m)
+    return Sketch(idx=kidx, val=kval, tau=jnp.asarray(tau, jnp.float32))

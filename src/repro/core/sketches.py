@@ -1,0 +1,119 @@
+"""Sketch containers and static-shape selection utilities.
+
+TPU/XLA require static shapes, so a sketch is a fixed-capacity pytree:
+
+- ``idx``: int32[cap], **sorted ascending**, padded with ``INVALID_IDX``;
+- ``val``: float32[cap], 0 at padding;
+- ``tau``: scalar inclusion scale.  For threshold sampling ``tau = m'/W``
+  (W = total weight), so entry ``i`` was kept iff ``h(i) <= tau * w_i``;
+  for priority sampling ``tau`` is the (m+1)-st smallest rank.  In both
+  cases the marginal inclusion probability is ``min(1, tau * w_i)``, which
+  is all the estimator needs.
+
+Threshold sampling has random size; we allocate ``cap = m + 4 ceil(sqrt(m))``
+(Lemma 4: overflow probability < ~1e-4).  In the overflow event we keep the
+entries with the smallest ``h(i)/w_i`` — the same ordering priority sampling
+uses — which is deterministic given the hash and introduces bias only in
+that vanishing-probability event (documented in DESIGN.md §10).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+INVALID_IDX = np.int32(np.iinfo(np.int32).max)
+
+VARIANTS = ("l2", "l1", "uniform")
+
+
+class Sketch(NamedTuple):
+    """Single-vector inner-product sketch (Algorithms 1 and 3)."""
+
+    idx: jnp.ndarray   # int32[cap], sorted ascending, INVALID_IDX padding
+    val: jnp.ndarray   # float32[cap]
+    tau: jnp.ndarray   # f32 scalar inclusion scale
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[-1]
+
+    def size(self) -> jnp.ndarray:
+        """Number of valid (non-padding) entries."""
+        return jnp.sum(self.idx != INVALID_IDX, axis=-1)
+
+
+class CombinedSketch(NamedTuple):
+    """Join-correlation sketch for (1_a, a, a^2) (Algorithms 5 and 6)."""
+
+    idx: jnp.ndarray       # int32[cap]
+    val: jnp.ndarray       # float32[cap]
+    tau_ones: jnp.ndarray  # scale for 1_a
+    tau_val: jnp.ndarray   # scale for a
+    tau_sq: jnp.ndarray    # scale for a^2
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[-1]
+
+    def size(self) -> jnp.ndarray:
+        return jnp.sum(self.idx != INVALID_IDX, axis=-1)
+
+
+def weight(val: jnp.ndarray, variant: str) -> jnp.ndarray:
+    """Sampling weight w_i for a value: l2 -> a_i^2, l1 -> |a_i|, uniform -> 1_{a_i != 0}."""
+    if variant == "l2":
+        return val * val
+    if variant == "l1":
+        return jnp.abs(val)
+    if variant == "uniform":
+        return (val != 0).astype(val.dtype)
+    raise ValueError(f"unknown variant {variant!r}; expected one of {VARIANTS}")
+
+
+def default_capacity(m: int) -> int:
+    """Fixed capacity for threshold sampling: m + 4*ceil(sqrt(m))."""
+    return int(m + 4 * math.ceil(math.sqrt(max(m, 1))))
+
+
+def select_and_pack(scores: jnp.ndarray, include: jnp.ndarray, idx: jnp.ndarray,
+                    val: jnp.ndarray, cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Keep included entries (lowest ``scores`` first) up to ``cap``; sort by idx.
+
+    Returns (idx[cap] sorted ascending w/ INVALID padding, val[cap] w/ 0 padding).
+    """
+    n = scores.shape[0]
+    key = jnp.where(include, scores, jnp.inf)
+    if cap >= n:
+        pad = cap - n
+        kidx = jnp.concatenate([idx, jnp.full((pad,), INVALID_IDX, jnp.int32)])
+        kval = jnp.concatenate([val.astype(jnp.float32), jnp.zeros((pad,), jnp.float32)])
+        kinc = jnp.concatenate([include, jnp.zeros((pad,), bool)])
+    else:
+        # top_k over -key == smallest `cap` scores among included entries.
+        _, pos = jax.lax.top_k(-key, cap)
+        kidx = idx[pos]
+        kval = val[pos].astype(jnp.float32)
+        kinc = include[pos]
+    kidx = jnp.where(kinc, kidx, INVALID_IDX).astype(jnp.int32)
+    kval = jnp.where(kinc, kval, 0.0)
+    order = jnp.argsort(kidx)
+    return kidx[order], kval[order]
+
+
+def densify(sketch: Sketch, n: int) -> jnp.ndarray:
+    """Scatter a sketch back to a dense length-n *unbiased* vector estimate.
+
+    Entry i gets val_i / p_i where p_i = min(1, tau * w_i) under the l2
+    variant.  Used by the gradient-compression path (DESIGN.md §3.1).
+    """
+    w = weight(sketch.val, "l2")
+    p = jnp.minimum(1.0, sketch.tau * w)
+    valid = sketch.idx != INVALID_IDX
+    scale = jnp.where(valid & (p > 0), sketch.val / jnp.where(p > 0, p, 1.0), 0.0)
+    out = jnp.zeros((n,), jnp.float32)
+    safe_idx = jnp.where(valid, sketch.idx, 0)
+    return out.at[safe_idx].add(jnp.where(valid, scale, 0.0))

@@ -1,0 +1,84 @@
+"""Threshold Sampling (Algorithm 1) with adaptive threshold selection (Algorithm 4).
+
+Entry ``i`` is kept iff ``h(i) <= tau * w_i`` where ``w_i`` is the sampling
+weight (``a_i^2`` for the paper's method, ``|a_i|`` for End-Biased [33],
+``1`` for the uniform variant) and ``tau = m'/W`` with ``W = sum_i w_i``.
+
+The paper's Algorithm 4 finds ``m' >= m`` such that the *expected* sketch
+size ``sum_i min(1, m' w_i / W)`` equals ``m`` via an iterative loop; we use
+an equivalent closed form (single descending sort + prefix sums) that is
+jit-friendly: if exactly ``k`` entries are capped at probability 1 then
+``m'(k) = (m - k) * W / tail_k`` and the valid ``k`` is unique.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import hash_unit
+from .sketches import Sketch, default_capacity, select_and_pack, weight
+
+
+def adaptive_tau(w: jnp.ndarray, m: int) -> jnp.ndarray:
+    """Inclusion scale ``tau`` with E[sketch size] == min(m, nnz).
+
+    ``w``: nonnegative sampling weights (0 for absent entries).
+    Returns ``tau`` such that ``sum_i min(1, tau * w_i) == min(m, nnz)``.
+    If ``nnz <= m`` every entry is kept (tau large enough to cap them all).
+    """
+    n = w.shape[0]
+    nnz = jnp.sum(w > 0)
+    W = jnp.sum(w)
+    w_sorted = -jnp.sort(-w)  # descending
+    # Suffix sums (computed directly, NOT as W - prefix, to avoid float32
+    # cancellation when the tail mass is tiny relative to W).
+    suffix = jnp.cumsum(w_sorted[::-1])[::-1]
+    # Candidate: exactly k entries capped at probability 1 (k = 0..n-1).
+    # E[size] = k + tau * suffix[k] = m  =>  tau_k = (m - k) / suffix[k].
+    ks_i = jnp.arange(n, dtype=jnp.int32)
+    ks = ks_i.astype(w.dtype)
+    m_f = jnp.asarray(m, w.dtype)
+    tau_k = jnp.where(suffix > 0, (m_f - ks) / jnp.where(suffix > 0, suffix, 1.0), jnp.inf)
+    # Validity: entry k (0-based, the (k+1)-st largest) must NOT be capped,
+    # and entry k-1 must be capped (if k > 0); also need m - k > 0.
+    not_capped_next = tau_k * w_sorted < 1.0
+    capped_prev = jnp.where(
+        ks_i > 0, tau_k * w_sorted[jnp.maximum(ks_i - 1, 0)] >= 1.0 - 1e-6, True)
+    valid = not_capped_next & capped_prev & (m_f - ks > 0)
+    k_star = jnp.argmax(valid)  # first (and unique) valid k
+    tau = tau_k[k_star]
+    any_valid = jnp.any(valid)
+    # Fallbacks: nnz <= m -> keep everything (tau * w_i >= 1 for all nonzero
+    # w_i, i.e. tau = 1/min nonzero weight); numerical no-valid-k -> the safe
+    # non-adaptive scale m/W.
+    w_min_nz = jnp.min(jnp.where(w > 0, w, jnp.inf))
+    tau_all = jnp.where(jnp.isfinite(w_min_nz), 1.0 / w_min_nz, jnp.inf)
+    tau = jnp.where(~any_valid, jnp.where(W > 0, m_f / W, 0.0), tau)
+    return jnp.where(nnz <= m, tau_all, tau)
+
+
+def threshold_sketch(a: jnp.ndarray, m: int, seed, *, variant: str = "l2",
+                     cap: int | None = None, adaptive: bool = True,
+                     indices: jnp.ndarray | None = None) -> Sketch:
+    """Algorithm 1 (+ Algorithm 4 when ``adaptive=True``).
+
+    ``a``: dense vector (n,).  For pre-sparsified inputs pass the nonzero
+    values in ``a`` and their original coordinates in ``indices``.
+    """
+    a = jnp.asarray(a)
+    n = a.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32) if indices is None else indices.astype(jnp.int32)
+    w = weight(a.astype(jnp.float32), variant)
+    if adaptive:
+        tau = adaptive_tau(w, m)
+    else:
+        W = jnp.sum(w)
+        tau = jnp.where(W > 0, m / W, 0.0)
+    h = hash_unit(seed, idx)
+    include = (w > 0) & (h <= tau * w)
+    # Overflow priority: smallest h/w first == priority-sampling rank order.
+    scores = jnp.where(w > 0, h / jnp.where(w > 0, w, 1.0), jnp.inf)
+    if cap is None:
+        cap = default_capacity(m)
+    kidx, kval = select_and_pack(scores, include, idx, a.astype(jnp.float32), cap)
+    return Sketch(idx=kidx, val=kval, tau=jnp.asarray(tau, jnp.float32))

@@ -1,0 +1,56 @@
+"""Theoretical accuracy guarantees (Theorems 1 and 3, Corollary 2, Lemma 4).
+
+Unlike WMH, the paper's methods come with closed-form variance bounds, which
+makes confidence intervals possible.  These helpers compute the bounds given
+full vectors (for tests/benchmarks) and Chebyshev intervals given only the
+sketch parameter m (for production use of the estimates).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def intersection_norms(a: jnp.ndarray, b: jnp.ndarray):
+    """(||a_I||^2, ||b_I||^2, ||a||^2, ||b||^2) with I = supp(a) ∩ supp(b)."""
+    mask = (a != 0) & (b != 0)
+    a2 = jnp.sum(a * a)
+    b2 = jnp.sum(b * b)
+    aI2 = jnp.sum(jnp.where(mask, a * a, 0.0))
+    bI2 = jnp.sum(jnp.where(mask, b * b, 0.0))
+    return aI2, bI2, a2, b2
+
+
+def variance_bound(a: jnp.ndarray, b: jnp.ndarray, m: int, *, method: str = "threshold") -> jnp.ndarray:
+    """Var[W] <= (2/m) max(||a_I||^2 ||b||^2, ||a||^2 ||b_I||^2)   (Thm 1)
+       Var[W] <= (2/(m-1)) max(...)                                  (Thm 3)
+    """
+    aI2, bI2, a2, b2 = intersection_norms(a, b)
+    lead = 2.0 / m if method == "threshold" else 2.0 / max(m - 1, 1)
+    return lead * jnp.maximum(aI2 * b2, a2 * bI2)
+
+
+def error_guarantee(a: jnp.ndarray, b: jnp.ndarray, m: int, delta: float = 0.1,
+                    *, method: str = "threshold") -> jnp.ndarray:
+    """Corollary 2: with prob 1-delta, |W - <a,b>| <= sqrt(Var/delta)."""
+    return jnp.sqrt(variance_bound(a, b, m, method=method) / delta)
+
+
+def linear_sketch_error(a: jnp.ndarray, b: jnp.ndarray, m: int, delta: float = 0.1) -> jnp.ndarray:
+    """Eq. (1)-style comparison scale for linear sketches: eps ||a|| ||b||,
+    eps = sqrt(2/(delta m)) (matching constants used for the table in §1)."""
+    a2 = jnp.sum(a * a)
+    b2 = jnp.sum(b * b)
+    return jnp.sqrt(2.0 / (delta * m) * a2 * b2)
+
+
+def sketch_size_high_prob(m: int, delta: float = 0.01) -> float:
+    """Lemma 4: P[|K_a| > m + sqrt(m/delta)] <= delta (threshold sampling)."""
+    return m + (m / delta) ** 0.5
+
+
+def chebyshev_interval(estimate, a_norm2, b_norm2, m: int, delta: float = 0.05,
+                       *, method: str = "priority"):
+    """Conservative CI using ||a_I|| <= ||a||: half-width sqrt(2 a2 b2/(m' delta))."""
+    lead = 2.0 / m if method == "threshold" else 2.0 / max(m - 1, 1)
+    half = jnp.sqrt(lead * a_norm2 * b_norm2 / delta)
+    return estimate - half, estimate + half

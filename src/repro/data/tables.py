@@ -1,0 +1,82 @@
+"""Table store for the paper's data-discovery workloads.
+
+Columns are (keys, values) pairs; keys hash into a shared index universe so
+any two columns become sparse vectors over the same coordinates — exactly
+the reduction of Section 4 (Figure 2).  Repeated keys pre-aggregate by sum,
+matching the paper's World Bank preprocessing (Section 5.3.1).
+
+``SketchedTableStore`` sketches every column once (the paper's O(nD)
+preprocessing) and answers inner-product / join-size / join-correlation
+queries from sketches alone.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (CombinedSketch, Sketch, combined_priority_sketch,
+                        estimate_inner_product, estimate_join_correlation,
+                        priority_sketch)
+
+
+def _hash_keys(keys: np.ndarray, universe: int) -> np.ndarray:
+    """64-bit splitmix-style hash of integer keys -> [0, universe)."""
+    x = keys.astype(np.uint64)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> np.uint64(31))
+    return (x % np.uint64(universe)).astype(np.int64)
+
+
+def column_to_vector(keys: np.ndarray, values: np.ndarray, universe: int,
+                     *, aggregate: str = "sum") -> np.ndarray:
+    """(keys, values) -> dense sparse vector over the hashed key universe."""
+    idx = _hash_keys(np.asarray(keys), universe)
+    v = np.zeros(universe, np.float32)
+    if aggregate == "sum":
+        np.add.at(v, idx, np.asarray(values, np.float32))
+    elif aggregate == "count":
+        np.add.at(v, idx, 1.0)
+    else:
+        raise ValueError(aggregate)
+    return v
+
+
+class SketchedTableStore:
+    def __init__(self, universe: int = 1 << 20, m: int = 400, seed: int = 7):
+        self.universe = universe
+        self.m = m
+        self.seed = seed
+        self._ip: dict[str, Sketch] = {}
+        self._corr: dict[str, CombinedSketch] = {}
+        self._freq: dict[str, Sketch] = {}
+
+    # -- ingestion ---------------------------------------------------------
+    def add_column(self, name: str, keys, values) -> None:
+        vec = column_to_vector(keys, values, self.universe)
+        self._ip[name] = priority_sketch(jnp.asarray(vec), self.m, self.seed)
+        self._corr[name] = combined_priority_sketch(jnp.asarray(vec), self.m,
+                                                    self.seed)
+        freq = column_to_vector(keys, values, self.universe, aggregate="count")
+        self._freq[name] = priority_sketch(jnp.asarray(freq), self.m, self.seed)
+
+    def columns(self) -> list:
+        return sorted(self._ip)
+
+    # -- queries (sketch-only) ----------------------------------------------
+    def inner_product(self, a: str, b: str) -> float:
+        return float(estimate_inner_product(self._ip[a], self._ip[b]))
+
+    def join_size(self, a: str, b: str) -> float:
+        """<freq_a, freq_b> — the standard reduction [23]."""
+        return float(estimate_inner_product(self._freq[a], self._freq[b]))
+
+    def join_correlation(self, a: str, b: str) -> float:
+        return float(estimate_join_correlation(self._corr[a], self._corr[b]))
+
+    def top_correlated(self, query: str, k: int = 5) -> list:
+        scores = [(other, self.join_correlation(query, other))
+                  for other in self.columns() if other != query]
+        return sorted(scores, key=lambda t: -abs(t[1]))[:k]

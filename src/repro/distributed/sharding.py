@@ -1,0 +1,224 @@
+"""Logical-axis -> mesh-axis sharding rules (DP / TP / EP / FSDP + pod).
+
+Parameters carry *logical* axis names in their ParamSpec (models/transformer);
+this module maps them onto the production mesh:
+
+- TP  : vocab / heads / kv_heads / ffn / experts / inner / ssm_heads / rnn
+        -> "model"
+- EP  : the "experts" axis is TP's model axis (128 experts / 16 = 8 per chip)
+- FSDP: for cfg.fsdp archs the "embed" (d_model) axis additionally shards
+        over "data" (ZeRO-3 style; optimizer state inherits)
+- DP  : batch dims shard over ("pod", "data") when divisible
+
+Axes are only applied when the dimension is divisible by the mesh axis size
+(GSPMD padding is legal but we prefer clean layouts; non-divisible cases
+fall back to replication on that dim and are noted in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import ParamSpec, param_specs
+
+TP_AXES = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "inner": "model",
+    "ssm_heads": "model",
+    "rnn": "model",
+}
+
+
+def _mesh_axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+def pspec_for(spec: ParamSpec, mesh: Mesh, *, fsdp: bool,
+              strategy: str = "tp") -> P:
+    entries = []
+    for dim, axis_name in zip(spec.shape, spec.axes):
+        mesh_axis = None
+        if strategy == "fsdp":
+            # pure data parallelism: shard the d_model dim of every weight
+            # over all non-pod axes (ZeRO-3); no tensor parallelism.
+            if axis_name == "embed":
+                cand = tuple(a for a in ("data", "model") if a in mesh.shape)
+                mesh_axis = cand if cand else None
+        else:
+            if axis_name in TP_AXES and "model" in mesh.shape:
+                mesh_axis = TP_AXES[axis_name]
+            elif axis_name == "embed" and fsdp and "data" in mesh.shape:
+                mesh_axis = "data"
+        if mesh_axis is not None and dim % _mesh_axis_size(mesh, mesh_axis) != 0:
+            mesh_axis = None  # replicate non-divisible dims
+        entries.append(mesh_axis)
+    return P(*entries)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh) -> Any:
+    specs = param_specs(cfg)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, pspec_for(s, mesh, fsdp=cfg.fsdp,
+                                                strategy=cfg.strategy)),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh) -> Any:
+    specs = param_specs(cfg)
+    return jax.tree.map(lambda s: pspec_for(s, mesh, fsdp=cfg.fsdp,
+                                            strategy=cfg.strategy), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes
+
+
+def batch_pspec(mesh: Mesh, global_batch: int, extra_dims: int = 1,
+                axes: tuple | None = None) -> P:
+    """PartitionSpec for a (batch, ...) input.  ``axes`` overrides the DP
+    axes (the fsdp strategy also shards batch over the model axis)."""
+    axes = dp_axes(mesh) if axes is None else tuple(
+        a for a in axes if a in mesh.shape)
+    if axes and global_batch % _mesh_axis_size(mesh, axes) == 0:
+        return P(axes, *([None] * extra_dims))
+    # try pods only / data only before giving up
+    for cand in (("data",), ("pod",)):
+        cand = tuple(a for a in cand if a in mesh.shape)
+        if cand and global_batch % _mesh_axis_size(mesh, cand) == 0:
+            return P(cand, *([None] * extra_dims))
+    return P(*([None] * (extra_dims + 1)))
+
+
+def batch_shardings(mesh: Mesh, batch_specs: Any,
+                    axes: tuple | None = None) -> Any:
+    def for_leaf(sds):
+        return NamedSharding(mesh, batch_pspec(mesh, sds.shape[0],
+                                               len(sds.shape) - 1, axes))
+    return jax.tree.map(for_leaf, batch_specs)
+
+
+# ----------------------------------------------------------------------------
+# Decode-state shardings (mirror models/model.py cache layouts)
+# ----------------------------------------------------------------------------
+
+
+def _cache_pspec(cfg: ModelConfig, kind: str, mesh: Mesh, batch: int,
+                 stacked: bool) -> Any:
+    """PartitionSpec pytree matching one block's cache."""
+    lead = (None,) if stacked else ()  # group/layer dim replicated
+    bp = batch_pspec(mesh, batch, 0)
+    b = bp[0] if len(bp) > 0 else None
+    model = "model" if "model" in mesh.shape else None
+
+    def ok(dim, axis):
+        return axis if axis and dim % _mesh_axis_size(mesh, axis) == 0 else None
+
+    if kind in ("attn", "attn_local"):
+        if cfg.serve_2d:
+            # replicate batch; shard cache seq over every mesh axis
+            axes = tuple(a for a in ("data", "model") if a in mesh.shape)
+            return {"k": P(*lead, None, axes, None, None),
+                    "v": P(*lead, None, axes, None, None),
+                    "pos": P(*lead, None, axes)}
+        kv = ok(cfg.n_kv_heads, model)
+        # GQA archs with fewer kv heads than the model axis: shard the KV
+        # cache along the *sequence* dim instead (sequence-sharded KV decode;
+        # GSPMD reassembles the softmax with a reduce). The cache length is
+        # data-dependent, so delegate the divisibility check to GSPMD by
+        # sharding unconditionally on seq when kv is unavailable.
+        seq = model if kv is None else None
+        return {"k": P(*lead, b, seq, kv, None),
+                "v": P(*lead, b, seq, kv, None),
+                "pos": P(*lead, b, seq)}
+    if kind == "ssd":
+        return {"conv_x": P(*lead, b, None, ok(cfg.d_inner, model)),
+                "conv_b": P(*lead, b, None, None),
+                "conv_c": P(*lead, b, None, None),
+                "ssm": P(*lead, b, ok(cfg.ssm_heads, model), None, None)}
+    if kind == "rglru":
+        return {"conv": P(*lead, b, None, ok(cfg.rnn_width, model)),
+                "h": P(*lead, b, ok(cfg.rnn_width, model))}
+    raise ValueError(kind)
+
+
+def decode_state_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int) -> Any:
+    model = "model" if "model" in mesh.shape else None
+    bp = batch_pspec(mesh, batch, 0)
+    b = bp[0] if len(bp) > 0 else None
+
+    def ok(dim, axis):
+        return axis if axis and dim % _mesh_axis_size(mesh, axis) == 0 else None
+
+    state: dict = {
+        "pos": P(),
+        "groups": {f"p{i}": _cache_pspec(cfg, kind, mesh, batch, True)
+                   for i, kind in enumerate(cfg.layer_pattern)},
+    }
+    if cfg.n_tail_layers:
+        state["tail"] = {
+            f"t{j}": _cache_pspec(cfg, cfg.layer_pattern[j], mesh, batch, False)
+            for j in range(cfg.n_tail_layers)}
+    if cfg.is_encdec:
+        kv = ok(cfg.n_kv_heads, model)
+        seq = model if kv is None else None
+        cross_g = {f"p{i}": {"k": P(None, b, seq, kv, None),
+                             "v": P(None, b, seq, kv, None)}
+                   for i in range(len(cfg.layer_pattern))}
+        state["cross"] = {"groups": cross_g}
+        if cfg.n_tail_layers:
+            state["cross"]["tail"] = {
+                f"t{j}": {"k": P(b, seq, kv, None), "v": P(b, seq, kv, None)}
+                for j in range(cfg.n_tail_layers)}
+    return state
+
+
+def decode_state_shardings(cfg: ModelConfig, mesh: Mesh, batch: int,
+                           state_specs: Any) -> Any:
+    pspecs = decode_state_pspecs(cfg, mesh, batch)
+    return jax.tree.map(lambda sp, _: NamedSharding(mesh, sp), pspecs,
+                        state_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def constrain_batch_sharded(x, n_lead: int = 1):
+    """with_sharding_constraint(x, P(dp_axes, None...)) if an abstract mesh
+    is active (set by the dry-run via jax.set_mesh); no-op otherwise.
+
+    Pins the activation layout at module boundaries so GSPMD cannot defer
+    TP all-reduces past token-expanding ops (§Perf hillclimb B3: deferring
+    the psum past the MoE gather inflates it by top_k)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return x
+    if mesh is None or not getattr(mesh, "shape", None):
+        return x
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    if not axes:
+        return x
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x

@@ -1,0 +1,26 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel ships three files: ``<name>.py`` (pl.pallas_call + BlockSpec
+VMEM tiling), ``ops.py`` (jit'd public wrapper, interpret=True off-TPU) and
+``ref.py`` (pure-jnp oracle the tests assert against):
+
+- ``hash_rank``          fused hash + sampling rank (the O(N) loop of Algs 1/3)
+- ``countsketch``        CountSketch as one-hot MXU matmuls (scatter-free)
+- ``jl_rademacher``      matrix-free JL projection (Pi regenerated in VMEM)
+- ``intersect_estimate`` bucketized batched estimator (the O(D^2 m) serving path)
+"""
+from .hash_rank import hash_rank, hash_rank_ref
+from .countsketch import countsketch as countsketch_kernel
+from .countsketch import countsketch_ref
+from .jl_rademacher import jl_project, jl_ref
+from .intersect_estimate import (BucketizedSketch, bucketize,
+                                 bucketize_corpus, intersect_estimate_ref,
+                                 query_corpus)
+
+__all__ = [
+    "hash_rank", "hash_rank_ref",
+    "countsketch_kernel", "countsketch_ref",
+    "jl_project", "jl_ref",
+    "BucketizedSketch", "bucketize", "bucketize_corpus",
+    "intersect_estimate_ref", "query_corpus",
+]

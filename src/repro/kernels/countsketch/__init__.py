@@ -1,0 +1,4 @@
+from .ops import countsketch
+from .ref import countsketch_ref
+
+__all__ = ["countsketch", "countsketch_ref"]

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the CountSketch kernel (must match repro.core.baselines
+hash streams so kernel- and host-built sketches interoperate)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hashing import hash_bucket, hash_sign
+
+
+def countsketch_ref(values: jnp.ndarray, seed_bucket, seed_sign, m: int) -> jnp.ndarray:
+    n = values.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    bucket = hash_bucket(seed_bucket, idx, m)
+    sign = hash_sign(seed_sign, idx)
+    return jnp.zeros((m,), jnp.float32).at[bucket].add(sign * values.astype(jnp.float32))

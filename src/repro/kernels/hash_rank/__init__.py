@@ -1,0 +1,4 @@
+from .ops import hash_rank
+from .ref import hash_rank_ref
+
+__all__ = ["hash_rank", "hash_rank_ref"]

@@ -1,0 +1,31 @@
+"""Jit'd public wrapper for the hash_rank kernel: pad/reshape to the TPU
+layout, dispatch to the Pallas kernel (interpret=True off-TPU), unpad."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .hash_rank import BLOCK, LANES, hash_rank_pallas
+from .ref import hash_rank_ref
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "use_pallas"))
+def hash_rank(values: jnp.ndarray, seed, *, variant: str = "l2",
+              use_pallas: bool = True):
+    """(h, rank) for a flat vector; the fused O(N) pass of Algs. 1/3."""
+    if not use_pallas:
+        return hash_rank_ref(values, seed, variant=variant)
+    n = values.shape[0]
+    n_pad = -(-n // BLOCK) * BLOCK
+    v = jnp.pad(values.astype(jnp.float32), (0, n_pad - n))
+    v2 = v.reshape(n_pad // LANES, LANES)
+    seed_arr = jnp.asarray(seed, jnp.int32)
+    h, rank = hash_rank_pallas(v2, seed_arr, variant=variant,
+                               interpret=_use_interpret())
+    return h.reshape(-1)[:n], rank.reshape(-1)[:n]

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the hash_rank kernel.
+
+Must agree bit-for-bit with the Pallas kernel AND with repro.core.hashing
+(the host-side sketching path) — that identity is what keeps host-built and
+kernel-built sketches *coordinated*.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.hashing import hash_unit
+from repro.core.sketches import weight
+
+
+def hash_rank_ref(values: jnp.ndarray, seed, *, variant: str = "l2"):
+    """values: flat (n,) f32. Returns (h, rank) of shape (n,)."""
+    n = values.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    h = hash_unit(seed, idx)
+    w = weight(values.astype(jnp.float32), variant)
+    rank = jnp.where(w > 0, h / jnp.where(w > 0, w, 1.0), jnp.inf)
+    return h, rank

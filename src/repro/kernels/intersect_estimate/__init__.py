@@ -1,0 +1,5 @@
+from .ops import BucketizedSketch, bucketize, bucketize_corpus, query_corpus
+from .ref import intersect_estimate_ref
+
+__all__ = ["BucketizedSketch", "bucketize", "bucketize_corpus",
+           "query_corpus", "intersect_estimate_ref"]

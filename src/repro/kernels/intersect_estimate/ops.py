@@ -1,0 +1,82 @@
+"""Bucketized sketch layout + jit'd query-vs-corpus estimation wrapper."""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import hash_bucket
+from repro.core.sketches import INVALID_IDX, Sketch
+
+from .intersect_estimate import CT, intersect_estimate_pallas
+from .ref import intersect_estimate_ref
+
+
+class BucketizedSketch(NamedTuple):
+    idx: jnp.ndarray      # int32 (B, S) or (C, B, S)
+    val: jnp.ndarray      # f32 same shape
+    tau: jnp.ndarray      # f32 scalar or (C,)
+    dropped: jnp.ndarray  # int32: entries lost to bucket overflow
+
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "slots"))
+def bucketize(sketch: Sketch, *, n_buckets: int = 512, slots: int = 4,
+              bucket_seed: int = 0xB0C4) -> BucketizedSketch:
+    """Re-layout a sorted sketch into (B, S) buckets.
+
+    Coordinated sketches use the same ``bucket_seed``, so a shared index
+    lands in the same bucket on both sides.  Entries beyond S per bucket
+    are dropped (counted in ``dropped``); with B >= m the expected load per
+    bucket is <= 1 and drops are rare (documented bias, DESIGN.md §4).
+    """
+    cap = sketch.idx.shape[-1]
+    valid = sketch.idx != INVALID_IDX
+    b = jnp.where(valid, hash_bucket(bucket_seed, sketch.idx, n_buckets),
+                  n_buckets)  # invalid -> sentinel bucket
+    order = jnp.argsort(b)
+    b_sorted = b[order]
+    idx_sorted = sketch.idx[order]
+    val_sorted = sketch.val[order]
+    # position within bucket = i - first index of this bucket value
+    first = jnp.searchsorted(b_sorted, b_sorted, side="left")
+    pos = jnp.arange(cap, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = (b_sorted < n_buckets) & (pos < slots)
+    out_idx = jnp.full((n_buckets, slots), INVALID_IDX, jnp.int32)
+    out_val = jnp.zeros((n_buckets, slots), jnp.float32)
+    bi = jnp.where(keep, b_sorted, 0).astype(jnp.int32)
+    pi = jnp.where(keep, pos, 0)
+    out_idx = out_idx.at[bi, pi].set(jnp.where(keep, idx_sorted, out_idx[bi, pi]))
+    out_val = out_val.at[bi, pi].set(jnp.where(keep, val_sorted, out_val[bi, pi]))
+    dropped = jnp.sum(valid) - jnp.sum(keep)
+    return BucketizedSketch(out_idx, out_val, sketch.tau, dropped.astype(jnp.int32))
+
+
+def bucketize_corpus(sketches: Sketch, **kw) -> BucketizedSketch:
+    """vmapped bucketize over a corpus of sketches (leading dim C)."""
+    return jax.vmap(lambda i, v, t: bucketize(Sketch(i, v, t), **kw))(
+        sketches.idx, sketches.val, sketches.tau)
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def query_corpus(q: BucketizedSketch, corpus: BucketizedSketch, *,
+                 use_pallas: bool = True) -> jnp.ndarray:
+    """(C,) inner product estimates of one query against a corpus."""
+    if not use_pallas:
+        return intersect_estimate_ref(q.idx, q.val, q.tau,
+                                      corpus.idx, corpus.val, corpus.tau)
+    C = corpus.idx.shape[0]
+    C_pad = -(-C // CT) * CT
+    pad = C_pad - C
+    ci = jnp.pad(corpus.idx, ((0, pad), (0, 0), (0, 0)),
+                 constant_values=INVALID_IDX)
+    cv = jnp.pad(corpus.val, ((0, pad), (0, 0), (0, 0)))
+    ct = jnp.pad(corpus.tau, (0, pad), constant_values=1.0)
+    out = intersect_estimate_pallas(q.idx, q.val, q.tau, ci, cv, ct,
+                                    interpret=_use_interpret())
+    return out[:C]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the bucketized intersection estimator."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+INVALID_IDX = np.int32(np.iinfo(np.int32).max)
+
+
+def intersect_estimate_ref(q_idx, q_val, q_tau, c_idx, c_val, c_tau) -> jnp.ndarray:
+    """Same math as the kernel: (B,S) query vs (C,B,S) corpus -> (C,)."""
+    qv = q_val.astype(jnp.float32)
+    cv = c_val.astype(jnp.float32)
+    wq = qv * qv
+    wc = cv * cv
+    pq = jnp.minimum(1.0, q_tau * wq)                       # (B, S)
+    pc = jnp.minimum(1.0, c_tau.reshape(-1, 1, 1) * wc)     # (C, B, S)
+    # (C, B, Sq, Sc) equality of query slot sq with corpus slot sc
+    eq = (q_idx[None, :, :, None] == c_idx[:, :, None, :]) & \
+         (q_idx != INVALID_IDX)[None, :, :, None]
+    p = jnp.minimum(pq[None, :, :, None], pc[:, :, None, :])
+    p = jnp.where(eq, p, 1.0)
+    terms = jnp.where(eq, qv[None, :, :, None] * cv[:, :, None, :] / p, 0.0)
+    return jnp.sum(terms, axis=(1, 2, 3))

@@ -1,0 +1,4 @@
+from .ops import jl_project
+from .ref import jl_ref, jl_signs_ref
+
+__all__ = ["jl_project", "jl_ref", "jl_signs_ref"]

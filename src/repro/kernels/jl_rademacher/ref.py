@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the matrix-free JL kernel (identical sign stream)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import GOLDEN, mix32
+
+
+def jl_signs_ref(seed, rows: jnp.ndarray, n: int) -> jnp.ndarray:
+    """(len(rows), n) +-1 matrix, sign(j, i) as defined by the kernel."""
+    cols = jnp.arange(n, dtype=jnp.uint32)
+    row_seed = mix32(jnp.asarray(seed, jnp.uint32) + rows.astype(jnp.uint32) * GOLDEN)
+    h = mix32(cols[None, :] * GOLDEN + row_seed[:, None])
+    return jnp.where((h & jnp.uint32(1)) == 0, 1.0, -1.0).astype(jnp.float32)
+
+
+def jl_ref(values: jnp.ndarray, m: int, seed) -> jnp.ndarray:
+    """S(a) = Pi a / sqrt(m) with the kernel's Pi, computed densely."""
+    n = values.shape[0]
+    rows = jnp.arange(m, dtype=jnp.uint32)
+    signs = jl_signs_ref(seed, rows, n)
+    return (signs @ values.astype(jnp.float32)) / jnp.sqrt(jnp.float32(m))

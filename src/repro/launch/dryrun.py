@@ -1,0 +1,320 @@
+"""Multi-pod dry-run: AOT-lower + compile every (architecture x input shape)
+on the production meshes and extract the roofline terms.
+
+MUST set the fake-device flag before ANY other import (jax locks the device
+count at first init)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ----------------------------------------------------------------------------
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.distributed.sharding import (batch_shardings, decode_state_shardings,
+                                        param_shardings, replicated)
+from repro.launch.mesh import make_production_mesh
+from repro.models import (decode_fn, decode_state_specs, make_batch_specs,
+                          param_shapes, prefill_fn)
+from repro.roofline.analysis import (Roofline, analytic_cost, collective_stats,
+                                     loop_weighted_collective_stats,
+                                     model_flops)
+from repro.train.loop import make_train_step
+from repro.train.optimizer import AdamWState, adamw
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape_name]
+    return make_batch_specs(cfg, sh["kind"], sh["seq_len"], sh["global_batch"])
+
+
+def choose_microbatches(cfg, seq_len: int, global_batch: int, dp_shards: int,
+                        budget_bytes: float = 6e9) -> int:
+    """Grad-accumulation factor so the scan-carry residuals fit HBM:
+    saved activations ~= L * tokens_dev_mb * d_model * 2B  <= budget."""
+    tokens_dev = seq_len * global_batch / max(dp_shards, 1)
+    per_mb = cfg.n_layers * cfg.d_model * 2.0
+    mb = 1
+    while tokens_dev / mb * per_mb > budget_bytes and mb < global_batch:
+        mb *= 2
+    while global_batch % mb:
+        mb *= 2
+    return min(mb, global_batch)
+
+
+def _opt_state_specs(p_shapes):
+    f32 = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                       p_shapes)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32), mu=f32,
+                      nu=jax.tree.map(lambda s: s, f32))
+
+
+def _opt_state_shardings(p_shard, mesh):
+    return AdamWState(step=replicated(mesh), mu=p_shard,
+                      nu=jax.tree.map(lambda s: s, p_shard))
+
+
+def _apply_overrides(cfg, overrides):
+    import dataclasses
+    kw = {}
+    for kv in overrides or ():
+        k, v = kv.split("=", 1)
+        cur = getattr(cfg, k)
+        if isinstance(cur, bool):
+            kw[k] = v.lower() in ("1", "true", "yes")
+        else:
+            kw[k] = type(cur)(v)
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               overrides=(), mesh_shape=None):
+    cfg = _apply_overrides(get_config(arch), overrides)
+    sh = SHAPES[shape_name]
+    kind, seq, gbatch = sh["kind"], sh["seq_len"], sh["global_batch"]
+    if mesh_shape is not None:
+        import jax as _jax
+        mesh = _jax.make_mesh(mesh_shape, ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+
+    p_shapes = param_shapes(cfg)
+    p_shard = param_shardings(cfg, mesh)
+    batch_specs = make_batch_specs(cfg, kind, seq, gbatch)
+    dp = chips // mesh.shape.get("model", 1)
+    baxes = ("pod", "data", "model") if cfg.strategy == "fsdp" else None
+    if baxes:
+        dp = chips
+    b_shard = batch_shardings(mesh, batch_specs, baxes)
+
+    if kind == "train":
+        mb = choose_microbatches(cfg, seq, gbatch, dp)
+        opt = adamw(1e-4)
+        step = make_train_step(cfg, opt, microbatches=mb)
+        o_specs = _opt_state_specs(p_shapes)
+        o_shard = _opt_state_shardings(p_shard, mesh)
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, o_shard, b_shard),
+                         out_shardings=(p_shard, o_shard, None),
+                         donate_argnums=(0, 1))
+        with jax.set_mesh(mesh):
+            lowered = jitted.lower(p_shapes, o_specs, batch_specs)
+        extra = {"microbatches": mb}
+    elif kind == "prefill":
+        step = prefill_fn(cfg)
+        jitted = jax.jit(step, in_shardings=(p_shard, b_shard))
+        lowered = jitted.lower(p_shapes, batch_specs)
+        extra = {}
+    elif kind == "decode":
+        step = decode_fn(cfg)
+        s_specs = decode_state_specs(cfg, gbatch, seq)
+        s_shard = decode_state_shardings(cfg, mesh, gbatch, s_specs)
+        tok_shard = b_shard["token"]
+        if cfg.serve_2d:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            tok_shard = NamedSharding(mesh, P())  # replicate decode batch
+        jitted = jax.jit(step,
+                         in_shardings=(p_shard, s_shard, tok_shard),
+                         out_shardings=(None, s_shard),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(p_shapes, s_specs, batch_specs["token"])
+        extra = {}
+    else:
+        raise ValueError(kind)
+    return cfg, lowered, chips, extra
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             overrides=(), mesh_shape=None, tag: str = "") -> dict:
+    sh = SHAPES[shape_name]
+    cfg = _apply_overrides(get_config(arch), overrides)
+    if mesh_shape is not None:
+        mesh_name = "x".join(map(str, mesh_shape))
+    else:
+        mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    if tag:
+        mesh_name += f"+{tag}"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "overrides": list(overrides or ()),
+           "kind": sh["kind"], "seq_len": sh["seq_len"],
+           "global_batch": sh["global_batch"], "status": "ok"}
+    if shape_name == "long_500k" and not cfg.supports_long_context():
+        rec["status"] = "skip"
+        rec["reason"] = ("full-attention architecture; long_500k requires "
+                        "sub-quadratic layers (DESIGN.md §6)")
+        return rec
+    t0 = time.monotonic()
+    cfg, lowered, chips, extra = lower_cell(arch, shape_name,
+                                            multi_pod=multi_pod,
+                                            overrides=overrides,
+                                            mesh_shape=mesh_shape)
+    rec.update(extra)
+    rec["lower_s"] = round(time.monotonic() - t0, 1)
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.monotonic() - t0, 1)
+
+    # ---- memory analysis (proves it fits) ----
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            rec["memory_analysis"] = {
+                k: int(getattr(ma, k)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(ma, k)}
+    except Exception as e:  # CPU backend may not support it
+        rec["memory_analysis_error"] = str(e)
+
+    # ---- raw XLA counters (NOTE: XLA:CPU counts lax.scan bodies once; see
+    # EXPERIMENTS.md §Roofline — kept for reference, roofline uses the
+    # analytic model + loop-weighted collective parse below) ----
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    rec["cost_analysis_raw"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+
+    # ---- collective bytes from the per-device HLO (loop-weighted) ----
+    hlo = compiled.as_text()
+    rec["collectives_static"] = collective_stats(hlo)
+    stats = loop_weighted_collective_stats(hlo)
+    rec["collectives"] = stats
+    coll_bytes = sum(v["bytes"] for v in stats.values())
+
+    # params-per-device (from the actual shardings)
+    from repro.distributed.sharding import pspec_for
+    import numpy as np
+    if mesh_shape is not None:
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    from repro.models.transformer import param_specs as pspecs_fn, ParamSpec
+    total = 0
+    for spec in jax.tree.leaves(pspecs_fn(cfg),
+                                is_leaf=lambda x: isinstance(x, ParamSpec)):
+        pspec = pspec_for(spec, mesh, fsdp=cfg.fsdp, strategy=cfg.strategy)
+        shards = 1
+        for ax in pspec:
+            if ax is not None:
+                shards *= mesh.shape[ax] if isinstance(ax, str) else \
+                    int(np.prod([mesh.shape[a] for a in ax]))
+        n = int(np.prod(spec.shape))
+        total += n * jnp.dtype(cfg.dtype).itemsize / shards
+    rec["param_bytes_per_dev"] = int(total)
+
+    # ---- analytic cost model (implementation-accurate; see analysis.py) ----
+    model_shards = mesh.shape.get("model", 1)
+    ac = analytic_cost(cfg, sh["kind"], sh["seq_len"], sh["global_batch"],
+                       chips=chips, model_shards=model_shards,
+                       microbatches=rec.get("microbatches", 1),
+                       param_bytes_dev=total)
+    rec["analytic"] = ac
+
+    mf = model_flops(cfg, sh["kind"], sh["seq_len"], sh["global_batch"])
+    roof = Roofline(flops_dev=ac["flops_dev"], bytes_dev=ac["bytes_dev"],
+                    coll_bytes_dev=coll_bytes, model_flops_global=mf,
+                    chips=chips)
+    rec["roofline"] = roof.as_dict()
+    return rec
+
+
+def format_summary(rec: dict) -> str:
+    if rec["status"] == "skip":
+        return (f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:10s} "
+                f"SKIP ({rec['reason'][:40]}...)")
+    r = rec["roofline"]
+    return (f"{rec['arch']:24s} {rec['shape']:12s} {rec['mesh']:10s} "
+            f"compute {r['compute_s']*1e3:9.2f} ms | mem {r['memory_s']*1e3:9.2f} ms | "
+            f"coll {r['collective_s']*1e3:9.2f} ms | {r['bottleneck']:10s} | "
+            f"useful {r['useful_flops_ratio']*100:5.1f}% | "
+            f"compile {rec['compile_s']:.0f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--all", action="store_true",
+                    help="iterate every cell in subprocesses")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (hillclimb iterations)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="override mesh, e.g. 32x8 (axes data,model)")
+    ap.add_argument("--tag", default="", help="suffix for the output file")
+    args = ap.parse_args()
+    mesh_shape = tuple(int(x) for x in args.mesh_shape.split("x")) \
+        if args.mesh_shape else None
+    os.makedirs(args.out, exist_ok=True)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mp in meshes:
+                    mesh_name = "multi" if mp else "single"
+                    tag = f"{arch}__{shape}__{'pod2x16x16' if mp else 'pod16x16'}"
+                    path = os.path.join(args.out, tag + ".json")
+                    if os.path.exists(path) and not args.force:
+                        rec = json.load(open(path))
+                        print("cached:", format_summary(rec))
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape,
+                           "--mesh", mesh_name, "--out", args.out]
+                    proc = subprocess.run(cmd, capture_output=True, text=True)
+                    if proc.returncode != 0:
+                        rec = {"arch": arch, "shape": shape,
+                               "mesh": "pod2x16x16" if mp else "pod16x16",
+                               "status": "error",
+                               "error": proc.stderr[-2000:]}
+                        json.dump(rec, open(path, "w"), indent=1)
+                        print(f"{arch:24s} {shape:12s} ERROR (see {path})")
+                    else:
+                        print(proc.stdout.strip().splitlines()[-1])
+        return
+
+    assert args.arch and args.shape
+    for mp in meshes:
+        mesh_name = "x".join(map(str, mesh_shape)) if mesh_shape else \
+            ("pod2x16x16" if mp else "pod16x16")
+        if args.tag:
+            mesh_name += f"+{args.tag}"
+        tag = f"{args.arch}__{args.shape}__{mesh_name}"
+        path = os.path.join(args.out, tag + ".json")
+        try:
+            rec = run_cell(args.arch, args.shape, multi_pod=mp,
+                           overrides=args.override, mesh_shape=mesh_shape,
+                           tag=args.tag)
+        except Exception:
+            rec = {"arch": args.arch, "shape": args.shape,
+                   "mesh": "pod2x16x16" if mp else "pod16x16",
+                   "status": "error", "error": traceback.format_exc()[-3000:]}
+            json.dump(rec, open(path, "w"), indent=1)
+            print(f"ERROR {tag}\n{rec['error']}", file=sys.stderr)
+            sys.exit(1)
+        json.dump(rec, open(path, "w"), indent=1)
+        print(format_summary(rec))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Serving launcher: batched LM generation with the KV-cache engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-370m --reduced \
+        --requests 6 --max-new 8
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import Engine, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, batch_size=args.batch, max_len=256,
+                 temperature=args.temperature)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=args.max_new)
+            for i in range(args.requests)]
+    done = eng.serve(reqs)
+    for r in done:
+        print(f"request {r.rid}: prompt={r.prompt.tolist()} -> {r.output}")
+
+
+if __name__ == "__main__":
+    main()

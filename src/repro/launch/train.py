@@ -1,0 +1,91 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced \
+        --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt [--sketchdp-m 50000]
+
+Full configs assume a TPU slice (mesh via launch/mesh.py); `--reduced` runs
+the smoke-scale config of the same family on the host (the e2e example
+path).  Supports resume-from-checkpoint, step-time watchdog, and optional
+SketchDP gradient compression over the data axis.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.data import Prefetcher, SyntheticLM
+from repro.models import init_params, loss_fn
+from repro.train import (Checkpointer, StepWatchdog, adamw, make_train_step,
+                         train_loop, warmup_cosine)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma2-2b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sketchdp-m", type=int, default=0,
+                    help="gradient-compression sketch size (0 = dense)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} params~{cfg.param_count():,}")
+    params = init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = adamw(warmup_cosine(args.lr, warmup=10, total=args.steps))
+    opt_state = opt.init(params)
+    start_step = 0
+    ck = None
+    if args.ckpt_dir:
+        ck = Checkpointer(args.ckpt_dir)
+        if ck.latest_step() is not None:
+            start_step, restored = ck.restore(
+                {"params": params, "opt_state": opt_state})
+            params, opt_state = restored["params"], restored["opt_state"]
+            print(f"resumed from step {start_step}")
+
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.batch, seed=args.seed)
+    if args.sketchdp_m and len(jax.devices()) > 1:
+        from repro.distributed import make_sketchdp_grad_fn, init_ef_state
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        grad_fn = make_sketchdp_grad_fn(
+            mesh, lambda p, b: loss_fn(cfg, p, b), m=args.sketchdp_m)
+        ef = init_ef_state(mesh, params)
+
+        @jax.jit
+        def step_fn(params, opt_state, batch, ef, i):
+            loss, grads, ef = grad_fn(params, batch, ef, i)
+            params, opt_state, m = opt.update(grads, opt_state, params)
+            return params, opt_state, ef, loss
+
+        for i in range(start_step, args.steps):
+            batch = data.batch_at(i)
+            params, opt_state, ef, loss = step_fn(
+                params, opt_state, batch, ef, jnp.asarray(i, jnp.int32))
+            if i % 10 == 0:
+                print(f"step {i} loss {float(loss):.4f} (sketchdp m={args.sketchdp_m})")
+        return
+
+    step_fn = make_train_step(cfg, opt, microbatches=args.microbatches)
+    watchdog = StepWatchdog()
+    train_loop(cfg, params, opt_state, Prefetcher(data.iter_from(start_step)),
+               step_fn, n_steps=args.steps, start_step=start_step,
+               checkpointer=ck, checkpoint_every=args.ckpt_every,
+               watchdog=watchdog)
+    if watchdog.straggler_events:
+        print(f"stragglers detected: {watchdog.straggler_events}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model zoo: unified LM stack covering dense GQA transformers, MoE,
+Mamba2 SSD, RG-LRU hybrids, encoder-decoder (whisper) and VLM-stub
+(phi-3-vision) architectures."""
+from .model import (decode_fn, decode_state_specs, init_decode_state,
+                    loss_fn, make_batch_specs, prefill_fn)
+from .transformer import init_params, param_shapes, param_specs, ParamSpec
+
+__all__ = [
+    "decode_fn", "decode_state_specs", "init_decode_state", "loss_fn",
+    "make_batch_specs", "prefill_fn", "init_params", "param_shapes",
+    "param_specs", "ParamSpec",
+]

@@ -1,0 +1,258 @@
+"""Shared neural building blocks: norms, RoPE, gated MLPs, and GQA attention
+with a chunked online-softmax path (memory-bounded 32k/500k prefill) plus a
+ring-buffered KV cache for local-attention decode.
+
+All functions are pure; parameters are plain dict pytrees.  Compute runs in
+the config dtype (bf16 on TPU), reductions in f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+# ----------------------------------------------------------------------------
+# Norms / activations / softcap
+# ----------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gamma.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if kind == "relu2":  # squared ReLU (nemotron-4)
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+# ----------------------------------------------------------------------------
+# Rotary position embedding
+# ----------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, d: int) -> jnp.ndarray:
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * dim / d)
+    return jnp.asarray(np.concatenate([np.sin(ang), np.cos(ang)], axis=-1),
+                       jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# MLP (gated / plain)
+# ----------------------------------------------------------------------------
+
+
+def mlp(p: Params, x: jnp.ndarray, *, act: str, glu: bool) -> jnp.ndarray:
+    if glu:
+        gate = activation(jnp.einsum("...d,df->...f", x, p["w_gate"]), act)
+        up = jnp.einsum("...d,df->...f", x, p["w_up"])
+        return jnp.einsum("...f,fd->...d", gate * up, p["w_down"])
+    h = activation(jnp.einsum("...d,df->...f", x, p["w_up"]), act)
+    return jnp.einsum("...f,fd->...d", h, p["w_down"])
+
+
+# ----------------------------------------------------------------------------
+# Attention
+# ----------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def project_qkv(p: Params, x: jnp.ndarray):
+    """x: (B, S, d) -> q (B,S,K,G,dh), k/v (B,S,K,dh) (grouped-query layout)."""
+    q = jnp.einsum("bsd,dhx->bshx", x, p["wq"])     # (B,S,H,dh)
+    k = jnp.einsum("bsd,dkx->bskx", x, p["wk"])     # (B,S,K,dh)
+    v = jnp.einsum("bsd,dkx->bskx", x, p["wv"])
+    B, S, H, dh = q.shape
+    K = k.shape[2]
+    q = q.reshape(B, S, K, H // K, dh)
+    return q, k, v
+
+
+def _attn_scores(q_blk, k_blk, scale, cap):
+    # q_blk (B,qb,K,G,dh) x k_blk (B,kb,K,dh) -> (B,K,G,qb,kb)
+    s = jnp.einsum("bikgd,bjkd->bkgij", q_blk.astype(jnp.float32),
+                   k_blk.astype(jnp.float32)) * scale
+    return softcap(s, cap)
+
+
+def chunked_attention(q, k, v, *, causal: bool, window: int, q_pos0, k_pos0,
+                      q_block: int, kv_block: int, cap: float = 0.0):
+    """Online-softmax attention over (q_block x kv_block) tiles.
+
+    q: (B, Sq, K, G, dh); k, v: (B, Skv, K, dh).
+    q_pos0/k_pos0: starting absolute positions (scalars or (B,)-broadcast).
+    Memory is O(q_block * kv_block) per step instead of O(Sq * Skv) — this is
+    what lets prefill_32k / long_500k lower within HBM (DESIGN.md §7).
+    """
+    B, Sq, K, G, dh = q.shape
+    Skv = k.shape[1]
+
+    def _fit(size, block):  # largest block <= requested that divides size
+        block = min(block, size)
+        while size % block:
+            block -= 1
+        return block
+
+    q_block = _fit(Sq, q_block)
+    kv_block = _fit(Skv, kv_block)
+    nq, nk = Sq // q_block, Skv // kv_block
+    scale = jnp.float32(1.0 / np.sqrt(dh))
+
+    k_r = k.reshape(B, nk, kv_block, K, dh)
+    v_r = v.reshape(B, nk, kv_block, K, dh)
+
+    def one_q_block(qi):
+        q_blk = jax.lax.dynamic_slice_in_dim(q, qi * q_block, q_block, axis=1)
+        q_pos = q_pos0 + qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            kj, k_blk, v_blk = inputs
+            k_pos = k_pos0 + kj * kv_block + jnp.arange(kv_block)
+            s = _attn_scores(q_blk, k_blk, scale, cap)      # (B,K,G,qb,kb)
+            mask = jnp.ones((q_block, kv_block), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.maximum(m_new, -1e28)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.exp(jnp.minimum(m - m_safe, 0.0))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgij,bjkd->bkgid", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, K, G, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, K, G, q_block), jnp.float32)
+        a0 = jnp.zeros((B, K, G, q_block, dh), jnp.float32)
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (ks, jnp.moveaxis(k_r, 1, 0), jnp.moveaxis(v_r, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]         # (B,K,G,qb,dh)
+        return jnp.einsum("bkgid->bikgd", out)
+
+    outs = jax.lax.map(one_q_block, jnp.arange(nq))           # (nq,B,qb,K,G,dh)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq, K, G, dh)
+    return out.astype(q.dtype)
+
+
+def attention_train(p: Params, x: jnp.ndarray, *, positions, causal: bool,
+                    window: int, rope_theta: float, cap: float,
+                    q_block: int, kv_block: int,
+                    kv_override=None) -> jnp.ndarray:
+    """Full-sequence attention (training / prefill). kv_override supplies
+    precomputed (k, v, k_positions) for cross-attention."""
+    q, k, v = project_qkv(p, x)
+    if kv_override is not None:
+        k, v, k_positions = kv_override
+        k_pos0 = 0
+    else:
+        k_positions = positions
+        k_pos0 = 0
+    if rope_theta:
+        q = rope(q.reshape(q.shape[:2] + (-1, q.shape[-1])), positions, rope_theta) \
+            .reshape(q.shape)
+        if kv_override is None:
+            k = rope(k, k_positions, rope_theta)
+    out = chunked_attention(q, k, v, causal=causal, window=window,
+                            q_pos0=positions[0] if positions.ndim == 1 else 0,
+                            k_pos0=k_pos0, q_block=q_block, kv_block=kv_block,
+                            cap=cap)
+    B, S = x.shape[:2]
+    out = out.reshape(B, S, -1)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].reshape(-1, p["wo"].shape[-1]))
+
+
+# ----------------------------------------------------------------------------
+# KV cache (decode)
+# ----------------------------------------------------------------------------
+
+
+def init_kv_cache(batch: int, cache_len: int, n_kv: int, d_head: int, dtype):
+    return {
+        "k": jnp.zeros((batch, cache_len, n_kv, d_head), dtype),
+        "v": jnp.zeros((batch, cache_len, n_kv, d_head), dtype),
+        "pos": jnp.full((batch, cache_len), -1, jnp.int32),
+    }
+
+
+def attention_decode(p: Params, x1: jnp.ndarray, cache, *, pos, window: int,
+                     rope_theta: float, cap: float, kv_override=None):
+    """One-token decode. x1: (B, 1, d); pos: scalar int32 current position.
+    Writes into slot ``pos % cache_len`` (ring buffer for local attention;
+    for full attention cache_len == seq_len so the ring never wraps)."""
+    q, k, v = project_qkv(p, x1)
+    B = x1.shape[0]
+    if rope_theta:
+        pos_arr = jnp.full((1,), pos, jnp.int32)
+        q = rope(q.reshape(q.shape[:2] + (-1, q.shape[-1])), pos_arr, rope_theta) \
+            .reshape(q.shape)
+    if kv_override is not None:
+        ck, cv, cpos = kv_override
+        new_cache = cache
+    else:
+        if rope_theta:
+            k = rope(k, jnp.full((1,), pos, jnp.int32), rope_theta)
+        cache_len = cache["k"].shape[1]
+        slot = pos % cache_len
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        cpos = jax.lax.dynamic_update_slice_in_dim(
+            cache["pos"], jnp.full((B, 1), pos, jnp.int32), slot, axis=1)
+        new_cache = {"k": ck, "v": cv, "pos": cpos}
+    dh = q.shape[-1]
+    scale = jnp.float32(1.0 / np.sqrt(dh))
+    s = jnp.einsum("bikgd,bjkd->bkgij", q.astype(jnp.float32),
+                   ck.astype(jnp.float32)) * scale              # (B,K,G,1,C)
+    s = softcap(s, cap)
+    valid = cpos >= 0
+    if window:
+        valid &= cpos > pos - window
+    valid &= cpos <= pos
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgij,bjkd->bikgd", pr, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, -1).astype(x1.dtype)
+    y = jnp.einsum("bsh,hd->bsd", out, p["wo"].reshape(-1, p["wo"].shape[-1]))
+    return y, new_cache

@@ -1,0 +1,372 @@
+"""Public model API: one entry point per lifecycle stage.
+
+- ``loss_fn(cfg)``          -> (params, batch) -> (loss, metrics)      [train]
+- ``prefill_fn(cfg)``       -> (params, batch) -> (last_logits, state) [prefill]
+- ``decode_fn(cfg, L)``     -> (params, state, token) -> (logits, state) [decode]
+- ``init_decode_state``     zero caches (concrete or eval_shape'd for dry-run)
+- ``make_batch_specs``      ShapeDtypeStruct inputs per assigned shape
+
+State pytree layout mirrors the parameter layout: ``groups/p<i>`` leaves are
+stacked over the scanned groups, ``tail/t<j>`` unrolled; attention layers
+carry a (k, v, pos) ring cache (window-sized for local attention), SSD and
+RG-LRU layers carry O(1) recurrent state.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import layers, moe, rglru, ssm, transformer
+from .layers import activation as act_named
+from .transformer import (apply_backbone, embed_tokens, encode, init_params,
+                          lm_loss, logits_last, param_shapes, param_specs)
+
+# ----------------------------------------------------------------------------
+# Training loss
+# ----------------------------------------------------------------------------
+
+
+def loss_fn(cfg: ModelConfig, params, batch) -> tuple[jnp.ndarray, dict]:
+    tokens = batch["tokens"]
+    positions = jnp.arange(tokens.shape[1])
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, batch["frames"])
+    x = embed_tokens(cfg, params, tokens, batch.get("image_embeds"))
+    hidden, aux = apply_backbone(cfg, params, x, positions, enc_out)
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(tokens, jnp.float32)
+    if cfg.vision_tokens:
+        img_mask = jnp.arange(tokens.shape[1]) >= cfg.vision_tokens
+        mask = mask * img_mask[None].astype(mask.dtype)
+    loss = lm_loss(cfg, params, hidden, batch["labels"], mask)
+    total = loss + 0.01 * aux
+    return total, {"ce_loss": loss, "aux_loss": aux}
+
+
+# ----------------------------------------------------------------------------
+# Decode state
+# ----------------------------------------------------------------------------
+
+
+def _cache_len(cfg: ModelConfig, kind: str, seq_len: int) -> int:
+    if kind == "attn_local" and cfg.window:
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def _zero_block_cache(cfg: ModelConfig, kind: str, batch: int, seq_len: int,
+                      dtype) -> Any:
+    if kind in ("attn", "attn_local"):
+        return layers.init_kv_cache(batch, _cache_len(cfg, kind, seq_len),
+                                    cfg.n_kv_heads, cfg.d_head, dtype)
+    if kind == "ssd":
+        di, N, Kc = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+        H, P = cfg.ssm_heads, cfg.ssm_headdim
+        return {
+            "conv_x": jnp.zeros((batch, Kc - 1, di), dtype),
+            "conv_b": jnp.zeros((batch, Kc - 1, N), dtype),
+            "conv_c": jnp.zeros((batch, Kc - 1, N), dtype),
+            "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+        }
+    if kind == "rglru":
+        W, Kc = cfg.rnn_width, cfg.rnn_conv
+        return {"conv": jnp.zeros((batch, Kc - 1, W), dtype),
+                "h": jnp.zeros((batch, W), jnp.float32)}
+    raise ValueError(kind)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int,
+                      enc_len: int = 0) -> Any:
+    """Zero decode state (all caches empty, pos = 0)."""
+    dtype = jnp.dtype(cfg.dtype)
+
+    def stacked(kind):
+        one = _zero_block_cache(cfg, kind, batch, seq_len, dtype)
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.n_groups,) + a.shape), one)
+
+    state: dict = {
+        "pos": jnp.zeros((), jnp.int32),
+        "groups": {f"p{i}": stacked(kind)
+                   for i, kind in enumerate(cfg.layer_pattern)},
+    }
+    if cfg.n_tail_layers:
+        state["tail"] = {
+            f"t{j}": _zero_block_cache(cfg, cfg.layer_pattern[j], batch,
+                                       seq_len, dtype)
+            for j in range(cfg.n_tail_layers)}
+    if cfg.is_encdec:
+        enc_len = enc_len or max(seq_len // cfg.enc_ratio, 1)
+        kv = jnp.zeros((cfg.n_groups, batch, enc_len, cfg.n_kv_heads,
+                        cfg.d_head), dtype)
+        state["cross"] = {"groups": {f"p{i}": {"k": kv, "v": kv}
+                                     for i in range(len(cfg.layer_pattern))}}
+        if cfg.n_tail_layers:
+            kv1 = kv[0]
+            state["cross"]["tail"] = {
+                f"t{j}": {"k": kv1, "v": kv1} for j in range(cfg.n_tail_layers)}
+    return state
+
+
+def decode_state_specs(cfg: ModelConfig, batch: int, seq_len: int) -> Any:
+    return jax.eval_shape(lambda: init_decode_state(cfg, batch, seq_len))
+
+
+# ----------------------------------------------------------------------------
+# Decode step
+# ----------------------------------------------------------------------------
+
+
+def _cross_decode(p_cross, x1, ck, cv):
+    q = jnp.einsum("bsd,dhx->bshx", x1, p_cross["wq"])
+    B, S, H, dh = q.shape
+    K = ck.shape[2]
+    q = q.reshape(B, S, K, H // K, dh)
+    s = jnp.einsum("bikgd,bjkd->bkgij", q.astype(jnp.float32),
+                   ck.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgij,bjkd->bikgd", pr, cv.astype(jnp.float32))
+    out = out.reshape(B, S, -1).astype(x1.dtype)
+    wo = p_cross["wo"].reshape(-1, p_cross["wo"].shape[-1])
+    return jnp.einsum("bsh,hd->bsd", out, wo)
+
+
+def _ffn_decode(cfg: ModelConfig, p, x):
+    if "moe" in p:
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, _ = moe.moe_ffn(p["moe"], h, n_experts=cfg.n_experts,
+                           top_k=cfg.top_k,
+                           act_fn=lambda v: act_named(v, cfg.mlp_act),
+                           capacity_factor=cfg.capacity_factor,
+                           per_row=cfg.moe_per_row_dispatch)
+        if cfg.n_shared_experts:
+            y = y + moe.shared_expert_ffn(
+                p["moe"]["shared"], h, act_fn=lambda v: act_named(v, cfg.mlp_act))
+        return x + y
+    if "mlp" in p:
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + layers.mlp(p["mlp"], h, act=cfg.mlp_act, glu=cfg.glu)
+    return x
+
+
+def block_decode(cfg: ModelConfig, kind: str, p, cache, x1, pos, cross_ctx):
+    h = layers.rms_norm(x1, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "attn_local"):
+        window = cfg.window if kind == "attn_local" else 0
+        y, new_cache = layers.attention_decode(
+            p, h, cache, pos=pos, window=window, rope_theta=cfg.rope_theta,
+            cap=cfg.attn_softcap)
+    elif kind == "ssd":
+        y, new_cache = ssm.ssd_decode(p["ssd"], h, cache, d_inner=cfg.d_inner,
+                                      n_state=cfg.ssm_state,
+                                      headdim=cfg.ssm_headdim)
+    elif kind == "rglru":
+        y, st = rglru.recurrent_block_decode(p["rnn"], h, cache["conv"], cache["h"])
+        new_cache = {"conv": st[0], "h": st[1]}
+    else:
+        raise ValueError(kind)
+    x = x1 + y
+    if cfg.is_encdec and cross_ctx is not None:
+        h = layers.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        x = x + _cross_decode(p["cross"], h, cross_ctx["k"], cross_ctx["v"])
+    return _ffn_decode(cfg, p, x), new_cache
+
+
+def decode_fn(cfg: ModelConfig):
+    """Returns serve_step(params, state, token (B,1)) -> (logits (B,Vp), state)."""
+
+    def serve_step(params, state, token):
+        pos = state["pos"]
+        x = embed_tokens(cfg, params, token)
+
+        def group_step(x, inp):
+            gp, gc, gx = inp
+            new_c = {}
+            for i, kind in enumerate(cfg.layer_pattern):
+                key = f"p{i}"
+                ctx = gx[key] if gx is not None else None
+                x, nc = block_decode(cfg, kind, gp[key], gc[key], x, pos, ctx)
+                new_c[key] = nc
+            return x, new_c
+
+        cross_groups = state.get("cross", {}).get("groups") if cfg.is_encdec else None
+        xs = (params["groups"], state["groups"],
+              cross_groups if cross_groups is not None else
+              jax.tree.map(lambda a: None, params["groups"]))
+        if cross_groups is None:
+            x, new_groups = jax.lax.scan(
+                lambda x, inp: group_step(x, (inp[0], inp[1], None)),
+                x, (params["groups"], state["groups"]))
+        else:
+            x, new_groups = jax.lax.scan(group_step, x,
+                                         (params["groups"], state["groups"],
+                                          cross_groups))
+        new_state = dict(state)
+        new_state["groups"] = new_groups
+        if cfg.n_tail_layers:
+            new_tail = {}
+            for j in range(cfg.n_tail_layers):
+                kind = cfg.layer_pattern[j]
+                ctx = state.get("cross", {}).get("tail", {}).get(f"t{j}")
+                x, nc = block_decode(cfg, kind, params["tail"][f"t{j}"],
+                                     state["tail"][f"t{j}"], x, pos, ctx)
+                new_tail[f"t{j}"] = nc
+            new_state["tail"] = new_tail
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = logits_last(cfg, params, x[:, 0])
+        new_state["pos"] = pos + 1
+        return logits, new_state
+
+    return serve_step
+
+
+# ----------------------------------------------------------------------------
+# Prefill
+# ----------------------------------------------------------------------------
+
+
+def _attn_prefill_cache(cfg: ModelConfig, kind: str, p, h, positions, max_len):
+    """Project k/v for the whole sequence and pack the trailing window into
+    the ring-cache layout (slot = pos % C).  ``max_len`` is the decode
+    horizon: full-attention caches must hold max_len entries, not just the
+    prefill length, or the ring wraps onto live entries."""
+    k = jnp.einsum("bsd,dkx->bskx", h, p["wk"])
+    v = jnp.einsum("bsd,dkx->bskx", h, p["wv"])
+    if cfg.rope_theta:
+        k = layers.rope(k, positions, cfg.rope_theta)
+    C = _cache_len(cfg, kind, max_len)
+    S = k.shape[1]
+    take = min(C, S)
+    pos_tail = jnp.arange(S - take, S)
+    slots = pos_tail % C
+    B = k.shape[0]
+    dtype = k.dtype
+    ck = jnp.zeros((B, C) + k.shape[2:], dtype).at[:, slots].set(k[:, S - take:])
+    cv = jnp.zeros((B, C) + v.shape[2:], dtype).at[:, slots].set(v[:, S - take:])
+    cpos = jnp.full((B, C), -1, jnp.int32).at[:, slots].set(
+        jnp.broadcast_to(pos_tail, (B, take)))
+    return {"k": ck, "v": cv, "pos": cpos}
+
+
+def block_prefill(cfg: ModelConfig, kind: str, p, x, positions, enc_out, max_len):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "attn_local"):
+        window = cfg.window if kind == "attn_local" else 0
+        y = layers.attention_train(
+            p, h, positions=positions, causal=True, window=window,
+            rope_theta=cfg.rope_theta, cap=cfg.attn_softcap,
+            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+        cache = _attn_prefill_cache(cfg, kind, p, h, positions, max_len)
+        x = x + y
+    elif kind == "ssd":
+        y, cache = ssm.ssd_train(p["ssd"], h, d_inner=cfg.d_inner,
+                                 n_state=cfg.ssm_state,
+                                 headdim=cfg.ssm_headdim, chunk=cfg.ssm_chunk)
+        x = x + y
+    elif kind == "rglru":
+        y, st = rglru.recurrent_block_train(p["rnn"], h)
+        cache = {"conv": st[0], "h": st[1]}
+        x = x + y
+    else:
+        raise ValueError(kind)
+    cross_cache = None
+    if cfg.is_encdec and enc_out is not None:
+        hx = layers.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        kx = jnp.einsum("bsd,dkx->bskx", enc_out, p["cross"]["wk"])
+        vx = jnp.einsum("bsd,dkx->bskx", enc_out, p["cross"]["wv"])
+        y = layers.attention_train(
+            p["cross"], hx, positions=positions, causal=False, window=0,
+            rope_theta=0.0, cap=0.0, q_block=cfg.attn_q_block,
+            kv_block=cfg.attn_kv_block, kv_override=(kx, vx, None))
+        x = x + y
+        cross_cache = {"k": kx, "v": vx}
+    aux = jnp.zeros((), jnp.float32)
+    x, _ = transformer._apply_ffn(cfg, p, x, aux)
+    return x, cache, cross_cache
+
+
+def prefill_fn(cfg: ModelConfig, max_len: int | None = None):
+    """Returns prefill_step(params, batch) -> (last_logits, decode_state).
+
+    ``max_len``: decode horizon; attention caches are sized to it (default:
+    the prefill length, which supports prefill-only lowering)."""
+
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        horizon = max_len or S
+        positions = jnp.arange(S)
+        enc_out = None
+        if cfg.is_encdec:
+            enc_out = encode(cfg, params, batch["frames"])
+        x = embed_tokens(cfg, params, tokens, batch.get("image_embeds"))
+
+        def group_step(x, gp):
+            caches, crosses = {}, {}
+            for i, kind in enumerate(cfg.layer_pattern):
+                x, cache, cross = block_prefill(cfg, kind, gp[f"p{i}"], x,
+                                                positions, enc_out, horizon)
+                caches[f"p{i}"] = cache
+                if cross is not None:
+                    crosses[f"p{i}"] = cross
+            return x, (caches, crosses) if crosses else (caches, None)
+
+        x, (group_caches, group_cross) = jax.lax.scan(
+            jax.checkpoint(group_step), x, params["groups"])
+        state: dict = {"pos": jnp.asarray(S, jnp.int32), "groups": group_caches}
+        if group_cross is not None:
+            state["cross"] = {"groups": group_cross}
+        if cfg.n_tail_layers:
+            tail_caches, tail_cross = {}, {}
+            for j in range(cfg.n_tail_layers):
+                kind = cfg.layer_pattern[j]
+                x, cache, cross = block_prefill(cfg, kind, params["tail"][f"t{j}"],
+                                                x, positions, enc_out, horizon)
+                tail_caches[f"t{j}"] = cache
+                if cross is not None:
+                    tail_cross[f"t{j}"] = cross
+            state["tail"] = tail_caches
+            if tail_cross:
+                state.setdefault("cross", {})["tail"] = tail_cross
+        x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = logits_last(cfg, params, x[:, -1])
+        return logits, state
+
+    return prefill_step
+
+
+# ----------------------------------------------------------------------------
+# Input specs for the dry-run (ShapeDtypeStruct stand-ins, no allocation)
+# ----------------------------------------------------------------------------
+
+
+def make_batch_specs(cfg: ModelConfig, kind: str, seq_len: int,
+                     global_batch: int) -> dict:
+    """Batch ShapeDtypeStructs for a given assigned shape."""
+    B, S = global_batch, seq_len
+    i32 = jnp.int32
+    dt = jnp.dtype(cfg.dtype)
+    if kind == "train":
+        batch = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }
+    elif kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    elif kind == "decode":
+        batch = {"token": jax.ShapeDtypeStruct((B, 1), i32)}
+    else:
+        raise ValueError(kind)
+    if cfg.vision_tokens and kind in ("train", "prefill"):
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_model), dt)
+    if cfg.is_encdec and kind in ("train", "prefill"):
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (B, max(S // cfg.enc_ratio, 1), cfg.d_model), dt)
+    return batch

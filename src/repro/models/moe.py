@@ -1,0 +1,106 @@
+"""Mixture-of-Experts FFN with token-choice top-k routing.
+
+TPU-native dispatch: instead of per-token gather/scatter hash maps, tokens
+are *sorted by expert id* (a static-shape XLA sort that GSPMD partitions
+across the data axis), packed into a fixed (E, C, d) capacity buffer, run
+through a batched expert einsum (sharded over the model axis = expert
+parallelism), and combined back with the router gates.  Tokens beyond an
+expert's capacity are dropped (standard capacity-factor routing).
+
+Shapes are static everywhere; capacity C = ceil(T * top_k / E * cf),
+rounded up to a multiple of 8 for lane alignment.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def capacity(n_tokens: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = int(n_tokens * top_k / n_experts * cf) + 1
+    return -(-c // 8) * 8
+
+
+def moe_ffn(p, x: jnp.ndarray, *, n_experts: int, top_k: int, act_fn,
+            capacity_factor: float = 1.25, per_row: bool = False):
+    """x: (B, S, d) -> (B, S, d).  p: router (d, E), w_gate/w_up (E, d, f),
+    w_down (E, f, d).
+
+    ``per_row=True`` dispatches each batch row independently (capacity per
+    row): the argsort/scatter stay *local to the row's data shard*, so the
+    only cross-shard traffic is the inherent expert-parallel token routing
+    — the global-sort baseline forces GSPMD to sort across the whole
+    data-sharded token axis (§Perf hillclimb B2 measured 13.5TB/step of
+    all-reduce from exactly that on qwen3-235B).  Total slot count (and
+    FLOPs) is identical; drops are decided per-row instead of globally."""
+    if per_row:
+        B = x.shape[0]
+        y, aux = jax.vmap(
+            lambda row: _moe_tokens(p, row, n_experts=n_experts, top_k=top_k,
+                                    act_fn=act_fn,
+                                    capacity_factor=capacity_factor))(x)
+        return y, (aux[0].reshape(-1, n_experts), aux[1].reshape(-1, top_k))
+    B, S, d = x.shape
+    out, aux = _moe_tokens(p, x.reshape(B * S, d), n_experts=n_experts,
+                           top_k=top_k, act_fn=act_fn,
+                           capacity_factor=capacity_factor)
+    return out.reshape(B, S, d), aux
+
+
+def _moe_tokens(p, xt: jnp.ndarray, *, n_experts: int, top_k: int, act_fn,
+                capacity_factor: float):
+    """Core dispatch over a flat (T, d) token slab."""
+    T, d = xt.shape
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)          # (T, K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Flatten (token, k) assignments and sort by expert id.
+    flat_e = expert_ids.reshape(-1)                              # (T*K,)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    flat_g = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e)
+    e_s, t_s, g_s = flat_e[order], flat_t[order], flat_g[order]
+    # Position within expert: index - first occurrence of this expert value.
+    first = jnp.searchsorted(e_s, e_s, side="left")
+    pos = jnp.arange(T * top_k, dtype=jnp.int32) - first.astype(jnp.int32)
+    C = capacity(T, top_k, n_experts, capacity_factor)
+    keep = pos < C
+
+    # Dispatch into the (E, C, d) buffer.
+    be = jnp.where(keep, e_s, 0)
+    bp = jnp.where(keep, pos, 0)
+    buf = jnp.zeros((n_experts, C, d), xt.dtype)
+    tok = jnp.where(keep[:, None], xt[t_s], 0.0).astype(xt.dtype)
+    buf = buf.at[be, bp].set(tok, mode="drop")
+
+    # Expert computation (batched einsum; E sharded over the model axis).
+    h_gate = act_fn(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"]))
+    h_up = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h_gate * h_up, p["w_down"])
+
+    # Combine: gather each kept assignment's output, weight by gate,
+    # scatter-add back to tokens.
+    out_tok = out_buf[be, bp]                                    # (T*K, d)
+    contrib = jnp.where(keep[:, None], out_tok * g_s[:, None].astype(xt.dtype), 0.0)
+    out = jnp.zeros((T, d), xt.dtype).at[t_s].add(contrib)
+    return out, (logits, expert_ids)
+
+
+def shared_expert_ffn(p, x: jnp.ndarray, *, act_fn):
+    """Always-on shared experts (qwen2-moe): standard gated MLP with the
+    shared experts fused into one wider FFN."""
+    gate = act_fn(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    up = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+    return jnp.einsum("bsf,fd->bsd", gate * up, p["w_down"])
+
+
+def load_balancing_loss(logits: jnp.ndarray, expert_ids: jnp.ndarray,
+                        n_experts: int, top_k: int) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    p_mean = probs.mean(axis=0)
+    onehot = jax.nn.one_hot(expert_ids, n_experts, dtype=jnp.float32)
+    f = onehot.sum(axis=(0, 1)) / (expert_ids.shape[0] * top_k)
+    return n_experts * jnp.sum(f * p_mean)

@@ -1,0 +1,70 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill uses jax.lax.associative_scan over the sequence (O(log L)
+depth); decode is the O(1) recurrence.  The surrounding block is the
+Griffin recurrent block: linear in -> causal conv(4) -> RG-LRU, gated by a
+GeLU branch, then a linear out.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .ssm import causal_conv1d
+
+_C = 8.0
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", u, p["w_r"]))
+    i = jax.nn.sigmoid(jnp.einsum("blw,wv->blv", u, p["w_i"]))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i.astype(jnp.float32) * u.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_scan(p, u: jnp.ndarray, h0=None):
+    """u: (B, L, W) conv output. Returns (h_seq (B,L,W), h_last (B,W))."""
+    a, b = _gates(p, u)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    if h0 is not None:
+        # fold the initial state into the first element
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rglru_step(p, u1: jnp.ndarray, h):
+    """u1: (B, 1, W); h: (B, W) -> (h1 (B,1,W), h_new)."""
+    a, b = _gates(p, u1)
+    h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+    return h_new[:, None].astype(u1.dtype), h_new
+
+
+def recurrent_block_train(p, x: jnp.ndarray, *, conv_state=None, h0=None):
+    """Griffin recurrent block over a full sequence.  x: (B, L, d)."""
+    u = jnp.einsum("bld,dw->blw", x, p["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x, p["w_gate"]), approximate=True)
+    u, conv_state = causal_conv1d(u, p["conv_w"], conv_state)
+    h, h_last = rglru_scan(p, u, h0)
+    y = jnp.einsum("blw,wd->bld", h * gate, p["w_out"])
+    return y, (conv_state, h_last)
+
+
+def recurrent_block_decode(p, x1: jnp.ndarray, conv_state, h):
+    u = jnp.einsum("bld,dw->blw", x1, p["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bld,dw->blw", x1, p["w_gate"]), approximate=True)
+    u, conv_state = causal_conv1d(u, p["conv_w"], conv_state)
+    h1, h_new = rglru_step(p, u, h)
+    y = jnp.einsum("blw,wd->bld", h1 * gate, p["w_out"])
+    return y, (conv_state, h_new)

@@ -1,0 +1,142 @@
+"""Mamba-2 SSD (state-space duality) block — chunked parallel form for
+training/prefill, O(1) recurrent form for decode.
+
+Recurrence (per head h, state size N, head dim P):
+    H_t = exp(dt_t * A_h) * H_{t-1} + dt_t * B_t (x) x_t      (N x P state)
+    y_t = C_t . H_t + D_h * x_t
+
+Chunked algorithm (arXiv:2405.21060): split the sequence into chunks of Q
+tokens; within a chunk the quadratic "attention-like" form runs on the MXU;
+across chunks a single lax.scan carries the (H, N, P) state.  Activation
+footprint is O(Q^2) per chunk instead of O(L^2).
+
+Projections are kept *separate* (w_z/w_x/w_B/w_C/w_dt) rather than fused so
+tensor parallelism can shard d_inner and the SSM heads over the model axis
+without slicing through a fused projection (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, state=None):
+    """Depthwise causal conv. x: (B, L, D); w: (K, D).  If ``state``
+    ((B, K-1, D), trailing inputs of the previous segment) is given it
+    prefixes the input.  Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y, new_state
+
+
+def _project(p, x):
+    z = jnp.einsum("bld,de->ble", x, p["w_z"])          # gate   (B,L,di)
+    xs = jnp.einsum("bld,de->ble", x, p["w_x"])         # values (B,L,di)
+    Bm = jnp.einsum("bld,dn->bln", x, p["w_b"])         # (B,L,N)
+    Cm = jnp.einsum("bld,dn->bln", x, p["w_c"])
+    dt = jnp.einsum("bld,dh->blh", x, p["w_dt"])        # (B,L,H)
+    return z, xs, Bm, Cm, dt
+
+
+def _gated_norm(p, y, z, dtype):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + 1e-6)
+            * (1.0 + p["norm"].astype(jnp.float32))).astype(dtype)
+
+
+def ssd_train(p, x: jnp.ndarray, *, d_inner: int, n_state: int, headdim: int,
+              chunk: int, state=None):
+    """x: (B, L, d) -> (y (B, L, d), new_state dict).
+
+    ``state`` = {"conv_x", "conv_b", "conv_c", "ssm"} for segment-wise
+    prefill; final states are returned for decode handoff."""
+    B, L, _ = x.shape
+    H = d_inner // headdim
+    state = state or {}
+    z, xs, Bm, Cm, dt = _project(p, x)
+    xs, conv_x = causal_conv1d(xs, p["conv_x"], state.get("conv_x"))
+    Bm, conv_b = causal_conv1d(Bm, p["conv_b"], state.get("conv_b"))
+    Cm, conv_c = causal_conv1d(Cm, p["conv_c"], state.get("conv_c"))
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))                # (H,) negative
+
+    Q = min(chunk, L)
+    assert L % Q == 0
+    nc = L // Q
+    xh = xs.reshape(B, nc, Q, H, headdim).astype(jnp.float32)
+    Bc = Bm.reshape(B, nc, Q, n_state).astype(jnp.float32)
+    Cc = Cm.reshape(B, nc, Q, n_state).astype(jnp.float32)
+    dtc = dt.reshape(B, nc, Q, H)
+    dA = dtc * A                                                # (B,nc,Q,H)
+    cum = jnp.cumsum(dA, axis=2)                                # inclusive
+    total = cum[:, :, -1]                                       # (B,nc,H)
+
+    # --- intra-chunk (quadratic, MXU-friendly) ---
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                  # (B,nc,Q,Q)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = CB[..., None] * decay * dtc[:, :, None, :, :]      # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xh)
+
+    # --- chunk states ---
+    w = jnp.exp(total[:, :, None, :] - cum) * dtc               # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", w, Bc, xh)   # (B,nc,H,N,P)
+
+    # --- inter-chunk scan ---
+    ssm0 = state.get("ssm")
+    if ssm0 is None:
+        ssm0 = jnp.zeros((B, H, n_state, headdim), jnp.float32)
+
+    def step(h, inp):
+        S_c, tot_c, Cc_c, cum_c = inp
+        y_off = jnp.einsum("bqn,bhnp->bqhp", Cc_c, h) * jnp.exp(cum_c)[..., None]
+        h_new = h * jnp.exp(tot_c)[:, :, None, None] + S_c
+        return h_new, y_off
+
+    xs_scan = (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(total, 1, 0),
+               jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(cum, 1, 0))
+    ssm, y_inter = jax.lax.scan(step, ssm0, xs_scan)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)                       # (B,nc,Q,H,P)
+
+    y = (y_intra + y_inter
+         + p["d_skip"].astype(jnp.float32)[None, None, None, :, None] * xh)
+    y = y.reshape(B, L, d_inner).astype(x.dtype)
+    y = _gated_norm(p, y, z, x.dtype)
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"])
+    new_state = {"conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c, "ssm": ssm}
+    return out, new_state
+
+
+def ssd_decode(p, x1: jnp.ndarray, state, *, d_inner: int, n_state: int,
+               headdim: int):
+    """One-token recurrent step. x1: (B, 1, d)."""
+    B = x1.shape[0]
+    H = d_inner // headdim
+    z, xs, Bm, Cm, dt = _project(p, x1)
+    xs, conv_x = causal_conv1d(xs, p["conv_x"], state["conv_x"])
+    Bm, conv_b = causal_conv1d(Bm, p["conv_b"], state["conv_b"])
+    Cm, conv_c = causal_conv1d(Cm, p["conv_c"], state["conv_c"])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    xh = xs.reshape(B, H, headdim).astype(jnp.float32)
+    Bv = Bm[:, 0].astype(jnp.float32)
+    Cv = Cm[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                     # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, Bv, xh)
+    ssm = state["ssm"] * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cv, ssm) + \
+        p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B, 1, d_inner).astype(x1.dtype)
+    y = _gated_norm(p, y, z, x1.dtype)
+    out = jnp.einsum("ble,ed->bld", y, p["w_out"])
+    new_state = {"conv_x": conv_x, "conv_b": conv_b, "conv_c": conv_c, "ssm": ssm}
+    return out, new_state

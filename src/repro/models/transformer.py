@@ -1,0 +1,359 @@
+"""Unified LM stack covering all 10 assigned architectures.
+
+Key structural decisions (DESIGN.md §7):
+- the depth is organized as ``n_groups`` repetitions of the config's
+  ``layer_pattern`` (period 1 for homogeneous stacks, 2 for gemma2,
+  3 for recurrentgemma) **scanned** with stacked parameters, plus an
+  unrolled tail for non-divisible depths (26 = 8x3 + 2) — HLO size is
+  independent of depth;
+- every block kind (attn / attn_local / ssd / rglru) exposes a train form
+  and a decode form with an explicit state pytree, so one scan drives both
+  training and serving;
+- parameters are plain dicts described by ``ParamSpec`` (shape + logical
+  axes); the distributed layer maps logical axes to mesh axes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from . import layers, moe, rglru, ssm
+from .layers import activation as act_fn_named
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    axes: tuple          # logical axis names (len == len(shape))
+    init: str = "normal"  # normal | zeros | ones
+    scale: float | None = None  # stddev; None -> 1/sqrt(fan_in)
+
+
+# ----------------------------------------------------------------------------
+# Parameter specs
+# ----------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: ModelConfig, prefix: str = "") -> dict:
+    d, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    return {
+        prefix + "wq": ParamSpec((d, H, dh), ("embed", "heads", "head_dim")),
+        prefix + "wk": ParamSpec((d, K, dh), ("embed", "kv_heads", "head_dim")),
+        prefix + "wv": ParamSpec((d, K, dh), ("embed", "kv_heads", "head_dim")),
+        prefix + "wo": ParamSpec((H, dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _mlp_specs(cfg: ModelConfig, d_ff: int) -> dict:
+    d = cfg.d_model
+    out = {}
+    if cfg.glu:
+        out["w_gate"] = ParamSpec((d, d_ff), ("embed", "ffn"))
+    out["w_up"] = ParamSpec((d, d_ff), ("embed", "ffn"))
+    out["w_down"] = ParamSpec((d_ff, d), ("ffn", "embed"))
+    return out
+
+
+def _moe_specs(cfg: ModelConfig) -> dict:
+    d, E, fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    out = {
+        "router": ParamSpec((d, E), ("embed", None)),
+        "w_gate": ParamSpec((E, d, fe), ("experts", "embed", None)),
+        "w_up": ParamSpec((E, d, fe), ("experts", "embed", None)),
+        "w_down": ParamSpec((E, fe, d), ("experts", None, "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        out["shared"] = {
+            "w_gate": ParamSpec((d, fs), ("embed", "ffn")),
+            "w_up": ParamSpec((d, fs), ("embed", "ffn")),
+            "w_down": ParamSpec((fs, d), ("ffn", "embed")),
+        }
+    return out
+
+
+def _ssd_specs(cfg: ModelConfig) -> dict:
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, Kc = cfg.ssm_heads, cfg.ssm_conv
+    return {
+        "w_z": ParamSpec((d, di), ("embed", "inner")),
+        "w_x": ParamSpec((d, di), ("embed", "inner")),
+        "w_b": ParamSpec((d, N), ("embed", None)),
+        "w_c": ParamSpec((d, N), ("embed", None)),
+        "w_dt": ParamSpec((d, H), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((Kc, di), (None, "inner"), "normal", 0.2),
+        "conv_b": ParamSpec((Kc, N), (None, None), "normal", 0.2),
+        "conv_c": ParamSpec((Kc, N), (None, None), "normal", 0.2),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), "zeros"),
+        "a_log": ParamSpec((H,), ("ssm_heads",), "zeros"),
+        "d_skip": ParamSpec((H,), ("ssm_heads",), "ones"),
+        "norm": ParamSpec((di,), ("inner",), "zeros"),
+        "w_out": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def _rglru_specs(cfg: ModelConfig) -> dict:
+    d, W, Kc = cfg.d_model, cfg.rnn_width, cfg.rnn_conv
+    return {
+        "w_x": ParamSpec((d, W), ("embed", "rnn")),
+        "w_gate": ParamSpec((d, W), ("embed", "rnn")),
+        "w_out": ParamSpec((W, d), ("rnn", "embed")),
+        "conv_w": ParamSpec((Kc, W), (None, "rnn"), "normal", 0.2),
+        "w_r": ParamSpec((W, W), (None, "rnn")),
+        "w_i": ParamSpec((W, W), (None, "rnn")),
+        "lam": ParamSpec((W,), ("rnn",), "zeros"),
+    }
+
+
+def block_specs(cfg: ModelConfig, kind: str, *, with_cross: bool = False) -> dict:
+    d = cfg.d_model
+    out = {"ln1": ParamSpec((d,), (None,), "zeros")}
+    if kind in ("attn", "attn_local"):
+        out.update(_attn_specs(cfg))
+    elif kind == "ssd":
+        out["ssd"] = _ssd_specs(cfg)
+    elif kind == "rglru":
+        out["rnn"] = _rglru_specs(cfg)
+    else:
+        raise ValueError(kind)
+    if with_cross:
+        out["ln_x"] = ParamSpec((d,), (None,), "zeros")
+        out["cross"] = _attn_specs(cfg)
+    # feed-forward sublayer (absent for pure-SSD blocks with d_ff == 0)
+    if cfg.n_experts and kind in ("attn", "attn_local"):
+        out["ln2"] = ParamSpec((d,), (None,), "zeros")
+        out["moe"] = _moe_specs(cfg)
+    elif cfg.d_ff:
+        out["ln2"] = ParamSpec((d,), (None,), "zeros")
+        out["mlp"] = _mlp_specs(cfg, cfg.d_ff)
+    return out
+
+
+def _stack_specs(specs: dict, n: int) -> dict:
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, Vp = cfg.d_model, cfg.padded_vocab
+    specs: dict = {"embed": ParamSpec((Vp, d), ("vocab", "embed"), "normal", 0.02)}
+    groups = {}
+    for i, kind in enumerate(cfg.layer_pattern):
+        groups[f"p{i}"] = _stack_specs(
+            block_specs(cfg, kind, with_cross=cfg.is_encdec), cfg.n_groups)
+    specs["groups"] = groups
+    tail = {}
+    for j in range(cfg.n_tail_layers):
+        kind = cfg.layer_pattern[j]
+        tail[f"t{j}"] = block_specs(cfg, kind, with_cross=cfg.is_encdec)
+    if tail:
+        specs["tail"] = tail
+    specs["final_norm"] = ParamSpec((d,), (None,), "zeros")
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, Vp), ("embed", "vocab"), "normal", 0.02)
+    if cfg.vision_tokens:
+        specs["img_proj"] = ParamSpec((d, d), ("embed", None))
+    if cfg.is_encdec:
+        enc_block = {"ln1": ParamSpec((d,), (None,), "zeros")}
+        enc_block.update(_attn_specs(cfg))
+        enc_block["ln2"] = ParamSpec((d,), (None,), "zeros")
+        enc_block["mlp"] = _mlp_specs(cfg, cfg.d_ff)
+        specs["enc"] = {
+            "blocks": _stack_specs(enc_block, cfg.enc_layers),
+            "final_norm": ParamSpec((d,), (None,), "zeros"),
+        }
+    return specs
+
+
+def init_params(cfg: ModelConfig, key) -> Any:
+    specs = param_specs(cfg)
+    flat, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(flat))
+    dtype = jnp.dtype(cfg.dtype)
+
+    def make(spec: ParamSpec, k):
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        scale = spec.scale if spec.scale is not None else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dtype)
+
+    return jax.tree.unflatten(treedef, [make(s, k) for s, k in zip(flat, keys)])
+
+
+def param_shapes(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct tree (no allocation) for AOT lowering."""
+    specs = param_specs(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ----------------------------------------------------------------------------
+# Block application — train / prefill (full sequence)
+# ----------------------------------------------------------------------------
+
+
+def _apply_ffn(cfg: ModelConfig, p, x, aux):
+    act = functools.partial(act_fn_named, kind=cfg.mlp_act)
+    if "moe" in p:
+        if cfg.constrain_activations:
+            from repro.distributed.sharding import constrain_batch_sharded
+            x = constrain_batch_sharded(x)
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, (logits, eids) = moe.moe_ffn(
+            p["moe"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+            act_fn=lambda v: act_fn_named(v, cfg.mlp_act),
+            capacity_factor=cfg.capacity_factor,
+            per_row=cfg.moe_per_row_dispatch)
+        if cfg.n_shared_experts:
+            y = y + moe.shared_expert_ffn(
+                p["moe"]["shared"], h, act_fn=lambda v: act_fn_named(v, cfg.mlp_act))
+        aux = aux + moe.load_balancing_loss(logits, eids, cfg.n_experts, cfg.top_k)
+        return x + y, aux
+    if "mlp" in p:
+        h = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        return x + layers.mlp(p["mlp"], h, act=cfg.mlp_act, glu=cfg.glu), aux
+    return x, aux
+
+
+def block_train(cfg: ModelConfig, kind: str, p, x, positions, enc_out, aux):
+    h = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ("attn", "attn_local"):
+        window = cfg.window if kind == "attn_local" else 0
+        y = layers.attention_train(
+            p, h, positions=positions, causal=True, window=window,
+            rope_theta=cfg.rope_theta, cap=cfg.attn_softcap,
+            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+        x = x + y
+    elif kind == "ssd":
+        y, _ = ssm.ssd_train(p["ssd"], h, d_inner=cfg.d_inner,
+                             n_state=cfg.ssm_state, headdim=cfg.ssm_headdim,
+                             chunk=cfg.ssm_chunk)
+        x = x + y
+    elif kind == "rglru":
+        y, _ = rglru.recurrent_block_train(p["rnn"], h)
+        x = x + y
+    if cfg.is_encdec and enc_out is not None:
+        h = layers.rms_norm(x, p["ln_x"], cfg.norm_eps)
+        kx = jnp.einsum("bsd,dkx->bskx", enc_out, p["cross"]["wk"])
+        vx = jnp.einsum("bsd,dkx->bskx", enc_out, p["cross"]["wv"])
+        y = layers.attention_train(
+            p["cross"], h, positions=positions, causal=False, window=0,
+            rope_theta=0.0, cap=0.0, q_block=cfg.attn_q_block,
+            kv_block=cfg.attn_kv_block, kv_override=(kx, vx, None))
+        x = x + y
+    return _apply_ffn(cfg, p, x, aux)
+
+
+def apply_backbone(cfg: ModelConfig, params, x, positions, enc_out=None):
+    """x: (B, S, d) embedded inputs -> (hidden (B, S, d), aux_loss)."""
+    aux0 = jnp.zeros((), jnp.float32)
+
+    def group_step(carry, gp):
+        x, aux = carry
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, aux = block_train(cfg, kind, gp[f"p{i}"], x, positions, enc_out, aux)
+        return (x, aux), None
+
+    step = jax.checkpoint(group_step)
+    (x, aux), _ = jax.lax.scan(step, (x, aux0), params["groups"])
+    for j in range(cfg.n_tail_layers):
+        kind = cfg.layer_pattern[j]
+        x, aux = block_train(cfg, kind, params["tail"][f"t{j}"], x, positions,
+                             enc_out, aux)
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """Whisper-style encoder over stub frame embeddings (B, Senc, d)."""
+    B, Senc, d = frames.shape
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + layers.sinusoidal_positions(Senc, d)[None].astype(x.dtype)
+    positions = jnp.arange(Senc)
+
+    def enc_step(x, bp):
+        h = layers.rms_norm(x, bp["ln1"], cfg.norm_eps)
+        y = layers.attention_train(
+            bp, h, positions=positions, causal=False, window=0,
+            rope_theta=0.0, cap=0.0,
+            q_block=cfg.attn_q_block, kv_block=cfg.attn_kv_block)
+        x = x + y
+        h = layers.rms_norm(x, bp["ln2"], cfg.norm_eps)
+        x = x + layers.mlp(bp["mlp"], h, act=cfg.mlp_act, glu=cfg.glu)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(enc_step), x, params["enc"]["blocks"])
+    return layers.rms_norm(x, params["enc"]["final_norm"], cfg.norm_eps)
+
+
+# ----------------------------------------------------------------------------
+# Embedding / logits / loss
+# ----------------------------------------------------------------------------
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens, image_embeds=None):
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(x.dtype)
+    if cfg.vision_tokens and image_embeds is not None:
+        proj = jnp.einsum("bpd,de->bpe", image_embeds.astype(x.dtype),
+                          params["img_proj"])
+        x = jnp.concatenate([proj, x[:, cfg.vision_tokens:]], axis=1)
+    return x
+
+
+def _unembed_matrix(cfg: ModelConfig, params):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def lm_loss(cfg: ModelConfig, params, hidden, labels, mask):
+    """Cross-entropy, chunked over the *sequence* dimension so the (T, V)
+    logits tensor is never materialized (DESIGN.md §7).
+
+    Chunking along seq (not flat tokens) keeps the batch dimension — and
+    therefore its DP sharding — intact inside every chunk; flat-token
+    chunks span batch shards and force GSPMD to all-gather the full hidden
+    state per chunk (§Perf iteration A1 measured 19GB/step of all-gather +
+    9.7GB of misplaced all-reduce for gemma2 train_4k from exactly that)."""
+    B, S, d = hidden.shape
+    W = _unembed_matrix(cfg, params)
+    Vp = W.shape[1]
+    cb = max(min(cfg.loss_token_block // max(B, 1), S), 1)
+    while S % cb:
+        cb -= 1
+    nch = S // cb
+    vocab_ok = (jnp.arange(Vp) < cfg.vocab_size)
+    maskf = mask.astype(jnp.float32)
+
+    def chunk(k):
+        hc = jax.lax.dynamic_slice_in_dim(hidden, k * cb, cb, axis=1)
+        lc = jax.lax.dynamic_slice_in_dim(labels, k * cb, cb, axis=1)
+        mc = jax.lax.dynamic_slice_in_dim(maskf, k * cb, cb, axis=1)
+        logits = jnp.einsum("bsd,dv->bsv", hc, W).astype(jnp.float32)
+        logits = layers.softcap(logits, cfg.logit_softcap)
+        logits = jnp.where(vocab_ok[None, None, :], logits, layers.NEG_INF)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(mc * (logz - gold))
+
+    losses = jax.lax.map(jax.checkpoint(chunk), jnp.arange(nch))
+    denom = jnp.maximum(jnp.sum(maskf), 1.0)
+    return jnp.sum(losses) / denom
+
+
+def logits_last(cfg: ModelConfig, params, hidden_last):
+    """hidden_last: (B, d) -> (B, Vp) final-position logits."""
+    W = _unembed_matrix(cfg, params)
+    logits = jnp.einsum("bd,dv->bv", hidden_last, W).astype(jnp.float32)
+    return layers.softcap(logits, cfg.logit_softcap)

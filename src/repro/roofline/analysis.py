@@ -1,0 +1,416 @@
+"""Roofline analysis from AOT-compiled artifacts (DESIGN.md §9).
+
+Terms (per chip, TPU v5e constants):
+    compute    = HLO_FLOPs_dev / 197e12        [s]
+    memory     = HLO_bytes_dev / 819e9         [s]
+    collective = collective_bytes_dev / 50e9   [s]
+
+``cost_analysis()`` of the compiled (post-SPMD) executable reports
+*per-device* flops/bytes.  Collective bytes are not in cost_analysis, so we
+parse the per-device HLO text and sum the operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(async ``-start`` forms counted once; ``-done`` forms skipped).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# TPU v5e
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|\S+)\s+"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:  # replica_groups=[n_groups,group_size]<=[N]
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def collective_stats(hlo_text: str, *, loop_weighted: bool = False,
+                     trip_counts: dict | None = None) -> dict:
+    """Per-collective-kind *wire-byte* totals + op counts from the
+    post-SPMD, per-device HLO text.
+
+    XLA prints operands without shapes, so bytes derive from the RESULT
+    shape with standard ring-algorithm conventions (documented in
+    EXPERIMENTS.md §Roofline):
+      all-gather          ~ result * (W-1)/W        (result is the gathered buf)
+      all-reduce          ~ 2 * result * (W-1)/W    (reduce-scatter + all-gather)
+      reduce-scatter      ~ result * (W-1)          (operand = result * W)
+      all-to-all          ~ result * (W-1)/W
+      collective-permute  ~ result
+    Async ``-start`` forms are counted once; ``-done`` never match (their
+    operand is the start handle, and the regex requires the op name).
+    """
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        result = m.group("result")
+        nbytes = sum(_shape_bytes(dt, dims)
+                     for dt, dims in _SHAPE_RE.findall(result))
+        w = max(_group_size(line), 1)
+        if kind == "all-gather":
+            wire = nbytes * (w - 1) / w
+        elif kind == "all-reduce":
+            wire = 2 * nbytes * (w - 1) / w
+        elif kind == "reduce-scatter":
+            wire = nbytes * (w - 1)
+        elif kind == "all-to-all":
+            wire = nbytes * (w - 1) / w
+        else:  # collective-permute
+            wire = nbytes
+        rec = out.setdefault(kind, {"bytes": 0, "count": 0})
+        rec["bytes"] += int(wire)
+        rec["count"] += 1
+    return out
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())
+
+
+# ----------------------------------------------------------------------------
+# Loop-aware weighting: collectives inside lax.scan bodies execute
+# trip_count times but appear once in the HLO text.  We reconstruct the
+# computation graph (ENTRY -> while bodies -> nested whiles), read each
+# loop's trip count from the compare-against constant in its condition
+# computation, and weight every collective by the product of enclosing
+# trip counts.
+# ----------------------------------------------------------------------------
+
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%([\w.\-]+)")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_S32_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _parse_computations(hlo_text: str):
+    """-> (entry_name, {comp_name: [lines]}).
+
+    Computation definitions start at column 0 with ``%name (...) ... {``
+    (params may contain nested parens — match on the name only); everything
+    until the next column-0 header belongs to the current computation."""
+    comps: dict = {}
+    entry = None
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line.startswith(" "):
+            stripped = line.strip()
+            m = _COMP_HDR_RE.match(stripped)
+            if m and stripped.endswith("{") and "(" in stripped:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+            if stripped == "}" or not stripped.startswith("%"):
+                cur = None
+                continue
+        if cur is not None:
+            comps[cur].append(line)
+    return entry, comps
+
+
+def _trip_count(cond_lines) -> int:
+    consts = [int(m.group(1)) for line in cond_lines
+              for m in _S32_CONST_RE.finditer(line)]
+    return max(consts) if consts else 1
+
+
+def computation_multipliers(hlo_text: str) -> dict:
+    """{computation_name: product of enclosing while trip counts}."""
+    entry, comps = _parse_computations(hlo_text)
+    if entry is None:
+        return {}
+    mult = {entry: 1}
+    # whiles per computation
+    stack = [entry]
+    visited = set()
+    while stack:
+        name = stack.pop()
+        if name in visited or name not in comps:
+            continue
+        visited.add(name)
+        m = mult.get(name, 1)
+        for line in comps[name]:
+            w = _WHILE_RE.search(line)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                trip = _trip_count(comps.get(cond, []))
+                mult[body] = mult.get(body, 1) * m * trip
+                mult[cond] = m * trip
+                stack.append(body)
+            # follow plain calls/fusions so nested whiles under calls are seen
+            for callee in re.findall(r"(?:calls|to_apply)=%?([\w.\-]+)", line):
+                if callee not in mult:
+                    mult[callee] = m
+                    stack.append(callee)
+    return mult
+
+
+def loop_weighted_collective_stats(hlo_text: str) -> dict:
+    """collective_stats with every op weighted by its enclosing loops'
+    trip-count product."""
+    entry, comps = _parse_computations(hlo_text)
+    mults = computation_multipliers(hlo_text)
+    out: dict = {}
+    for name, lines in comps.items():
+        m = mults.get(name, 1)
+        stats = collective_stats("\n".join(lines))
+        for kind, rec in stats.items():
+            agg = out.setdefault(kind, {"bytes": 0, "count": 0})
+            agg["bytes"] += rec["bytes"] * m
+            agg["count"] += rec["count"] * m
+    return out
+
+
+@dataclass
+class Roofline:
+    flops_dev: float
+    bytes_dev: float
+    coll_bytes_dev: float
+    model_flops_global: float = 0.0
+    chips: int = 1
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time model: max of the three overlappable terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (chips * HLO_FLOPs_dev): how much compiled compute
+        is 'useful' — catches remat/redundancy waste."""
+        total = self.chips * self.flops_dev
+        return self.model_flops_global / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achieved fraction of the compute roofline if the step runs at the
+        modeled time: useful FLOPs / (chips * peak * step_time)."""
+        denom = self.chips * PEAK_FLOPS * self.step_time_s
+        return self.model_flops_global / denom if denom else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_dev": self.flops_dev,
+            "bytes_dev": self.bytes_dev,
+            "coll_bytes_dev": self.coll_bytes_dev,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "model_flops_global": self.model_flops_global,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+# ----------------------------------------------------------------------------
+# Analytic, implementation-accurate cost model.
+#
+# XLA:CPU's HloCostAnalysis counts each while-loop (lax.scan) body ONCE, so
+# the compiled-artifact counters undercount scanned programs by the trip-
+# count product (verified: gemma2 train_4k reports ~3000x fewer FLOPs than
+# 6ND).  The dry-run therefore records BOTH the raw counters and this
+# analytic model, which mirrors the compiled program exactly: chunked
+# attention computes the full (masked) S_kv per query block, remat re-runs
+# each group's forward on the backward pass, MoE compute includes the
+# capacity-factor padding.  The deltas between analytic "impl" FLOPs and
+# 6ND "useful" FLOPs are the hillclimb targets of §Perf.
+# ----------------------------------------------------------------------------
+
+
+def _fwd_flops_per_token(cfg, s_ctx: int, *, decode: bool) -> dict:
+    """Forward FLOPs per token, by component, for ONE layer of each kind."""
+    d, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    out = {}
+    # attention: qkv + out projections, then scores/values against s_ctx keys
+    proj = 2 * d * dh * (H + 2 * K) + 2 * H * dh * d
+    attn_mix = 4 * H * dh * s_ctx
+    out["attn"] = proj + attn_mix
+    out["attn_local"] = proj + 4 * H * dh * (min(cfg.window, s_ctx) if decode
+                                             else s_ctx)  # train path scans all kv blocks (masked)
+    if cfg.d_ff:
+        out["mlp"] = (6 if cfg.glu else 4) * d * cfg.d_ff
+    if cfg.n_experts:
+        fe = cfg.d_ff_expert
+        slots = cfg.top_k * (1.0 if decode else cfg.capacity_factor)
+        moe = 2 * d * cfg.n_experts + slots * (6 if cfg.glu else 4) * d * fe
+        moe += cfg.n_shared_experts * 6 * d * fe
+        out["moe"] = moe
+    if cfg.ssm_state:
+        di, N, Hs, Ps = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+        Q = 1 if decode else cfg.ssm_chunk
+        proj_s = 2 * d * (2 * di + 2 * N + Hs) + 2 * di * d
+        conv = 2 * cfg.ssm_conv * (di + 2 * N)
+        if decode:
+            mix = 4 * Hs * N * Ps
+        else:
+            mix = 2 * Q * N + 3 * Q * Hs + 2 * Q * Hs * Ps + 4 * Hs * N * Ps
+        out["ssd"] = proj_s + conv + mix
+    if cfg.rnn_width:
+        W = cfg.rnn_width
+        out["rglru"] = 6 * d * W + 4 * W * W + 2 * cfg.rnn_conv * W + 12 * W
+    return out
+
+
+def analytic_cost(cfg, kind: str, seq_len: int, global_batch: int, *,
+                  chips: int, model_shards: int, microbatches: int = 1,
+                  param_bytes_dev: float = 0.0) -> dict:
+    """(flops_dev, bytes_dev) of the compiled program, first-order model."""
+    d, Vp = cfg.d_model, cfg.padded_vocab
+    decode = kind == "decode"
+    tokens_global = global_batch * (1 if decode else seq_len)
+    tokens_dev = tokens_global / max(chips / model_shards, 1)
+    s_ctx = seq_len  # decode: cache length; train/prefill: full sequence
+    comp = _fwd_flops_per_token(cfg, s_ctx, decode=decode)
+
+    per_tok = 0.0
+    for i in range(cfg.n_layers):
+        k = cfg.layer_pattern[i % cfg.pattern_period]
+        per_tok += comp[k]
+        if cfg.n_experts and k in ("attn", "attn_local"):
+            per_tok += comp["moe"]
+        elif cfg.d_ff and k in ("attn", "attn_local", "rglru"):
+            per_tok += comp["mlp"]
+    per_tok += 2 * d * Vp  # unembedding (loss / logits)
+    if cfg.is_encdec and not decode:
+        enc_tok_ratio = 1.0 / cfg.enc_ratio
+        enc = cfg.enc_layers * (comp["attn"] + comp.get("mlp", 0.0))
+        per_tok += enc * enc_tok_ratio
+        # cross attention per decoder layer
+        proj = 2 * d * cfg.d_head * (cfg.n_heads + 2 * cfg.n_kv_heads) + \
+            2 * cfg.n_heads * cfg.d_head * d
+        per_tok += cfg.n_layers * (proj + 4 * cfg.n_heads * cfg.d_head *
+                                   (seq_len // cfg.enc_ratio))
+    if cfg.is_encdec and decode:
+        proj = 2 * d * cfg.d_head * (cfg.n_heads + 2 * cfg.n_kv_heads) + \
+            2 * cfg.n_heads * cfg.d_head * d
+        per_tok += cfg.n_layers * (proj + 4 * cfg.n_heads * cfg.d_head *
+                                   (seq_len // cfg.enc_ratio))
+
+    fwd_flops_global = per_tok * tokens_global
+    if kind == "train":
+        # fwd + remat re-fwd + backward(2x fwd) = 4 forward-equivalents
+        total_global = 4.0 * fwd_flops_global
+    else:
+        total_global = fwd_flops_global
+    flops_dev = total_global / chips
+
+    # ---- HBM bytes per device (first-order) ----
+    bts = jnp_dtype_size(cfg.dtype)
+    n_params_dev = param_bytes_dev / bts if param_bytes_dev else \
+        cfg.param_count() * 1.0 / chips
+    if kind == "train":
+        passes = 3 * microbatches            # fwd + re-fwd + bwd per mb
+        weight_traffic = passes * n_params_dev * bts
+        opt_traffic = n_params_dev * (4 + 8 + 8 + 2 * bts)  # g + m+v rw + p rw
+        act_traffic = 6 * cfg.n_layers * tokens_dev * d * bts
+        logits_traffic = 4 * tokens_dev * Vp / model_shards * bts
+        bytes_dev = weight_traffic + opt_traffic + act_traffic + logits_traffic
+    elif kind == "prefill":
+        act_traffic = 4 * cfg.n_layers * tokens_dev * d * bts
+        cache_write = _cache_bytes_dev(cfg, seq_len, global_batch, chips,
+                                       model_shards)
+        bytes_dev = n_params_dev * bts + act_traffic + cache_write
+    else:  # decode: read every weight + the whole cache once per token
+        cache_read = _cache_bytes_dev(cfg, seq_len, global_batch, chips,
+                                      model_shards)
+        bytes_dev = n_params_dev * bts + cache_read + \
+            8 * tokens_dev * cfg.n_layers * d
+    return {"flops_dev": flops_dev, "bytes_dev": bytes_dev,
+            "fwd_flops_global": fwd_flops_global}
+
+
+def _cache_bytes_dev(cfg, seq_len, global_batch, chips, model_shards) -> float:
+    bts = jnp_dtype_size(cfg.dtype)
+    total = 0.0
+    for i in range(cfg.n_layers):
+        k = cfg.layer_pattern[i % cfg.pattern_period]
+        if k == "attn":
+            total += 2 * seq_len * cfg.n_kv_heads * cfg.d_head * bts
+        elif k == "attn_local":
+            total += 2 * min(cfg.window or seq_len, seq_len) * \
+                cfg.n_kv_heads * cfg.d_head * bts
+        elif k == "ssd":
+            total += cfg.ssm_heads * cfg.ssm_state * cfg.ssm_headdim * 4 + \
+                (cfg.ssm_conv - 1) * (cfg.d_inner + 2 * cfg.ssm_state) * bts
+        elif k == "rglru":
+            total += cfg.rnn_width * (4 + (cfg.rnn_conv - 1) * bts)
+    return total * global_batch / chips
+
+
+def jnp_dtype_size(dtype: str) -> int:
+    return {"bfloat16": 2, "float16": 2, "float32": 4}.get(dtype, 2)
+
+
+def model_flops(cfg, kind: str, seq_len: int, global_batch: int) -> float:
+    """MODEL_FLOPS = 6 N D (train) / 2 N D (forward-only), N = active params
+    (MoE counts routed top-k + shared only), D = tokens processed."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = seq_len * global_batch
+        return 6.0 * n_active * tokens
+    if kind == "prefill":
+        tokens = seq_len * global_batch
+        return 2.0 * n_active * tokens
+    if kind == "decode":
+        tokens = 1 * global_batch          # one new token per sequence
+        return 2.0 * n_active * tokens
+    raise ValueError(kind)

@@ -1,0 +1,5 @@
+"""Serving: batched LM engine + sketch index service."""
+from .engine import Engine, Request
+from .sketch_service import SketchIndex
+
+__all__ = ["Engine", "Request", "SketchIndex"]

@@ -1,0 +1,89 @@
+"""Batched LM serving engine: prefill + decode with KV caches / recurrent
+state, greedy or temperature sampling, simple continuous batching over a
+request queue (pad-to-batch, evict finished)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_fn, prefill_fn
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Static-batch serving engine (continuous batching at batch
+    granularity: a new wave starts when the current wave drains)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 8,
+                 max_len: int = 256, temperature: float = 0.0, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batch = batch_size
+        self.max_len = max_len
+        self.temperature = temperature
+        self._prefill = jax.jit(prefill_fn(cfg, max_len=max_len))
+        self._decode = jax.jit(decode_fn(cfg))
+        self._key = jax.random.PRNGKey(seed)
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < self.cfg.vocab_size,
+                           logits, -1e30)
+        if self.temperature <= 0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(sub, logits / self.temperature).astype(jnp.int32)
+
+    def generate_wave(self, requests: list[Request]) -> list[Request]:
+        """Run one wave of at most ``batch`` requests to completion."""
+        wave = requests[: self.batch]
+        B = self.batch
+        S = max(len(r.prompt) for r in wave)
+        qb = self.cfg.attn_q_block
+        S = max(-(-S // qb) * qb, qb)
+        toks = np.zeros((B, S), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.vision_tokens:
+            batch["image_embeds"] = jnp.zeros(
+                (B, self.cfg.vision_tokens, self.cfg.d_model), jnp.float32)
+        if self.cfg.is_encdec:
+            batch["frames"] = jnp.zeros(
+                (B, max(S // self.cfg.enc_ratio, 1), self.cfg.d_model),
+                jnp.float32)
+        logits, state = self._prefill(self.params, batch)
+        tok = self._sample(logits)
+        steps = max(r.max_new_tokens for r in wave)
+        for _ in range(steps):
+            for i, r in enumerate(wave):
+                if not r.done and len(r.output) < r.max_new_tokens:
+                    r.output.append(int(tok[i]))
+                    if len(r.output) >= r.max_new_tokens:
+                        r.done = True
+            if all(r.done for r in wave):
+                break
+            logits, state = self._decode(self.params, state, tok[:, None])
+            tok = self._sample(logits)
+        return wave
+
+    def serve(self, requests: list[Request]) -> list[Request]:
+        pending = list(requests)
+        finished = []
+        while pending:
+            wave = self.generate_wave(pending)
+            finished.extend(wave)
+            pending = pending[len(wave):]
+        return finished

@@ -1,0 +1,15 @@
+"""Training substrate: optimizer, loop, checkpointing, fault tolerance,
+gradient telemetry."""
+from .optimizer import AdamWState, Optimizer, adamw, global_norm, warmup_cosine
+from .loop import make_train_step, train_loop
+from .checkpoint import Checkpointer
+from .fault_tolerance import HeartbeatMonitor, StepWatchdog, run_with_recovery
+from .telemetry import (GradSketch, grad_cosine, grad_inner_product,
+                        gradient_noise_scale, sketch_grads)
+
+__all__ = [
+    "AdamWState", "Optimizer", "adamw", "global_norm", "warmup_cosine",
+    "make_train_step", "train_loop", "Checkpointer", "HeartbeatMonitor",
+    "StepWatchdog", "run_with_recovery", "GradSketch", "grad_cosine",
+    "grad_inner_product", "gradient_noise_scale", "sketch_grads",
+]

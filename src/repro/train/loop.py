@@ -1,0 +1,92 @@
+"""Training step + loop: microbatch gradient accumulation, jit'd optimizer
+update, periodic checkpointing, fault-tolerant restart hooks.
+
+``make_train_step`` builds the jit-able (params, opt_state, batch) ->
+(params, opt_state, metrics) function used both by the real loop and by the
+multi-pod dry-run (launch/dryrun.py lowers exactly this function).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn as model_loss_fn
+
+from .optimizer import Optimizer
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer, *,
+                    microbatches: int = 1,
+                    loss_fn: Optional[Callable] = None) -> Callable:
+    loss_fn = loss_fn or (lambda p, b: model_loss_fn(cfg, p, b))
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def reshape(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches)
+                             + x.shape[1:])
+
+        mb_batch = jax.tree.map(reshape, batch)
+
+        def mb_step(carry, mb):
+            loss_acc, grads_acc = carry
+            (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            grads_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / microbatches,
+                grads_acc, grads)
+            return (loss_acc + loss / microbatches, grads_acc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(mb_step, (jnp.zeros(()), zeros), mb_batch)
+        return loss, {"ce_loss": loss}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        params, opt_state, opt_metrics = optimizer.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, params, opt_state, data_iter, train_step, *,
+               n_steps: int, start_step: int = 0,
+               checkpointer=None, checkpoint_every: int = 0,
+               watchdog=None, log_every: int = 10,
+               log_fn: Callable = print) -> tuple:
+    """Drives training with periodic async checkpoints and step-time
+    watchdog hooks.  Returns (params, opt_state, history)."""
+    step_fn = jax.jit(train_step)
+    history = []
+    for step in range(start_step, n_steps):
+        t0 = time.monotonic()
+        batch = next(data_iter)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if watchdog is not None or step % max(log_every, 1) == 0:
+            jax.block_until_ready(metrics["loss"])
+        dt = time.monotonic() - t0
+        if watchdog is not None:
+            watchdog.observe(step, dt)
+        if step % max(log_every, 1) == 0:
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec.update(step=step, step_time_s=dt)
+            history.append(rec)
+            log_fn(f"step {step:6d} loss {rec.get('loss', float('nan')):.4f} "
+                   f"({dt*1e3:.0f} ms)")
+        if checkpointer is not None and checkpoint_every and \
+                step > start_step and step % checkpoint_every == 0:
+            checkpointer.save(step, {"params": params, "opt_state": opt_state})
+    if checkpointer is not None and checkpoint_every:
+        checkpointer.save(n_steps, {"params": params, "opt_state": opt_state})
+        checkpointer.wait()
+    return params, opt_state, history

@@ -1,0 +1,78 @@
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (countsketch, countsketch_estimate, jl_estimate,
+                        jl_sketch, minhash_estimate, minhash_sketch,
+                        wmh_estimate, wmh_sketch)
+
+
+def test_jl_unbiased_and_error_scale(vector_pair):
+    a, b = vector_pair
+    a, b = jnp.array(a), jnp.array(b)
+    true = float(jnp.dot(a, b))
+    m = 400
+    ests = np.array([float(jl_estimate(jl_sketch(a, m, s), jl_sketch(b, m, s)))
+                     for s in range(40)])
+    scale = float(jnp.linalg.norm(a) * jnp.linalg.norm(b))
+    se = ests.std() / np.sqrt(len(ests))
+    assert abs(ests.mean() - true) < 4 * se + 1e-3
+    assert ests.std() < 3 * scale / np.sqrt(m)
+
+
+def test_countsketch_unbiased(vector_pair):
+    a, b = vector_pair
+    a, b = jnp.array(a), jnp.array(b)
+    true = float(jnp.dot(a, b))
+    ests = np.array([float(countsketch_estimate(countsketch(a, 400, s), countsketch(b, 400, s)))
+                     for s in range(60)])
+    se = ests.std() / np.sqrt(len(ests))
+    assert abs(ests.mean() - true) < 4 * se + 1e-3
+
+
+def test_countsketch_shape_and_linear():
+    a = jnp.array(np.random.default_rng(0).standard_normal(1000), jnp.float32)
+    s1 = countsketch(a, 64, 7)
+    s2 = countsketch(2.0 * a, 64, 7)
+    assert s1.shape == (64,)
+    assert np.allclose(np.asarray(2.0 * s1), np.asarray(s2), rtol=1e-6)
+
+
+def test_minhash_reasonable(vector_pair):
+    a, b = vector_pair
+    a, b = jnp.array(a), jnp.array(b)
+    true = float(jnp.dot(a, b))
+    norm = float(jnp.linalg.norm(a) * jnp.linalg.norm(b))
+    ests = np.array([float(minhash_estimate(minhash_sketch(a, 256, s), minhash_sketch(b, 256, s)))
+                     for s in range(20)])
+    # MH is coarse; just require the scaled error stays bounded
+    assert np.mean(np.abs(ests - true)) / norm < 0.25
+
+
+def test_wmh_reasonable(vector_pair):
+    a, b = vector_pair
+    a, b = jnp.array(a), jnp.array(b)
+    true = float(jnp.dot(a, b))
+    norm = float(jnp.linalg.norm(a) * jnp.linalg.norm(b))
+    ests = np.array([float(wmh_estimate(wmh_sketch(a, 128, s), wmh_sketch(b, 128, s)))
+                     for s in range(10)])
+    assert np.mean(np.abs(ests - true)) / norm < 0.25
+
+
+def test_weighted_sampling_beats_linear_sketching_low_overlap():
+    """Headline claim (Figure 3): at low overlap TS/PS-weighted error is far
+    below JL/CountSketch at equal m."""
+    from conftest import make_pair
+    from repro.core import estimate_inner_product, priority_sketch
+    rng = np.random.default_rng(9)
+    a, b = make_pair(rng, overlap=0.05)
+    a, b = jnp.array(a), jnp.array(b)
+    true = float(jnp.dot(a, b))
+    m = 300
+
+    ps = np.array([float(estimate_inner_product(priority_sketch(a, m, s), priority_sketch(b, m, s)))
+                   for s in range(30)])
+    cs = np.array([float(countsketch_estimate(countsketch(a, m, s), countsketch(b, m, s)))
+                   for s in range(30)])
+    ps_err = np.mean(np.abs(ps - true))
+    cs_err = np.mean(np.abs(cs - true))
+    assert ps_err * 2 < cs_err, (ps_err, cs_err)

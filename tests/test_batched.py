@@ -1,0 +1,54 @@
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (Sketch, estimate_all_pairs, estimate_inner_product,
+                        estimate_query, sketch_corpus)
+
+
+def _corpus(rng, D=12, n=3000, nnz=500):
+    A = np.zeros((D, n), np.float32)
+    for d in range(D):
+        ii = rng.choice(n, nnz, replace=False)
+        A[d, ii] = rng.uniform(-1, 1, nnz)
+        A[d, ii[:10]] = rng.uniform(3, 8, 10)
+    return A
+
+
+def test_all_pairs_matches_loop():
+    rng = np.random.default_rng(0)
+    A = _corpus(rng)
+    B = _corpus(rng)
+    SA = sketch_corpus(jnp.array(A), 128, seed=1)
+    SB = sketch_corpus(jnp.array(B), 128, seed=1)
+    est = np.asarray(estimate_all_pairs(SA, SB))
+    assert est.shape == (12, 12)
+    for i in (0, 5, 11):
+        for j in (0, 7):
+            sa = Sketch(SA.idx[i], SA.val[i], SA.tau[i])
+            sb = Sketch(SB.idx[j], SB.val[j], SB.tau[j])
+            assert np.isclose(est[i, j], float(estimate_inner_product(sa, sb)), rtol=1e-5)
+
+
+def test_query_matches_all_pairs():
+    rng = np.random.default_rng(1)
+    A = _corpus(rng, D=8)
+    SA = sketch_corpus(jnp.array(A), 100, seed=2)
+    q = Sketch(SA.idx[0], SA.val[0], SA.tau[0])
+    qv = np.asarray(estimate_query(q, SA))
+    ap = np.asarray(estimate_all_pairs(SA, SA))
+    assert np.allclose(qv, ap[0], rtol=1e-5)
+
+
+def test_batched_accuracy_mean():
+    rng = np.random.default_rng(2)
+    A = _corpus(rng, D=6)
+    true = A @ A.T
+    errs = []
+    for s in range(20):
+        SA = sketch_corpus(jnp.array(A), 256, seed=s)
+        est = np.asarray(estimate_all_pairs(SA, SA))
+        errs.append(est - true)
+    bias = np.abs(np.mean(errs, axis=0))
+    norms = np.linalg.norm(A, axis=1)
+    scale = np.outer(norms, norms)
+    assert np.all(bias / scale < 0.2), bias / scale

@@ -1,0 +1,53 @@
+import numpy as np
+import jax.numpy as jnp
+import scipy.stats
+
+from repro.core import hashing
+
+
+def test_hash_unit_range_and_determinism():
+    idx = jnp.arange(100000, dtype=jnp.int32)
+    h1 = hashing.hash_unit(123, idx)
+    h2 = hashing.hash_unit(123, idx)
+    assert np.array_equal(np.asarray(h1), np.asarray(h2))
+    h = np.asarray(h1)
+    assert h.min() > 0.0 and h.max() < 1.0
+
+
+def test_hash_unit_uniformity_ks():
+    idx = jnp.arange(200000, dtype=jnp.int32)
+    h = np.asarray(hashing.hash_unit(7, idx))
+    stat, p = scipy.stats.kstest(h, "uniform")
+    assert p > 1e-4, (stat, p)
+
+
+def test_different_seeds_decorrelated():
+    idx = jnp.arange(50000, dtype=jnp.int32)
+    h1 = np.asarray(hashing.hash_unit(1, idx))
+    h2 = np.asarray(hashing.hash_unit(2, idx))
+    r = np.corrcoef(h1, h2)[0, 1]
+    assert abs(r) < 0.02, r
+
+
+def test_hash_sign_balance():
+    idx = jnp.arange(100000, dtype=jnp.int32)
+    s = np.asarray(hashing.hash_sign(3, idx))
+    assert set(np.unique(s)) == {-1.0, 1.0}
+    assert abs(s.mean()) < 0.02
+
+
+def test_hash_bucket_uniform():
+    idx = jnp.arange(100000, dtype=jnp.int32)
+    for nb in (64, 100):  # pow2 and general
+        b = np.asarray(hashing.hash_bucket(9, idx, nb))
+        assert b.min() >= 0 and b.max() < nb
+        counts = np.bincount(b, minlength=nb)
+        chi2 = ((counts - counts.mean()) ** 2 / counts.mean()).sum()
+        # dof = nb-1; generous 6-sigma-ish bound
+        assert chi2 < (nb - 1) + 8 * np.sqrt(2 * (nb - 1)), chi2
+
+
+def test_fold_seed_streams_differ():
+    s0 = int(hashing.fold_seed(5, 0))
+    s1 = int(hashing.fold_seed(5, 1))
+    assert s0 != s1

@@ -1,0 +1,100 @@
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (combined_estimates, combined_priority_sketch,
+                        combined_threshold_sketch, empirical_correlation,
+                        estimate_join_correlation, priority_sketch)
+
+
+def make_correlated_tables(rng, n=50000, keys_a=6000, keys_b=6000, n_common=1500, rho=0.7):
+    ka = rng.choice(n, keys_a, replace=False)
+    others = np.setdiff1d(np.arange(n), ka)
+    kb = np.concatenate([ka[:n_common], rng.choice(others, keys_b - n_common, replace=False)])
+    a = np.zeros(n, np.float32)
+    b = np.zeros(n, np.float32)
+    a[ka] = rng.normal(3.0, 2.0, keys_a)
+    z = rng.standard_normal(keys_b)
+    b[kb] = 1.0 + rho * (a[kb] - 3.0) / 2.0 + np.sqrt(1 - rho ** 2) * z
+    mask = (a != 0) & (b != 0)
+    true_rho = np.corrcoef(a[mask], b[mask])[0, 1]
+    return a, b, true_rho
+
+
+def test_exact_when_keep_everything():
+    rng = np.random.default_rng(0)
+    a, b, true_rho = make_correlated_tables(rng, n=3000, keys_a=300, keys_b=300, n_common=150)
+    for fn in (combined_threshold_sketch, combined_priority_sketch):
+        sa = fn(jnp.array(a), 400, seed=1)
+        sb = fn(jnp.array(b), 400, seed=1)
+        est = float(estimate_join_correlation(sa, sb))
+        assert np.isclose(est, true_rho, atol=1e-3), (fn.__name__, est, true_rho)
+
+
+def test_estimates_unbiased_components():
+    rng = np.random.default_rng(1)
+    a, b, _ = make_correlated_tables(rng)
+    a, b = jnp.array(a), jnp.array(b)
+    mask = (a != 0) & (b != 0)
+    truth = {
+        "n": float(jnp.sum(mask)),
+        "sum_x": float(jnp.sum(jnp.where(mask, a, 0.0))),
+        "xy": float(jnp.dot(a, b)),
+        "sum_x2": float(jnp.sum(jnp.where(mask, a * a, 0.0))),
+    }
+    acc = {k: [] for k in truth}
+    for s in range(60):
+        sa = combined_priority_sketch(a, 400, seed=s)
+        sb = combined_priority_sketch(b, 400, seed=s)
+        e = combined_estimates(sa, sb)
+        for k in truth:
+            acc[k].append(float(e[k]))
+    for k, v in truth.items():
+        arr = np.array(acc[k])
+        se = arr.std() / np.sqrt(len(arr)) + 1e-6
+        assert abs(arr.mean() - v) < 5 * se + 0.01 * abs(v) + 1e-3, (k, arr.mean(), v)
+
+
+def test_correlation_accuracy():
+    rng = np.random.default_rng(2)
+    a, b, true_rho = make_correlated_tables(rng)
+    errs = []
+    for s in range(25):
+        sa = combined_priority_sketch(jnp.array(a), 400, seed=s)
+        sb = combined_priority_sketch(jnp.array(b), 400, seed=s)
+        errs.append(abs(float(estimate_join_correlation(sa, sb)) - true_rho))
+    assert np.mean(errs) < 0.12, np.mean(errs)
+
+
+def test_sketch_sizes():
+    rng = np.random.default_rng(3)
+    a, _, _ = make_correlated_tables(rng)
+    sp = combined_priority_sketch(jnp.array(a), 300, seed=0)
+    assert int(sp.size()) <= 300
+    assert int(sp.size()) >= 280  # closed-form m' should nearly fill the budget
+    st = combined_threshold_sketch(jnp.array(a), 300, seed=0)
+    assert abs(int(st.size()) - 300) < 60  # random size, expectation 300
+
+
+def test_empirical_correlation_uniform_baseline():
+    rng = np.random.default_rng(4)
+    a, b, true_rho = make_correlated_tables(rng)
+    errs = []
+    for s in range(20):
+        sa = priority_sketch(jnp.array(a), 400, seed=s, variant="uniform")
+        sb = priority_sketch(jnp.array(b), 400, seed=s, variant="uniform")
+        errs.append(abs(float(empirical_correlation(sa, sb)) - true_rho))
+    assert np.mean(errs) < 0.25, np.mean(errs)
+
+
+def test_scale_invariance():
+    """Combined sketches normalize internally; estimates must match across
+    large input scalings (float32-safe path for a^4 weights)."""
+    rng = np.random.default_rng(5)
+    a, b, _ = make_correlated_tables(rng, n=5000, keys_a=800, keys_b=800, n_common=300)
+    r1 = float(estimate_join_correlation(
+        combined_priority_sketch(jnp.array(a), 200, seed=6),
+        combined_priority_sketch(jnp.array(b), 200, seed=6)))
+    r2 = float(estimate_join_correlation(
+        combined_priority_sketch(jnp.array(a * 1e4), 200, seed=6),
+        combined_priority_sketch(jnp.array(b * 1e-3), 200, seed=6)))
+    assert np.isclose(r1, r2, atol=5e-3), (r1, r2)

@@ -1,0 +1,169 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes/dtypes, plus end-to-end consistency with the core library."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (INVALID_IDX, Sketch, estimate_inner_product,
+                        priority_sketch, sketch_corpus)
+from repro.kernels import (bucketize, bucketize_corpus, countsketch_kernel,
+                           countsketch_ref, hash_rank, hash_rank_ref,
+                           jl_project, jl_ref, query_corpus)
+from repro.kernels.intersect_estimate.ref import intersect_estimate_ref
+
+
+def _vec(rng, n, dtype=np.float32, sparsity=0.7):
+    v = rng.standard_normal(n).astype(dtype)
+    v[rng.random(n) < sparsity] = 0
+    return v
+
+
+# ----------------------------------------------------------------------------
+# hash_rank
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 100, 1024, 4096, 5000, 65536])
+@pytest.mark.parametrize("variant", ["l2", "l1", "uniform"])
+def test_hash_rank_matches_ref(n, variant):
+    rng = np.random.default_rng(n)
+    v = jnp.array(_vec(rng, n))
+    h_k, r_k = hash_rank(v, 17, variant=variant)
+    h_r, r_r = hash_rank_ref(v, 17, variant=variant)
+    np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_r))
+    np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_r), rtol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.float16])
+def test_hash_rank_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    v = jnp.array(_vec(rng, 2048, dtype=np.float32).astype(dtype))
+    h_k, r_k = hash_rank(v, 3)
+    h_r, r_r = hash_rank_ref(v, 3)
+    np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_r))
+    np.testing.assert_allclose(np.asarray(r_k), np.asarray(r_r), rtol=1e-5)
+
+
+def test_hash_rank_matches_host_sketch_path():
+    """Kernel hashes must equal core.hashing hashes (coordination)."""
+    from repro.core.hashing import hash_unit
+    n = 3000
+    h_k, _ = hash_rank(jnp.ones(n), 99)
+    h_host = hash_unit(99, jnp.arange(n, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_host))
+
+
+# ----------------------------------------------------------------------------
+# countsketch
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", [(1000, 64), (1024, 128), (5000, 400),
+                                 (8192, 512), (3000, 1000)])
+def test_countsketch_matches_ref(n, m):
+    rng = np.random.default_rng(n + m)
+    v = jnp.array(_vec(rng, n))
+    out_k = countsketch_kernel(v, m, 5, 6)
+    out_r = countsketch_ref(v, 5, 6, m)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_countsketch_estimate_consistency():
+    rng = np.random.default_rng(1)
+    a = jnp.array(_vec(rng, 4000))
+    b = jnp.array(_vec(rng, 4000))
+    true = float(jnp.dot(a, b))
+    ests = [float(jnp.dot(countsketch_kernel(a, 512, s, s + 1),
+                          countsketch_kernel(b, 512, s, s + 1)))
+            for s in range(40)]
+    se = np.std(ests) / np.sqrt(len(ests))
+    assert abs(np.mean(ests) - true) < 4 * se + 1e-3
+
+
+# ----------------------------------------------------------------------------
+# jl_rademacher
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", [(500, 64), (1024, 256), (4096, 100), (2000, 300)])
+def test_jl_matches_ref(n, m):
+    rng = np.random.default_rng(n)
+    v = jnp.array(_vec(rng, n))
+    out_k = jl_project(v, m, 11)
+    out_r = jl_ref(v, m, 11)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_jl_preserves_inner_products():
+    rng = np.random.default_rng(2)
+    a = jnp.array(_vec(rng, 3000, sparsity=0.0))
+    b = jnp.array(_vec(rng, 3000, sparsity=0.0))
+    true = float(jnp.dot(a, b))
+    ests = [float(jnp.dot(jl_project(a, 512, s), jl_project(b, 512, s)))
+            for s in range(25)]
+    se = np.std(ests) / np.sqrt(len(ests))
+    assert abs(np.mean(ests) - true) < 4 * se + 1e-2
+
+
+# ----------------------------------------------------------------------------
+# intersect_estimate (bucketized serving path)
+# ----------------------------------------------------------------------------
+
+def _make_corpus(rng, D, n=4000, nnz=600, m=128):
+    A = np.zeros((D, n), np.float32)
+    for d in range(D):
+        ii = rng.choice(n, nnz, replace=False)
+        A[d, ii] = rng.uniform(-1, 1, nnz)
+    S = sketch_corpus(jnp.array(A), m, seed=3)
+    return A, S
+
+
+@pytest.mark.parametrize("B,S", [(256, 4), (512, 4), (128, 8)])
+def test_intersect_kernel_matches_ref(B, S):
+    rng = np.random.default_rng(B)
+    _, sk = _make_corpus(rng, D=16)
+    bc = bucketize_corpus(sk, n_buckets=B, slots=S)
+    q = bucketize(Sketch(sk.idx[0], sk.val[0], sk.tau[0]), n_buckets=B, slots=S)
+    out_k = np.asarray(query_corpus(q, bc))
+    out_r = np.asarray(intersect_estimate_ref(q.idx, q.val, q.tau,
+                                              bc.idx, bc.val, bc.tau))
+    np.testing.assert_allclose(out_k, out_r, rtol=1e-5, atol=1e-5)
+
+
+def test_bucketize_preserves_entries_when_capacity_ample():
+    rng = np.random.default_rng(5)
+    _, sk = _make_corpus(rng, D=2, m=100)
+    s0 = Sketch(sk.idx[0], sk.val[0], sk.tau[0])
+    b = bucketize(s0, n_buckets=1024, slots=4)
+    assert int(b.dropped) == 0
+    orig = set(int(i) for i in np.asarray(s0.idx) if i != INVALID_IDX)
+    got = set(int(i) for i in np.asarray(b.idx).ravel() if i != INVALID_IDX)
+    assert orig == got
+
+
+def test_bucketized_estimate_matches_sorted_estimator():
+    """With zero drops the bucketized estimate equals Algorithm 2 exactly."""
+    rng = np.random.default_rng(6)
+    A, sk = _make_corpus(rng, D=8, m=100)
+    bc = bucketize_corpus(sk, n_buckets=1024, slots=4)
+    assert int(np.asarray(bc.dropped).max()) == 0
+    q = bucketize(Sketch(sk.idx[2], sk.val[2], sk.tau[2]), n_buckets=1024, slots=4)
+    out = np.asarray(query_corpus(q, bc))
+    for d in range(8):
+        ref = float(estimate_inner_product(
+            Sketch(sk.idx[2], sk.val[2], sk.tau[2]),
+            Sketch(sk.idx[d], sk.val[d], sk.tau[d])))
+        assert np.isclose(out[d], ref, rtol=1e-4, atol=1e-4), d
+
+
+def test_bucketized_query_accuracy_end_to_end():
+    rng = np.random.default_rng(7)
+    A, sk = _make_corpus(rng, D=24, m=256)
+    q_vec = A[5]
+    true = A @ q_vec
+    bc = bucketize_corpus(sk, n_buckets=512, slots=4)
+    sq = priority_sketch(jnp.array(q_vec), 256, seed=3)
+    q = bucketize(sq, n_buckets=512, slots=4)
+    est = np.asarray(query_corpus(q, bc))
+    assert np.argmax(est) == 5
+    norms = np.linalg.norm(A, axis=1) * np.linalg.norm(q_vec)
+    assert np.mean(np.abs(est - true) / norms) < 0.2

@@ -1,0 +1,72 @@
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (INVALID_IDX, estimate_inner_product, priority_sketch,
+                        weight)
+from repro.core.hashing import hash_unit
+
+
+def test_exact_size(vector_pair):
+    a, _ = vector_pair
+    a = jnp.array(a)
+    for m in (10, 100, 1000):
+        s = priority_sketch(a, m, seed=1)
+        assert int(s.size()) == m
+
+
+def test_size_min_m_nnz():
+    a = jnp.zeros(100).at[3].set(1.0).at[7].set(-2.0).at[50].set(0.5)
+    s = priority_sketch(a, 10, seed=2)
+    assert int(s.size()) == 3
+    assert np.isinf(float(s.tau))
+
+
+def test_selection_rule_exact(small_pair):
+    """K_a = the m smallest ranks h(i)/w_i; tau = (m+1)-st (Algorithm 3)."""
+    a, _ = small_pair
+    a = jnp.array(a)
+    m = 64
+    s = priority_sketch(a, m, seed=9)
+    w = np.asarray(weight(a, "l2"))
+    h = np.asarray(hash_unit(9, jnp.arange(a.shape[0], dtype=jnp.int32)))
+    ranks = np.where(w > 0, h / np.where(w > 0, w, 1), np.inf)
+    order = np.argsort(ranks)
+    expected = set(order[:m].tolist())
+    got = set(int(i) for i in np.asarray(s.idx) if i != INVALID_IDX)
+    assert got == expected
+    assert np.isclose(float(s.tau), ranks[order[m]], rtol=1e-6)
+
+
+def test_unbiased(vector_pair):
+    a, b = vector_pair
+    a, b = jnp.array(a), jnp.array(b)
+    true = float(jnp.dot(a, b))
+    ests = np.array([
+        float(estimate_inner_product(priority_sketch(a, 400, s), priority_sketch(b, 400, s)))
+        for s in range(150)])
+    se = ests.std() / np.sqrt(len(ests))
+    assert abs(ests.mean() - true) < 4 * se + 1e-3
+
+
+def test_exact_when_m_geq_nnz():
+    rng = np.random.default_rng(3)
+    a = np.zeros(500, np.float32)
+    b = np.zeros(500, np.float32)
+    a[rng.choice(500, 40, replace=False)] = rng.standard_normal(40)
+    b[rng.choice(500, 60, replace=False)] = rng.standard_normal(60)
+    sa = priority_sketch(jnp.array(a), 100, seed=4)
+    sb = priority_sketch(jnp.array(b), 100, seed=4)
+    est = float(estimate_inner_product(sa, sb))
+    assert np.isclose(est, float(np.dot(a, b)), rtol=1e-5, atol=1e-5)
+
+
+def test_coordination_shared_indices(vector_pair):
+    """Same seed => overlapping entries tend to be co-sampled; different
+    seeds => far fewer matches (the coordination property, Section 2)."""
+    from repro.core import intersection_size
+    a, b = vector_pair
+    a, b = jnp.array(a), jnp.array(b)
+    m = 400
+    same = int(intersection_size(priority_sketch(a, m, 5), priority_sketch(b, m, 5)))
+    diff = int(intersection_size(priority_sketch(a, m, 5), priority_sketch(b, m, 99)))
+    assert same > 3 * max(diff, 1), (same, diff)

@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) for the sketching invariants.
+
+The membership rules of both samplers are *deterministic* given the hash, so
+we can check exact invariants on arbitrary vectors rather than statistical
+ones.
+"""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import (INVALID_IDX, estimate_inner_product, priority_sketch,
+                        threshold_sketch, weight)
+from repro.core.hashing import hash_unit
+
+vec = hnp.arrays(
+    np.float32, st.integers(min_value=4, max_value=300),
+    elements=st.floats(min_value=-100, max_value=100, width=32,
+                       allow_nan=False, allow_infinity=False).map(
+        lambda x: np.float32(0.0) if abs(x) < 1e-3 else np.float32(x)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec, st.integers(min_value=1, max_value=50), st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_ps_size_is_min_m_nnz(a, m, seed):
+    s = priority_sketch(jnp.array(a), m, seed)
+    nnz = int(np.sum(a != 0))
+    assert int(s.size()) == min(m, nnz)
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec, st.integers(min_value=1, max_value=50), st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_ps_keeps_m_smallest_ranks(a, m, seed):
+    aj = jnp.array(a)
+    s = priority_sketch(aj, m, seed)
+    w = np.asarray(weight(aj, "l2"))
+    h = np.asarray(hash_unit(seed, jnp.arange(len(a), dtype=jnp.int32)))
+    ranks = np.where(w > 0, h / np.where(w > 0, w, 1), np.inf)
+    kept = sorted(int(i) for i in np.asarray(s.idx) if i != INVALID_IDX)
+    expected = sorted(np.argsort(ranks, kind="stable")[: min(m, int((w > 0).sum()))].tolist())
+    assert kept == expected
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec, st.integers(min_value=1, max_value=50), st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_ts_membership_rule(a, m, seed):
+    aj = jnp.array(a)
+    s = threshold_sketch(aj, m, seed)
+    w = np.asarray(weight(aj, "l2"))
+    h = np.asarray(hash_unit(seed, jnp.arange(len(a), dtype=jnp.int32)))
+    kept = set(int(i) for i in np.asarray(s.idx) if i != INVALID_IDX)
+    # avoid inf*0 when tau=inf: only multiply on the support
+    thresh = np.multiply(float(s.tau), w, where=w > 0, out=np.zeros_like(w))
+    expected = set(np.nonzero((w > 0) & (h <= thresh))[0].tolist())
+    # identical unless the (probability < 1e-4) overflow path truncated
+    if len(expected) <= s.capacity:
+        assert kept == expected
+
+
+@settings(max_examples=30, deadline=None)
+@given(vec, st.floats(min_value=0.1, max_value=10.0, allow_nan=False),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_estimator_scale_equivariance(a, c, seed):
+    """est(c*a, b) == c * est(a, b): weights scale, probabilities adapt."""
+    aj = jnp.array(a)
+    b = np.roll(a, 1).astype(np.float32)
+    bj = jnp.array(b)
+    m = 16
+    e1 = float(estimate_inner_product(priority_sketch(aj, m, seed), priority_sketch(bj, m, seed)))
+    e2 = float(estimate_inner_product(priority_sketch(aj * c, m, seed), priority_sketch(bj, m, seed)))
+    assert np.isclose(e2, c * e1, rtol=2e-4, atol=1e-4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(vec, st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_keep_everything_is_exact(a, seed):
+    aj = jnp.array(a)
+    b = (a * np.float32(0.5) + np.float32(1.0)) * (a != 0)
+    bj = jnp.array(b.astype(np.float32))
+    m = len(a) + 8
+    for fn in (threshold_sketch, priority_sketch):
+        e = float(estimate_inner_product(fn(aj, m, seed), fn(bj, m, seed)))
+        assert np.isclose(e, float(jnp.dot(aj, bj)), rtol=1e-4, atol=1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(vec, st.integers(min_value=1, max_value=30),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_sketch_idx_sorted_unique(a, m, seed):
+    for fn in (threshold_sketch, priority_sketch):
+        s = fn(jnp.array(a), m, seed)
+        idx = np.asarray(s.idx)
+        valid = idx[idx != INVALID_IDX]
+        assert np.all(np.diff(valid) > 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(vec, st.integers(min_value=1, max_value=30),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_densify_unbiased_support(a, m, seed):
+    """densify() puts mass only on sampled coordinates of a's support."""
+    from repro.core import densify
+    aj = jnp.array(a)
+    s = priority_sketch(aj, m, seed)
+    d = np.asarray(densify(s, len(a)))
+    assert np.all((d != 0) <= (a != 0))
+    assert np.all(np.sign(d[d != 0]) == np.sign(a[d != 0]))

@@ -1,0 +1,49 @@
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serve import Engine, Request, SketchIndex
+
+
+def test_engine_generates():
+    cfg = get_config("gemma2-2b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, batch_size=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=4) for i in range(3)]
+    done = eng.serve(reqs)
+    assert len(done) == 3
+    for r in done:
+        assert len(r.output) == 4
+        assert all(0 <= t < cfg.vocab_size for t in r.output)
+
+
+def test_engine_greedy_deterministic():
+    cfg = get_config("mamba2-370m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+    outs = []
+    for _ in range(2):
+        eng = Engine(cfg, params, batch_size=1, max_len=64)
+        r = eng.serve([Request(rid=0, prompt=prompt, max_new_tokens=6)])[0]
+        outs.append(tuple(r.output))
+    assert outs[0] == outs[1]
+
+
+def test_sketch_index_topk():
+    rng = np.random.default_rng(2)
+    n, D = 5000, 30
+    idx = SketchIndex(m=256, n_buckets=512)
+    vecs = []
+    for d in range(D):
+        v = np.zeros(n, np.float32)
+        ii = rng.choice(n, 400, replace=False)
+        v[ii] = rng.uniform(-1, 1, 400)
+        vecs.append(v)
+        idx.add(f"vec{d}", v)
+    q = vecs[7] + 0.05 * rng.standard_normal(n).astype(np.float32) * (vecs[7] != 0)
+    top = idx.query(q, top_k=3)
+    assert top[0][0] == "vec7"

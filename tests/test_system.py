@@ -1,0 +1,86 @@
+"""End-to-end behaviour tests for the paper's system: sketch a corpus of
+columns once, then answer inner-product / join-correlation / join-size
+queries from sketches alone — the data-discovery workflow of Sections 1/4."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (combined_priority_sketch, estimate_inner_product,
+                        estimate_join_correlation, priority_sketch,
+                        sketch_corpus, estimate_query, Sketch)
+
+
+def test_dataset_search_workflow():
+    """Repository of D columns + a query column: top-correlated column found
+    from sketches matches ground truth."""
+    rng = np.random.default_rng(0)
+    n, D = 20000, 15
+    keys_q = rng.choice(n, 3000, replace=False)
+    q = np.zeros(n, np.float32)
+    q[keys_q] = rng.normal(5, 2, len(keys_q))
+
+    corr_targets = np.linspace(-0.8, 0.9, D)
+    cols = np.zeros((D, n), np.float32)
+    for d in range(D):
+        shared = rng.choice(keys_q, 1500, replace=False)
+        own = rng.choice(np.setdiff1d(np.arange(n), keys_q), 1500, replace=False)
+        kk = np.concatenate([shared, own])
+        rho = corr_targets[d]
+        z = rng.standard_normal(len(kk))
+        cols[d, kk] = rho * (q[kk] - 5) / 2 + np.sqrt(max(1 - rho ** 2, 0.0)) * z
+
+    # ground-truth post-join correlation per column
+    true = []
+    for d in range(D):
+        mask = (q != 0) & (cols[d] != 0)
+        true.append(np.corrcoef(q[mask], cols[d][mask])[0, 1])
+    true = np.array(true)
+
+    m = 512
+    sq = combined_priority_sketch(jnp.array(q), m, seed=3)
+    ests = []
+    for d in range(D):
+        sc = combined_priority_sketch(jnp.array(cols[d]), m, seed=3)
+        ests.append(float(estimate_join_correlation(sq, sc)))
+    ests = np.array(ests)
+    assert np.mean(np.abs(ests - true)) < 0.12
+    assert np.argmax(ests) == np.argmax(true)
+
+
+def test_join_size_estimation_workflow():
+    """Join size = <fa, fb> with key-frequency vectors (Section 5.3's
+    standard reduction); skewed frequencies favour weighted sampling."""
+    rng = np.random.default_rng(1)
+    n = 30000
+    # zipf-ish frequencies on overlapping key sets
+    ka = rng.choice(n, 5000, replace=False)
+    kb = np.concatenate([ka[:1000], rng.choice(np.setdiff1d(np.arange(n), ka), 4000, replace=False)])
+    fa = np.zeros(n, np.float32)
+    fb = np.zeros(n, np.float32)
+    fa[ka] = np.floor(rng.zipf(2.0, len(ka)).clip(1, 1000)).astype(np.float32)
+    fb[kb] = np.floor(rng.zipf(2.0, len(kb)).clip(1, 1000)).astype(np.float32)
+    true = float(np.dot(fa, fb))
+
+    ests = []
+    for s in range(30):
+        sa = priority_sketch(jnp.array(fa), 400, seed=s)
+        sb = priority_sketch(jnp.array(fb), 400, seed=s)
+        ests.append(float(estimate_inner_product(sa, sb)))
+    rel = abs(np.mean(ests) - true) / true
+    assert rel < 0.15, (np.mean(ests), true)
+
+
+def test_corpus_query_service():
+    """Batched query-vs-corpus estimation returns correct ranking."""
+    rng = np.random.default_rng(2)
+    n, D = 10000, 20
+    A = np.zeros((D, n), np.float32)
+    for d in range(D):
+        ii = rng.choice(n, 800, replace=False)
+        A[d, ii] = rng.uniform(-1, 1, len(ii))
+    q = A[3] + 0.1 * rng.standard_normal(n).astype(np.float32) * (A[3] != 0)
+    true = A @ q
+
+    SA = sketch_corpus(jnp.array(A), 256, seed=5)
+    sq = priority_sketch(jnp.array(q), 256, seed=5)
+    est = np.asarray(estimate_query(sq, SA))
+    assert np.argmax(est) == np.argmax(true) == 3

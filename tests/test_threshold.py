@@ -1,0 +1,88 @@
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (INVALID_IDX, adaptive_tau, estimate_inner_product,
+                        sketch_size_high_prob, threshold_sketch, weight)
+
+
+def test_membership_rule_is_exact(small_pair):
+    """i in K_a  <=>  h(i) <= tau * w_i (Algorithm 1 line 4, deterministic)."""
+    from repro.core.hashing import hash_unit
+    a, _ = small_pair
+    a = jnp.array(a)
+    m = 100
+    s = threshold_sketch(a, m, seed=11)
+    w = np.asarray(weight(a, "l2"))
+    h = np.asarray(hash_unit(11, jnp.arange(a.shape[0], dtype=jnp.int32)))
+    expected = set(np.nonzero((w > 0) & (h <= float(s.tau) * w))[0].tolist())
+    got = set(int(i) for i in np.asarray(s.idx) if i != INVALID_IDX)
+    assert got == expected
+
+
+def test_expected_size_exact():
+    rng = np.random.default_rng(0)
+    a = np.zeros(5000, np.float32)
+    ia = rng.choice(5000, 1200, replace=False)
+    a[ia] = rng.standard_normal(1200)
+    a[ia[:30]] *= 50  # heavy entries that get capped
+    w = weight(jnp.array(a), "l2")
+    for m in (10, 100, 500, 1199, 1200, 1500):
+        tau = adaptive_tau(w, m)
+        exp_size = float(jnp.sum(jnp.minimum(1.0, tau * w)))
+        assert abs(exp_size - min(m, 1200)) < 0.01 * min(m, 1200) + 1e-3, (m, exp_size)
+
+
+def test_size_concentration(vector_pair):
+    a, _ = vector_pair
+    a = jnp.array(a)
+    m = 400
+    sizes = [int(threshold_sketch(a, m, seed=s).size()) for s in range(50)]
+    assert abs(np.mean(sizes) - m) < 3 * np.sqrt(m / 50)
+    assert max(sizes) <= sketch_size_high_prob(m, delta=1 / 50 / 4)
+
+
+def test_unbiased(vector_pair):
+    a, b = vector_pair
+    a, b = jnp.array(a), jnp.array(b)
+    true = float(jnp.dot(a, b))
+    m = 400
+    ests = np.array([
+        float(estimate_inner_product(threshold_sketch(a, m, s), threshold_sketch(b, m, s)))
+        for s in range(150)])
+    se = ests.std() / np.sqrt(len(ests))
+    assert abs(ests.mean() - true) < 4 * se + 1e-3, (ests.mean(), true, se)
+
+
+def test_sorted_and_padded(vector_pair):
+    a, _ = vector_pair
+    s = threshold_sketch(jnp.array(a), 200, seed=3)
+    idx = np.asarray(s.idx)
+    valid = idx != INVALID_IDX
+    v = idx[valid]
+    assert np.all(np.diff(v) > 0)  # strictly sorted, unique
+    assert np.all(idx[~valid] == INVALID_IDX)
+    assert np.all(np.asarray(s.val)[~valid] == 0)
+
+
+def test_variants_run(vector_pair):
+    a, b = vector_pair
+    a, b = jnp.array(a), jnp.array(b)
+    true = float(jnp.dot(a, b))
+    for variant in ("l2", "l1", "uniform"):
+        ests = [float(estimate_inner_product(
+            threshold_sketch(a, 400, s, variant=variant),
+            threshold_sketch(b, 400, s, variant=variant), variant=variant))
+            for s in range(60)]
+        m, sd = np.mean(ests), np.std(ests)
+        assert abs(m - true) < 4 * sd / np.sqrt(60) + 1e-3, (variant, m, true)
+
+
+def test_sparse_input_matches_dense(small_pair):
+    a, _ = small_pair
+    nz = np.nonzero(a)[0]
+    dense = threshold_sketch(jnp.array(a), 100, seed=5)
+    sparse = threshold_sketch(jnp.array(a[nz]), 100, seed=5,
+                              indices=jnp.array(nz, jnp.int32))
+    assert np.array_equal(np.asarray(dense.idx), np.asarray(sparse.idx))
+    assert np.allclose(np.asarray(dense.val), np.asarray(sparse.val))
+    assert np.isclose(float(dense.tau), float(sparse.tau))
