@@ -1,0 +1,146 @@
+"""All-pairs estimation throughput: the O(D^2 m) correlation/join discovery
+workload of Section 1 (and the sketch-matrix-product shape of Daliri et al.
+/ arXiv 2501.17836).
+
+Compares pairs/sec of the nested-vmap searchsorted reference
+(``core.batched.estimate_all_pairs``) against the bucketized all-pairs path
+(``kernels.estimate_all_pairs_bucketized``) at several (D, m, B, S) points.
+The bucketized contender runs the fused XLA reference formulation
+(``use_pallas=False`` — interpret-mode Pallas would only measure the
+interpreter); on TPU the same math runs as the tiled Pallas kernel.
+
+Standalone entry point writes ``BENCH_allpairs.json`` so subsequent PRs can
+track the trajectory:
+
+    PYTHONPATH=src python -m benchmarks.allpairs_throughput --json-out BENCH_allpairs.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import sketch_corpus
+from repro.core.batched import estimate_all_pairs
+from repro.kernels import bucketize_corpus, estimate_all_pairs_bucketized
+
+from .common import Csv, time_callable
+
+# (D, m, n_buckets, slots); the (512, 2) layout is the throughput
+# configuration (S^2 = 4 slot-pair passes), (512, 4) the accuracy
+# configuration (zero-drop for m <= 256, DESIGN.md §12).
+QUICK_POINTS = [
+    (64, 128, 256, 2),
+    (256, 256, 512, 2),
+    (256, 256, 512, 4),
+]
+FULL_POINTS = QUICK_POINTS + [
+    (256, 256, 256, 4),
+    (512, 256, 512, 2),
+]
+
+# acceptance point: bucketized >= 3x reference pairs/sec at D=256, m=256
+HEADLINE = (256, 256)
+HEADLINE_SPEEDUP = 3.0
+
+
+def _synthetic_corpus(rng, D: int, n: int = 8192, nnz: int = 1024):
+    A = np.zeros((D, n), np.float32)
+    for d in range(D):
+        ii = rng.choice(n, nnz, replace=False)
+        A[d, ii] = rng.uniform(-1, 1, nnz)
+    return A
+
+
+def _bench_point(D: int, m: int, B: int, S: int, *, n_rep: int = 5) -> dict:
+    rng = np.random.default_rng(D * 7 + m)
+    A = _synthetic_corpus(rng, D)
+    SA = sketch_corpus(jnp.array(A), m, seed=3)
+    BA = bucketize_corpus(SA, n_buckets=B, slots=S)
+    jax.block_until_ready(BA.idx)
+
+    reference = jax.jit(lambda S1, S2: estimate_all_pairs(S1, S2))
+    bucketized = jax.jit(
+        lambda C1, C2: estimate_all_pairs_bucketized(C1, C2, use_pallas=False))
+
+    us_ref = time_callable(reference, SA, SA, n_rep=n_rep, warmup=1)
+    us_bkt = time_callable(bucketized, BA, BA, n_rep=n_rep, warmup=1)
+
+    est_ref = np.asarray(reference(SA, SA))
+    est_bkt = np.asarray(bucketized(BA, BA))
+    norms = np.linalg.norm(A, axis=1)
+    scale = np.maximum(np.outer(norms, norms), 1e-12)
+    pairs = D * D
+    return {
+        "D": D, "m": m, "n_buckets": B, "slots": S,
+        "pairs": pairs,
+        "us_reference": us_ref,
+        "us_bucketized": us_bkt,
+        "pairs_per_sec_reference": pairs / (us_ref * 1e-6),
+        "pairs_per_sec_bucketized": pairs / (us_bkt * 1e-6),
+        "speedup": us_ref / us_bkt,
+        "dropped_mean": float(np.asarray(BA.dropped).mean()),
+        "mean_scaled_divergence": float(
+            np.mean(np.abs(est_bkt - est_ref) / scale)),
+    }
+
+
+def run(quick: bool = True) -> Csv:
+    csv = Csv()
+    points = QUICK_POINTS if quick else FULL_POINTS
+    results = []
+    for (D, m, B, S) in points:
+        r = _bench_point(D, m, B, S)
+        results.append(r)
+        tag = f"allpairs/D{D}_m{m}_B{B}_S{S}"
+        csv.add(f"{tag}/reference", r["us_reference"],
+                f"pairs_per_sec={r['pairs_per_sec_reference']:.0f}")
+        csv.add(f"{tag}/bucketized", r["us_bucketized"],
+                f"pairs_per_sec={r['pairs_per_sec_bucketized']:.0f}"
+                f";speedup={r['speedup']:.2f}"
+                f";dropped_mean={r['dropped_mean']:.1f}")
+    head = [r for r in results
+            if (r["D"], r["m"]) == HEADLINE and r["speedup"] >= HEADLINE_SPEEDUP]
+    csv.add("allpairs/validate/speedup_3x_at_D256_m256", 0.0,
+            "PASS" if head else "FAIL")
+    # drops at the throughput layout bias the estimate; keep divergence small
+    worst = max((r["mean_scaled_divergence"] for r in results), default=0.0)
+    csv.add("allpairs/validate/divergence_vs_reference", 0.0,
+            f"{'PASS' if worst < 0.05 else 'FAIL'};worst={worst:.4f}")
+    csv.results = results  # for the JSON emitter
+    return csv
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json-out", default="BENCH_allpairs.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    csv = run(quick=not args.full)
+    payload = {
+        "benchmark": "allpairs_throughput",
+        "backend": jax.default_backend(),
+        "headline": {"point": {"D": HEADLINE[0], "m": HEADLINE[1]},
+                     "required_speedup": HEADLINE_SPEEDUP},
+        "points": csv.results,
+        "rows": [{"name": n, "us_per_call": u, "derived": d}
+                 for n, u, d in csv.rows],
+    }
+    with open(args.json_out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.json_out}")
+    failures = [(n, d) for n, _, d in csv.rows
+                if "/validate/" in n and "FAIL" in d]
+    if failures:
+        print(f"# VALIDATION FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,16 +5,20 @@ Prints ``name,us_per_call,derived`` CSV rows; each module also emits
 against our implementation (EXPERIMENTS.md cross-references these).
 
 Default profile is ``quick`` (scaled-down sizes, ~15 min CPU); pass
-``--full`` for the paper-scale settings.
+``--full`` for the paper-scale settings.  ``--json-out FILE`` additionally
+writes every emitted row as JSON so benchmark runs can be committed /
+uploaded as ``BENCH_*.json`` artifacts and tracked across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
-from . import (fig3_synthetic_ip, fig4_binary, fig5_endbiased, fig6_join_corr,
-               fig7_runtime, fig9_textsim, fig10_joinsize, table2_realworld)
+from . import (allpairs_throughput, fig3_synthetic_ip, fig4_binary,
+               fig5_endbiased, fig6_join_corr, fig7_runtime, fig9_textsim,
+               fig10_joinsize, table2_realworld)
 
 MODULES = [
     ("fig3_synthetic_ip", fig3_synthetic_ip),
@@ -25,6 +29,7 @@ MODULES = [
     ("table2_realworld", table2_realworld),
     ("fig9_textsim", fig9_textsim),
     ("fig10_joinsize", fig10_joinsize),
+    ("allpairs_throughput", allpairs_throughput),
 ]
 
 
@@ -34,19 +39,30 @@ def main() -> None:
                     help="paper-scale settings (slow)")
     ap.add_argument("--only", default=None,
                     help="comma-separated module substrings")
+    ap.add_argument("--json-out", default=None,
+                    help="also write all rows to this JSON file")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failures = []
+    all_rows = []
     for name, mod in MODULES:
         if args.only and not any(tok in name for tok in args.only.split(",")):
             continue
         t0 = time.time()
         print(f"# --- {name} ---", file=sys.stderr)
         csv = mod.run(quick=not args.full)
-        for row_name, _, derived in csv.rows:
+        for row_name, us, derived in csv.rows:
+            all_rows.append({"module": name, "name": row_name,
+                             "us_per_call": us, "derived": derived})
             if "/validate/" in row_name and "FAIL" in derived:
                 failures.append((row_name, derived))
         print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump({"profile": "full" if args.full else "quick",
+                       "rows": all_rows}, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {args.json_out}", file=sys.stderr)
     if failures:
         print(f"# VALIDATION FAILURES: {failures}", file=sys.stderr)
         sys.exit(1)

@@ -20,9 +20,12 @@ from .priority import priority_sketch
 from .estimator import (estimate_inner_product, estimate_inner_product_dense,
                         intersection_size)
 from .join_correlation import (CombinedSketch, combined_estimates,
+                               combined_estimates_matrix,
                                combined_priority_sketch,
+                               combined_sketch_corpus,
                                combined_threshold_sketch,
                                correlation_from_estimates,
+                               correlation_matrix,
                                empirical_correlation,
                                estimate_join_correlation)
 from .baselines import (MinHashSketch, WMHSketch, countsketch,
@@ -39,9 +42,10 @@ __all__ = [
     "INVALID_IDX", "Sketch", "default_capacity", "densify", "weight",
     "adaptive_tau", "threshold_sketch", "priority_sketch",
     "estimate_inner_product", "estimate_inner_product_dense", "intersection_size",
-    "CombinedSketch", "combined_estimates", "combined_priority_sketch",
+    "CombinedSketch", "combined_estimates", "combined_estimates_matrix",
+    "combined_priority_sketch", "combined_sketch_corpus",
     "combined_threshold_sketch", "correlation_from_estimates",
-    "empirical_correlation", "estimate_join_correlation",
+    "correlation_matrix", "empirical_correlation", "estimate_join_correlation",
     "MinHashSketch", "WMHSketch", "countsketch", "countsketch_estimate",
     "jl_estimate", "jl_sketch", "minhash_estimate", "minhash_sketch",
     "wmh_estimate", "wmh_sketch",

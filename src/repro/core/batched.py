@@ -35,8 +35,28 @@ def sketch_corpus(A: jnp.ndarray, m: int, seed, *, method: str = "priority",
     return jax.vmap(lambda row: fn(row))(A)
 
 
-def estimate_all_pairs(SA: Sketch, SB: Sketch, *, variant: str = "l2") -> jnp.ndarray:
-    """(D1, cap) x (D2, cap) sketches -> (D1, D2) inner product estimates."""
+def estimate_all_pairs(SA: Sketch, SB: Sketch, *, variant: str = "l2",
+                       backend: str = "reference", n_buckets: int = 512,
+                       slots: int = 4) -> jnp.ndarray:
+    """(D1, cap) x (D2, cap) sketches -> (D1, D2) inner product estimates.
+
+    ``backend="reference"`` runs the exact nested-vmap searchsorted join;
+    ``backend="pallas"`` re-lays both corpora into the bucketized format and
+    runs the tiled all-pairs kernel (``estimate_all_pairs_bucketized``) —
+    identical up to bucket-overflow drops, which are rare for
+    ``n_buckets >= cap`` (DESIGN.md §4, §12).
+    """
+    if backend == "pallas":
+        # local import: repro.kernels itself imports from repro.core
+        from repro.kernels import bucketize_corpus, estimate_all_pairs_bucketized
+        BA = bucketize_corpus(SA, n_buckets=n_buckets, slots=slots)
+        BB = BA if SB is SA else \
+            bucketize_corpus(SB, n_buckets=n_buckets, slots=slots)
+        return estimate_all_pairs_bucketized(BA, BB, variant=variant)
+    if backend != "reference":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'reference' or 'pallas'")
+
     def one_vs_all(sa_idx, sa_val, sa_tau):
         sa = Sketch(sa_idx, sa_val, sa_tau)
         return jax.vmap(lambda bi, bv, bt: estimate_inner_product(

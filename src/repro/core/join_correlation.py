@@ -191,6 +191,77 @@ def estimate_join_correlation(sa: CombinedSketch, sb: CombinedSketch) -> jnp.nda
     return correlation_from_estimates(combined_estimates(sa, sb))
 
 
+# ----------------------------------------------------------------------------
+# All-pairs (correlation discovery across D columns)
+# ----------------------------------------------------------------------------
+
+
+def combined_sketch_corpus(A: jnp.ndarray, m: int, seed, *,
+                           method: str = "priority") -> CombinedSketch:
+    """Sketch every row of A: (D, n) -> CombinedSketch with leading dim D."""
+    if method == "priority":
+        fn = lambda row: combined_priority_sketch(row, m, seed)
+    elif method == "threshold":
+        fn = lambda row: combined_threshold_sketch(row, m, seed)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return jax.vmap(fn)(A)
+
+
+def _bucketized_moment_inputs(S: CombinedSketch, n_buckets: int, slots: int):
+    """Bucketize a combined-sketch corpus, carrying per-entry inclusion
+    probabilities min(1, inclusion scale) as a payload (DESIGN.md §7)."""
+    from repro.kernels import bucketize_payloads  # kernels imports repro.core
+
+    def one(i, v, t1, tv, ts, sc):
+        s = CombinedSketch(i, v, t1, tv, ts, sc)
+        p = jnp.minimum(1.0, _inclusion_scale(s, v))
+        oi, (ov, op), _ = bucketize_payloads(i, (v, p), n_buckets=n_buckets,
+                                             slots=slots)
+        # empty slots scatter to p=0; keep the kernel's p in (0, 1] contract
+        return oi, ov, jnp.where(oi == INVALID_IDX, 1.0, op)
+
+    return jax.vmap(one)(S.idx, S.val, S.tau_ones, S.tau_val, S.tau_sq,
+                         S.scale)
+
+
+def combined_estimates_matrix(SA: CombinedSketch, SB: CombinedSketch, *,
+                              backend: str = "reference",
+                              n_buckets: int = 512, slots: int = 4) -> dict:
+    """All six Eq. (9) inner products for every pair of a (D1,) x (D2,)
+    combined-sketch corpus; each dict value is a (D1, D2) array.
+
+    ``backend="pallas"`` runs the tiled all-pairs moments kernel — one
+    launch instead of D1*D2 searchsorted joins (DESIGN.md §12)."""
+    if backend == "pallas":
+        from repro.kernels import MOMENT_CHANNELS, allpairs_moments
+        ai, av, ap = _bucketized_moment_inputs(SA, n_buckets, slots)
+        bi, bv, bp = (ai, av, ap) if SB is SA else \
+            _bucketized_moment_inputs(SB, n_buckets, slots)
+        out = allpairs_moments(ai, av, ap, bi, bv, bp)
+        return {k: out[..., c] for c, k in enumerate(MOMENT_CHANNELS)}
+    if backend != "reference":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'reference' or 'pallas'")
+
+    def one_vs_all(*a_fields):
+        sa = CombinedSketch(*a_fields)
+        return jax.vmap(lambda *b_fields: combined_estimates(
+            sa, CombinedSketch(*b_fields)))(*SB)
+    return jax.vmap(one_vs_all)(*SA)
+
+
+def correlation_matrix(SA: CombinedSketch, SB: CombinedSketch | None = None, *,
+                       backend: str = "reference", n_buckets: int = 512,
+                       slots: int = 4) -> jnp.ndarray:
+    """(D1, D2) post-join Pearson correlation estimates — the discovery
+    workload of Section 1, one kernel launch under ``backend="pallas"``."""
+    SB = SA if SB is None else SB
+    e = combined_estimates_matrix(SA, SB, backend=backend,
+                                  n_buckets=n_buckets, slots=slots)
+    return correlation_from_estimates(e)
+
+
 def empirical_correlation(sa, sb) -> jnp.ndarray:
     """Correlation of the *matched sample values* (the [52]-style estimator
     used by the uniform-sampling baselines in Section 5.1.3)."""

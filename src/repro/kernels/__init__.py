@@ -7,20 +7,28 @@ VMEM tiling), ``ops.py`` (jit'd public wrapper, interpret=True off-TPU) and
 - ``hash_rank``          fused hash + sampling rank (the O(N) loop of Algs 1/3)
 - ``countsketch``        CountSketch as one-hot MXU matmuls (scatter-free)
 - ``jl_rademacher``      matrix-free JL projection (Pi regenerated in VMEM)
-- ``intersect_estimate`` bucketized batched estimator (the O(D^2 m) serving path)
+- ``intersect_estimate`` bucketized batched estimator: one query vs a corpus
+  (serving path) and the tiled all-pairs / co-moments kernel that emits the
+  full (D1, D2) estimate matrix in one launch (the O(D^2 m) workload)
 """
 from .hash_rank import hash_rank, hash_rank_ref
 from .countsketch import countsketch as countsketch_kernel
 from .countsketch import countsketch_ref
 from .jl_rademacher import jl_project, jl_ref
-from .intersect_estimate import (BucketizedSketch, bucketize,
-                                 bucketize_corpus, intersect_estimate_ref,
-                                 query_corpus)
+from .intersect_estimate import (MOMENT_CHANNELS, BucketizedSketch,
+                                 allpairs_estimate_ref, allpairs_moments,
+                                 bucketize, bucketize_corpus,
+                                 bucketize_payloads,
+                                 estimate_all_pairs_bucketized,
+                                 intersect_estimate_ref, query_corpus,
+                                 round_up_pow2, slot_inclusion_probs)
 
 __all__ = [
     "hash_rank", "hash_rank_ref",
     "countsketch_kernel", "countsketch_ref",
     "jl_project", "jl_ref",
-    "BucketizedSketch", "bucketize", "bucketize_corpus",
-    "intersect_estimate_ref", "query_corpus",
+    "BucketizedSketch", "bucketize", "bucketize_corpus", "bucketize_payloads",
+    "intersect_estimate_ref", "query_corpus", "allpairs_estimate_ref",
+    "estimate_all_pairs_bucketized", "allpairs_moments",
+    "slot_inclusion_probs", "round_up_pow2", "MOMENT_CHANNELS",
 ]

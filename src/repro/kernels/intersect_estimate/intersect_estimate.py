@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: batched sketch-intersection estimation (serving path).
+"""Pallas TPU kernels: batched sketch-intersection estimation.
 
 The estimator (Algorithm 2) intersects K_a with K_b.  On CPU that is a hash
 join / sorted merge — data-dependent control flow that TPUs hate.  We
@@ -11,8 +11,19 @@ analogue of the paper's O(m) merge (DESIGN.md §4) and is what makes the
 O(D^2 m) all-pairs workload of Section 1 MXU/VPU-friendly.
 
 Layout per sketch: idx (B, S) int32 (INVALID-padded), val (B, S) f32, tau
-scalar.  The kernel scans corpus tiles of CT sketches against one query
-held in VMEM, emitting CT estimates per grid step.
+scalar.  Two kernels share the layout:
+
+- ``intersect_estimate_pallas``: one query held in VMEM scanned against
+  corpus tiles of ``ct`` sketches (the serving path).
+- ``allpairs_estimate_pallas``: a (QT x CT) grid over *two* corpora that
+  emits the full (D1, D2) estimate matrix in one launch — the all-pairs
+  join/correlation-discovery workload (DESIGN.md §12).  Inclusion
+  probabilities are precomputed per slot on the host (O(D B S), trivial
+  next to the O(D^2 B S^2) kernel work), which keeps the kernel agnostic
+  of the weight variant and lets the join-correlation path reuse it with
+  its max-of-three-families probabilities (DESIGN.md §7).  With
+  ``moments=True`` the kernel accumulates all six co-moment channels of
+  Eq. (9) — (1,a,a^2) x (1,b,b^2) — in one pass over the intersection.
 """
 from __future__ import annotations
 
@@ -24,25 +35,29 @@ import numpy as np
 from jax.experimental import pallas as pl
 
 INVALID_IDX = np.int32(np.iinfo(np.int32).max)
-CT = 8  # corpus sketches per grid step
+CT = 8   # default corpus sketches per grid step
+QT = 8   # default query-side sketches per grid step (all-pairs kernel)
+
+# channel order of the moments=True output (matches Eq. (9) notation)
+MOMENT_CHANNELS = ("n", "sum_x", "sum_y", "xy", "sum_x2", "sum_y2")
 
 
 def _kernel(qidx_ref, qval_ref, qtau_ref, cidx_ref, cval_ref, ctau_ref,
-            out_ref, *, slots: int):
+            out_ref, *, slots: int, ct: int):
     qi = qidx_ref[...]                # (B, S)
     qv = qval_ref[...].astype(jnp.float32)
     qt = qtau_ref[0, 0]
-    ci = cidx_ref[...]                # (CT, B, S)
+    ci = cidx_ref[...]                # (ct, B, S)
     cv = cval_ref[...].astype(jnp.float32)
-    ctau = ctau_ref[...]              # (1, CT)
+    ctau = ctau_ref[...]              # (1, ct)
 
     wq = qv * qv                      # (B, S)
-    wc = cv * cv                      # (CT, B, S)
+    wc = cv * cv                      # (ct, B, S)
     # inclusion prob factors; inf*0 avoided by masking on idx validity below
     pq = jnp.minimum(1.0, qt * wq)                                   # (B, S)
-    pc = jnp.minimum(1.0, ctau.reshape(-1, 1, 1) * wc)               # (CT, B, S)
+    pc = jnp.minimum(1.0, ctau.reshape(-1, 1, 1) * wc)               # (ct, B, S)
 
-    acc = jnp.zeros((CT,), jnp.float32)
+    acc = jnp.zeros((ct,), jnp.float32)
     for s in range(slots):            # static S x S compare, 3D ops only
         qi_s = qi[:, s]                                              # (B,)
         qv_s = qv[:, s]
@@ -52,17 +67,17 @@ def _kernel(qidx_ref, qval_ref, qtau_ref, cidx_ref, cval_ref, ctau_ref,
         p = jnp.where(eq, p, 1.0)
         terms = jnp.where(eq, qv_s[None, :, None] * cv / p, 0.0)
         acc = acc + jnp.sum(terms, axis=(1, 2))
-    out_ref[...] = acc.reshape(1, CT)
+    out_ref[...] = acc.reshape(1, ct)
 
 
 def intersect_estimate_pallas(q_idx, q_val, q_tau, c_idx, c_val, c_tau, *,
-                              interpret: bool = True) -> jnp.ndarray:
-    """q: (B,S) bucketized query; c: (C,B,S) corpus, C % CT == 0.
+                              ct: int = CT, interpret: bool = True) -> jnp.ndarray:
+    """q: (B,S) bucketized query; c: (C,B,S) corpus, C % ct == 0.
     Returns (C,) inner product estimates."""
     C, B, S = c_idx.shape
-    assert C % CT == 0
-    grid = (C // CT,)
-    kern = functools.partial(_kernel, slots=S)
+    assert C % ct == 0
+    grid = (C // ct,)
+    kern = functools.partial(_kernel, slots=S, ct=ct)
     out = pl.pallas_call(
         kern,
         out_shape=jax.ShapeDtypeStruct((1, C), jnp.float32),
@@ -71,11 +86,104 @@ def intersect_estimate_pallas(q_idx, q_val, q_tau, c_idx, c_val, c_tau, *,
             pl.BlockSpec((B, S), lambda i: (0, 0)),
             pl.BlockSpec((B, S), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
-            pl.BlockSpec((CT, B, S), lambda i: (i, 0, 0)),
-            pl.BlockSpec((CT, B, S), lambda i: (i, 0, 0)),
-            pl.BlockSpec((1, CT), lambda i: (0, i)),
+            pl.BlockSpec((ct, B, S), lambda i: (i, 0, 0)),
+            pl.BlockSpec((ct, B, S), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, ct), lambda i: (0, i)),
         ],
-        out_specs=pl.BlockSpec((1, CT), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((1, ct), lambda i: (0, i)),
         interpret=interpret,
     )(q_idx, q_val, q_tau.reshape(1, 1), c_idx, c_val, c_tau.reshape(1, C))
     return out.reshape(C)
+
+
+def _allpairs_kernel(aidx_ref, aval_ref, ap_ref, bidx_ref, bval_ref, bp_ref,
+                     out_ref, *, slots: int, moments: bool):
+    """One (qt, ct) output tile: every A sketch in the tile vs every B sketch.
+
+    All intermediates are 3D (qt, ct, B) — the static S x S slot loop keeps
+    the compare VPU-friendly exactly like the per-query kernel above.  Two
+    algebraic moves keep the inner loop lean (DESIGN.md §12): the reciprocal
+    probability is hoisted (1/min(pa, pb) == max(1/pa, 1/pb), computed once
+    per tile), and the two sides' padding is remapped to *distinct negative*
+    sentinels (-1 / -2) — real indices are >= 0, so padding can match
+    neither padding nor data and the loop needs no validity mask.
+    """
+    ai = aidx_ref[...]                       # (qt, B, S)
+    ai = jnp.where(ai == INVALID_IDX, -1, ai)
+    av = aval_ref[...].astype(jnp.float32)
+    ar = 1.0 / ap_ref[...]                   # ap = min(1, tau_a w_a) > 0
+    bi = bidx_ref[...]                       # (ct, B, S)
+    bi = jnp.where(bi == INVALID_IDX, -2, bi)
+    bv = bval_ref[...].astype(jnp.float32)
+    br = 1.0 / bp_ref[...]
+
+    qt, _, _ = ai.shape
+    ct = bi.shape[0]
+    n_ch = len(MOMENT_CHANNELS) if moments else 1
+    acc = [jnp.zeros((qt, ct), jnp.float32) for _ in range(n_ch)]
+    for sq in range(slots):
+        ai_s = ai[:, :, sq][:, None, :]      # (qt, 1, B)
+        av_s = av[:, :, sq][:, None, :]
+        ar_s = ar[:, :, sq][:, None, :]
+        for sc in range(slots):
+            bi_s = bi[:, :, sc][None, :, :]  # (1, ct, B)
+            bv_s = bv[:, :, sc][None, :, :]
+            br_s = br[:, :, sc][None, :, :]
+            eq = ai_s == bi_s                                       # (qt,ct,B)
+            if moments:
+                inv = jnp.where(eq, jnp.maximum(ar_s, br_s), 0.0)
+                acc[0] += jnp.sum(inv, axis=2)                      # n
+                acc[1] += jnp.sum(av_s * inv, axis=2)               # sum_x
+                acc[2] += jnp.sum(bv_s * inv, axis=2)               # sum_y
+                acc[3] += jnp.sum(av_s * bv_s * inv, axis=2)        # xy
+                acc[4] += jnp.sum(av_s * av_s * inv, axis=2)        # sum_x2
+                acc[5] += jnp.sum(bv_s * bv_s * inv, axis=2)        # sum_y2
+            else:
+                terms = av_s * bv_s * jnp.maximum(ar_s, br_s)
+                acc[0] += jnp.sum(jnp.where(eq, terms, 0.0), axis=2)
+    if moments:
+        out_ref[...] = jnp.stack(acc, axis=-1)                      # (qt,ct,6)
+    else:
+        out_ref[...] = acc[0]                                       # (qt,ct)
+
+
+def allpairs_estimate_pallas(a_idx, a_val, a_p, b_idx, b_val, b_p, *,
+                             qt: int = QT, ct: int = CT,
+                             moments: bool = False,
+                             interpret: bool = True) -> jnp.ndarray:
+    """Tiled all-pairs estimation over two bucketized corpora.
+
+    a: (D1, B, S) idx/val plus per-slot inclusion probs ``a_p`` (same shape,
+    values in (0, 1], 1.0 at padding); b: (D2, B, S) likewise.  D1 % qt == 0
+    and D2 % ct == 0 (pad with INVALID_IDX rows — see ops.py).  Returns the
+    (D1, D2) estimate matrix, or (D1, D2, 6) co-moment channels in
+    ``MOMENT_CHANNELS`` order when ``moments=True``.
+    """
+    D1, B, S = a_idx.shape
+    D2 = b_idx.shape[0]
+    assert D1 % qt == 0 and D2 % ct == 0, (D1, qt, D2, ct)
+    grid = (D1 // qt, D2 // ct)
+    kern = functools.partial(_allpairs_kernel, slots=S, moments=moments)
+    if moments:
+        out_shape = jax.ShapeDtypeStruct((D1, D2, len(MOMENT_CHANNELS)),
+                                         jnp.float32)
+        out_spec = pl.BlockSpec((qt, ct, len(MOMENT_CHANNELS)),
+                                lambda i, j: (i, j, 0))
+    else:
+        out_shape = jax.ShapeDtypeStruct((D1, D2), jnp.float32)
+        out_spec = pl.BlockSpec((qt, ct), lambda i, j: (i, j))
+    return pl.pallas_call(
+        kern,
+        out_shape=out_shape,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qt, B, S), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((qt, B, S), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((qt, B, S), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((ct, B, S), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((ct, B, S), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((ct, B, S), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=out_spec,
+        interpret=interpret,
+    )(a_idx, a_val, a_p, b_idx, b_val, b_p)

@@ -1,4 +1,18 @@
-"""Bucketized sketch layout + jit'd query-vs-corpus estimation wrapper."""
+"""Bucketized sketch layout + jit'd estimation wrappers.
+
+Layout (DESIGN.md §4): entry ``i`` of a sorted sketch lands in bucket
+``hash(i) mod B`` with at most S slots per bucket; coordinated sketches
+share the bucket seed so a shared index lands in the same bucket on both
+sides.  ``bucketize_payloads`` scatters any number of per-entry payload
+arrays through the same layout, which is how the join-correlation path
+carries its precomputed inclusion probabilities alongside the values.
+
+Estimation entry points:
+
+- ``query_corpus``       one query vs a corpus (serving path)
+- ``estimate_all_pairs_bucketized``  (D1, D2) estimate matrix in one launch
+- ``allpairs_moments``   (D1, D2, 6) co-moment channels for join-correlation
+"""
 from __future__ import annotations
 
 import functools
@@ -8,10 +22,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hashing import hash_bucket
-from repro.core.sketches import INVALID_IDX, Sketch
+from repro.core.sketches import INVALID_IDX, Sketch, weight
 
-from .intersect_estimate import CT, intersect_estimate_pallas
-from .ref import intersect_estimate_ref
+from .intersect_estimate import (CT, QT, allpairs_estimate_pallas,
+                                 intersect_estimate_pallas)
+from .ref import allpairs_estimate_ref, intersect_estimate_ref
+
+DEFAULT_BUCKET_SEED = 0xB0C4
 
 
 class BucketizedSketch(NamedTuple):
@@ -21,36 +38,56 @@ class BucketizedSketch(NamedTuple):
     dropped: jnp.ndarray  # int32: entries lost to bucket overflow
 
 
-@functools.partial(jax.jit, static_argnames=("n_buckets", "slots"))
-def bucketize(sketch: Sketch, *, n_buckets: int = 512, slots: int = 4,
-              bucket_seed: int = 0xB0C4) -> BucketizedSketch:
-    """Re-layout a sorted sketch into (B, S) buckets.
+def round_up_pow2(n: int) -> int:
+    """Smallest power of two >= n (>= 1)."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
 
-    Coordinated sketches use the same ``bucket_seed``, so a shared index
-    lands in the same bucket on both sides.  Entries beyond S per bucket
-    are dropped (counted in ``dropped``); with B >= m the expected load per
-    bucket is <= 1 and drops are rare (documented bias, DESIGN.md §4).
+
+@functools.partial(jax.jit, static_argnames=("n_buckets", "slots"))
+def bucketize_payloads(idx: jnp.ndarray, payloads: tuple, *,
+                       n_buckets: int = 512, slots: int = 4,
+                       bucket_seed: int = DEFAULT_BUCKET_SEED):
+    """Re-layout a sorted index array and per-entry payloads into (B, S).
+
+    Returns ``(out_idx (B,S) int32, out_payloads tuple of (B,S) f32,
+    dropped int32)``.  Entries beyond S per bucket are dropped (counted);
+    with B >= m the expected load per bucket is <= 1 and drops are rare
+    (documented bias, DESIGN.md §4).
     """
-    cap = sketch.idx.shape[-1]
-    valid = sketch.idx != INVALID_IDX
-    b = jnp.where(valid, hash_bucket(bucket_seed, sketch.idx, n_buckets),
+    cap = idx.shape[-1]
+    valid = idx != INVALID_IDX
+    b = jnp.where(valid, hash_bucket(bucket_seed, idx, n_buckets),
                   n_buckets)  # invalid -> sentinel bucket
     order = jnp.argsort(b)
     b_sorted = b[order]
-    idx_sorted = sketch.idx[order]
-    val_sorted = sketch.val[order]
+    idx_sorted = idx[order]
     # position within bucket = i - first index of this bucket value
     first = jnp.searchsorted(b_sorted, b_sorted, side="left")
     pos = jnp.arange(cap, dtype=jnp.int32) - first.astype(jnp.int32)
     keep = (b_sorted < n_buckets) & (pos < slots)
-    out_idx = jnp.full((n_buckets, slots), INVALID_IDX, jnp.int32)
-    out_val = jnp.zeros((n_buckets, slots), jnp.float32)
-    bi = jnp.where(keep, b_sorted, 0).astype(jnp.int32)
+    # non-kept entries scatter out of bounds and are dropped (mode="drop");
+    # redirecting them to a real cell would clobber that cell's entry
+    bi = jnp.where(keep, b_sorted, n_buckets).astype(jnp.int32)
     pi = jnp.where(keep, pos, 0)
-    out_idx = out_idx.at[bi, pi].set(jnp.where(keep, idx_sorted, out_idx[bi, pi]))
-    out_val = out_val.at[bi, pi].set(jnp.where(keep, val_sorted, out_val[bi, pi]))
+    out_idx = jnp.full((n_buckets, slots), INVALID_IDX, jnp.int32)
+    out_idx = out_idx.at[bi, pi].set(idx_sorted, mode="drop")
+    outs = []
+    for payload in payloads:
+        p_sorted = payload.astype(jnp.float32)[order]
+        out = jnp.zeros((n_buckets, slots), jnp.float32)
+        outs.append(out.at[bi, pi].set(p_sorted, mode="drop"))
     dropped = jnp.sum(valid) - jnp.sum(keep)
-    return BucketizedSketch(out_idx, out_val, sketch.tau, dropped.astype(jnp.int32))
+    return out_idx, tuple(outs), dropped.astype(jnp.int32)
+
+
+def bucketize(sketch: Sketch, *, n_buckets: int = 512, slots: int = 4,
+              bucket_seed: int = DEFAULT_BUCKET_SEED) -> BucketizedSketch:
+    """Re-layout a sorted sketch into (B, S) buckets."""
+    out_idx, (out_val,), dropped = bucketize_payloads(
+        sketch.idx, (sketch.val,), n_buckets=n_buckets, slots=slots,
+        bucket_seed=bucket_seed)
+    return BucketizedSketch(out_idx, out_val, sketch.tau, dropped)
 
 
 def bucketize_corpus(sketches: Sketch, **kw) -> BucketizedSketch:
@@ -61,6 +98,15 @@ def bucketize_corpus(sketches: Sketch, **kw) -> BucketizedSketch:
 
 def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def slot_inclusion_probs(bc: BucketizedSketch, *, variant: str = "l2") -> jnp.ndarray:
+    """Per-slot inclusion probability min(1, tau * w(val)) for a (C, B, S)
+    bucketized corpus; 1.0 at padding slots (w == 0) so inf taus from the
+    keep-everything case never produce NaN."""
+    w = weight(bc.val, variant)
+    tau = jnp.reshape(bc.tau, (-1, 1, 1))
+    return jnp.where(w > 0, jnp.minimum(1.0, tau * w), 1.0)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))
@@ -80,3 +126,57 @@ def query_corpus(q: BucketizedSketch, corpus: BucketizedSketch, *,
     out = intersect_estimate_pallas(q.idx, q.val, q.tau, ci, cv, ct,
                                     interpret=_use_interpret())
     return out[:C]
+
+
+def _pad_rows(idx, val, p, tile: int):
+    """Pad the corpus dim up to a multiple of ``tile`` with inert rows."""
+    D = idx.shape[0]
+    pad = -(-D // tile) * tile - D
+    if pad == 0:
+        return idx, val, p
+    widths = ((0, pad), (0, 0), (0, 0))
+    return (jnp.pad(idx, widths, constant_values=INVALID_IDX),
+            jnp.pad(val, widths),
+            jnp.pad(p, widths, constant_values=1.0))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("moments", "qt", "ct", "use_pallas"))
+def _allpairs_dispatch(a_idx, a_val, a_p, b_idx, b_val, b_p, *,
+                       moments: bool, qt: int, ct: int, use_pallas: bool):
+    D1, D2 = a_idx.shape[0], b_idx.shape[0]
+    if not use_pallas:
+        return allpairs_estimate_ref(a_idx, a_val, a_p, b_idx, b_val, b_p,
+                                     moments=moments)
+    ai, av, ap = _pad_rows(a_idx, a_val, a_p, qt)
+    bi, bv, bp = _pad_rows(b_idx, b_val, b_p, ct)
+    out = allpairs_estimate_pallas(ai, av, ap, bi, bv, bp, qt=qt, ct=ct,
+                                   moments=moments,
+                                   interpret=_use_interpret())
+    return out[:D1, :D2]
+
+
+def estimate_all_pairs_bucketized(A: BucketizedSketch, B: BucketizedSketch, *,
+                                  variant: str = "l2", qt: int = QT,
+                                  ct: int = CT,
+                                  use_pallas: bool = True) -> jnp.ndarray:
+    """(D1, B, S) x (D2, B, S) bucketized corpora -> (D1, D2) estimates.
+
+    One tiled kernel launch (or the fused XLA reference when
+    ``use_pallas=False``) instead of D1*D2 searchsorted joins.
+    """
+    a_p = slot_inclusion_probs(A, variant=variant)
+    b_p = slot_inclusion_probs(B, variant=variant)
+    return _allpairs_dispatch(A.idx, A.val, a_p, B.idx, B.val, b_p,
+                              moments=False, qt=qt, ct=ct,
+                              use_pallas=use_pallas)
+
+
+def allpairs_moments(a_idx, a_val, a_p, b_idx, b_val, b_p, *, qt: int = QT,
+                     ct: int = CT, use_pallas: bool = True) -> jnp.ndarray:
+    """(D1, D2, 6) co-moment channels (MOMENT_CHANNELS order) from bucketized
+    corpora with caller-supplied per-slot inclusion probabilities — the
+    join-correlation all-pairs path (DESIGN.md §7, §12)."""
+    return _allpairs_dispatch(a_idx, a_val, a_p, b_idx, b_val, b_p,
+                              moments=True, qt=qt, ct=ct,
+                              use_pallas=use_pallas)

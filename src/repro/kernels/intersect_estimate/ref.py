@@ -1,4 +1,10 @@
-"""Pure-jnp oracle for the bucketized intersection estimator."""
+"""Pure-jnp oracles for the bucketized intersection estimators.
+
+``allpairs_estimate_ref`` doubles as the fast XLA-compiled CPU path for the
+all-pairs workload: the static S x S slot loop over dense (D1, D2, B)
+compares fuses into elementwise/reduce ops, with no per-pair searchsorted
+gathers (DESIGN.md §12).
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -22,3 +28,49 @@ def intersect_estimate_ref(q_idx, q_val, q_tau, c_idx, c_val, c_tau) -> jnp.ndar
     p = jnp.where(eq, p, 1.0)
     terms = jnp.where(eq, qv[None, :, :, None] * cv[:, :, None, :] / p, 0.0)
     return jnp.sum(terms, axis=(1, 2, 3))
+
+
+def allpairs_estimate_ref(a_idx, a_val, a_p, b_idx, b_val, b_p, *,
+                          moments: bool = False) -> jnp.ndarray:
+    """Same math as ``allpairs_estimate_pallas``: (D1,B,S) x (D2,B,S) corpora
+    with precomputed per-slot inclusion probs -> (D1, D2) estimates, or
+    (D1, D2, 6) co-moment channels when ``moments=True``.
+
+    Loops the static S x S slot pairs in python so intermediates stay
+    (D1, D2, B) — the 5D broadcast (D1, D2, B, S, S) would not fit for
+    corpus-scale D.  Same algebra as the kernel: reciprocal probabilities
+    hoisted out of the loop (1/min(pa, pb) == max(1/pa, 1/pb)) and padding
+    remapped to distinct negative sentinels (real indices are >= 0) so the
+    loop needs no validity mask (DESIGN.md §12).
+    """
+    av = a_val.astype(jnp.float32)
+    bv = b_val.astype(jnp.float32)
+    ar = 1.0 / a_p
+    br = 1.0 / b_p
+    a_idx = jnp.where(a_idx == INVALID_IDX, -1, a_idx)
+    b_idx = jnp.where(b_idx == INVALID_IDX, -2, b_idx)
+    D1, B, S = a_idx.shape
+    D2 = b_idx.shape[0]
+    n_ch = 6 if moments else 1
+    acc = [jnp.zeros((D1, D2), jnp.float32) for _ in range(n_ch)]
+    for sq in range(S):
+        ai_s = a_idx[:, :, sq][:, None, :]                          # (D1,1,B)
+        av_s = av[:, :, sq][:, None, :]
+        ar_s = ar[:, :, sq][:, None, :]
+        for sc in range(S):
+            bi_s = b_idx[:, :, sc][None, :, :]                      # (1,D2,B)
+            bv_s = bv[:, :, sc][None, :, :]
+            br_s = br[:, :, sc][None, :, :]
+            eq = ai_s == bi_s                                       # (D1,D2,B)
+            if moments:
+                inv = jnp.where(eq, jnp.maximum(ar_s, br_s), 0.0)
+                acc[0] += jnp.sum(inv, axis=2)
+                acc[1] += jnp.sum(av_s * inv, axis=2)
+                acc[2] += jnp.sum(bv_s * inv, axis=2)
+                acc[3] += jnp.sum(av_s * bv_s * inv, axis=2)
+                acc[4] += jnp.sum(av_s * av_s * inv, axis=2)
+                acc[5] += jnp.sum(bv_s * bv_s * inv, axis=2)
+            else:
+                terms = av_s * bv_s * jnp.maximum(ar_s, br_s)
+                acc[0] += jnp.sum(jnp.where(eq, terms, 0.0), axis=2)
+    return jnp.stack(acc, axis=-1) if moments else acc[0]

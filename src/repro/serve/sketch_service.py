@@ -1,59 +1,117 @@
 """Sketch index service: the O(D^2 m) / query-vs-corpus serving path of the
-paper's introduction, backed by the bucketized Pallas kernel.
+paper's introduction, backed by the bucketized Pallas kernels.
 
 Vectors are sketched once on ingestion (O(N) per vector — the paper's
-headline construction cost), re-laid-out into the bucketized format, and a
-query answers all D inner-product estimates with one kernel launch."""
+headline construction cost) and bucketized *immediately* into pre-allocated
+(capacity, B, S) blocks: each ``add`` is an amortized O(m) append, not a
+full corpus rebuild.  Capacity grows by doubling and is always a power of
+two, so the jit'd kernels see a fixed corpus shape between growth events —
+no recompilation on each ingestion flush (DESIGN.md §4, §12).
+
+A query answers all D inner-product estimates with one kernel launch;
+``all_pairs`` emits the full D x D estimate matrix with one launch of the
+tiled all-pairs kernel.
+"""
 from __future__ import annotations
 
 from typing import Optional
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
-from repro.core import Sketch, priority_sketch
-from repro.kernels import bucketize, bucketize_corpus, query_corpus
+from repro.core import INVALID_IDX, priority_sketch
+from repro.kernels import (BucketizedSketch, bucketize,
+                           estimate_all_pairs_bucketized, query_corpus,
+                           round_up_pow2)
 
 
 class SketchIndex:
     def __init__(self, m: int = 256, *, n_buckets: int = 512, slots: int = 4,
-                 seed: int = 11):
+                 seed: int = 11, initial_capacity: int = 64):
         self.m = m
         self.n_buckets = n_buckets
         self.slots = slots
         self.seed = seed
         self._names: list = []
-        self._sketches: list = []
-        self._bucketized = None
+        self._cap = round_up_pow2(initial_capacity)
+        self._idx = np.full((self._cap, n_buckets, slots), INVALID_IDX,
+                            np.int32)
+        self._val = np.zeros((self._cap, n_buckets, slots), np.float32)
+        # padding rows get tau=1 so their (all-INVALID) estimates are inert
+        self._tau = np.ones((self._cap,), np.float32)
+        self._dropped = np.zeros((self._cap,), np.int32)
+        self._device_corpus: Optional[BucketizedSketch] = None
+
+    def __len__(self):
+        return len(self._names)
+
+    @property
+    def capacity(self) -> int:
+        return self._cap
+
+    @property
+    def total_dropped(self) -> int:
+        """Entries lost to bucket overflow across all indexed vectors."""
+        return int(self._dropped[: len(self._names)].sum())
+
+    def _grow(self) -> None:
+        new_cap = self._cap * 2
+
+        def extend(arr, fill):
+            out = np.full((new_cap,) + arr.shape[1:], fill, arr.dtype)
+            out[: self._cap] = arr
+            return out
+
+        self._idx = extend(self._idx, INVALID_IDX)
+        self._val = extend(self._val, 0)
+        self._tau = extend(self._tau, 1)
+        self._dropped = extend(self._dropped, 0)
+        self._cap = new_cap
 
     def add(self, name, vector: np.ndarray) -> None:
-        sk = priority_sketch(jnp.asarray(vector, jnp.float32), self.m, self.seed)
+        """Sketch + bucketize one vector and append it in place: amortized
+        O(m) — no re-bucketize of the existing corpus."""
+        sk = priority_sketch(jnp.asarray(vector, jnp.float32), self.m,
+                             self.seed)
+        b = bucketize(sk, n_buckets=self.n_buckets, slots=self.slots)
+        if len(self._names) == self._cap:
+            self._grow()
+        d = len(self._names)
+        self._idx[d] = np.asarray(b.idx)
+        self._val[d] = np.asarray(b.val)
+        self._tau[d] = float(b.tau)
+        self._dropped[d] = int(b.dropped)
         self._names.append(name)
-        self._sketches.append(sk)
-        self._bucketized = None  # rebuilt lazily
+        self._device_corpus = None  # re-upload (not re-bucketize) lazily
 
-    def _corpus(self):
-        if self._bucketized is None:
-            stacked = Sketch(
-                idx=jnp.stack([s.idx for s in self._sketches]),
-                val=jnp.stack([s.val for s in self._sketches]),
-                tau=jnp.stack([s.tau for s in self._sketches]))
-            self._bucketized = bucketize_corpus(
-                stacked, n_buckets=self.n_buckets, slots=self.slots)
-        return self._bucketized
+    def _corpus(self) -> BucketizedSketch:
+        """Occupied corpus prefix on device, rounded up to a power of two so
+        the kernels see at most 2x the live rows.  Shape still only changes
+        on doublings, so kernels never recompile per add."""
+        if self._device_corpus is None:
+            c = min(self._cap, max(round_up_pow2(max(len(self._names), 1)), 8))
+            self._device_corpus = BucketizedSketch(
+                jnp.asarray(self._idx[:c]), jnp.asarray(self._val[:c]),
+                jnp.asarray(self._tau[:c]), jnp.asarray(self._dropped[:c]))
+        return self._device_corpus
 
     def query(self, vector: np.ndarray, top_k: Optional[int] = None):
         """Inner-product estimates of ``vector`` against every indexed
         vector; one bucketized kernel launch."""
-        sq = priority_sketch(jnp.asarray(vector, jnp.float32), self.m, self.seed)
-        q = bucketize(sq, n_buckets=self.n_buckets, slots=self.slots,
-                      bucket_seed=0xB0C4)
-        est = np.asarray(query_corpus(q, self._corpus()))
+        sq = priority_sketch(jnp.asarray(vector, jnp.float32), self.m,
+                             self.seed)
+        q = bucketize(sq, n_buckets=self.n_buckets, slots=self.slots)
+        est = np.asarray(query_corpus(q, self._corpus()))[: len(self._names)]
         if top_k is None:
             return list(zip(self._names, est.tolist()))
         order = np.argsort(-est)[:top_k]
         return [(self._names[i], float(est[i])) for i in order]
 
-    def __len__(self):
-        return len(self._names)
+    def all_pairs(self, *, use_pallas: bool = True) -> np.ndarray:
+        """(D, D) inner-product estimate matrix over the indexed vectors in
+        one tiled all-pairs kernel launch."""
+        c = self._corpus()
+        est = np.asarray(estimate_all_pairs_bucketized(
+            c, c, use_pallas=use_pallas))
+        D = len(self._names)
+        return est[:D, :D]

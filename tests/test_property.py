@@ -6,6 +6,12 @@ ones.
 """
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (see requirements-dev.txt); "
+           "property tests skipped")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 

@@ -1,7 +1,10 @@
 import numpy as np
 import jax
+import jax.numpy as jnp
 
 from repro.configs import get_config
+from repro.core import Sketch, priority_sketch
+from repro.kernels import bucketize_corpus
 from repro.models import init_params
 from repro.serve import Engine, Request, SketchIndex
 
@@ -47,3 +50,64 @@ def test_sketch_index_topk():
     q = vecs[7] + 0.05 * rng.standard_normal(n).astype(np.float32) * (vecs[7] != 0)
     top = idx.query(q, top_k=3)
     assert top[0][0] == "vec7"
+
+
+def _sparse_vecs(rng, D, n=4000, nnz=300):
+    vecs = []
+    for _ in range(D):
+        v = np.zeros(n, np.float32)
+        ii = rng.choice(n, nnz, replace=False)
+        v[ii] = rng.uniform(-1, 1, nnz)
+        vecs.append(v)
+    return vecs
+
+
+def test_sketch_index_incremental_add_matches_rebuild():
+    """Appending into the pre-allocated bucketized blocks must equal a
+    from-scratch bucketize_corpus of the same sketches — growth events
+    (initial_capacity=4, 11 adds -> two doublings) included."""
+    rng = np.random.default_rng(3)
+    D = 11
+    vecs = _sparse_vecs(rng, D)
+    idx = SketchIndex(m=128, n_buckets=256, slots=4, initial_capacity=4)
+    for d, v in enumerate(vecs):
+        idx.add(f"v{d}", v)
+    assert idx.capacity == 16  # power-of-two, grown by doubling
+
+    sks = [priority_sketch(jnp.asarray(v), 128, idx.seed) for v in vecs]
+    stacked = Sketch(jnp.stack([s.idx for s in sks]),
+                     jnp.stack([s.val for s in sks]),
+                     jnp.stack([s.tau for s in sks]))
+    bc = bucketize_corpus(stacked, n_buckets=256, slots=4)
+    np.testing.assert_array_equal(idx._idx[:D], np.asarray(bc.idx))
+    np.testing.assert_array_equal(idx._val[:D], np.asarray(bc.val))
+    np.testing.assert_allclose(idx._tau[:D], np.asarray(bc.tau), rtol=1e-6)
+    np.testing.assert_array_equal(idx._dropped[:D], np.asarray(bc.dropped))
+
+
+def test_sketch_index_capacity_stable_between_growth():
+    """Corpus shape seen by the kernels only changes on doubling — adds in
+    between must not re-bucketize or reshape (no recompiles per flush)."""
+    rng = np.random.default_rng(4)
+    vecs = _sparse_vecs(rng, 7, nnz=200)
+    idx = SketchIndex(m=64, n_buckets=128, slots=4, initial_capacity=8)
+    shapes = set()
+    for d, v in enumerate(vecs):
+        idx.add(f"v{d}", v)
+        shapes.add(idx._corpus().idx.shape)
+    assert shapes == {(8, 128, 4)}
+    est = dict(idx.query(vecs[2]))
+    assert max(est, key=est.get) == "v2"
+
+
+def test_sketch_index_all_pairs_consistent_with_queries():
+    rng = np.random.default_rng(5)
+    vecs = _sparse_vecs(rng, 6)
+    idx = SketchIndex(m=128, n_buckets=512, slots=4, initial_capacity=8)
+    for d, v in enumerate(vecs):
+        idx.add(f"v{d}", v)
+    ap = idx.all_pairs()
+    assert ap.shape == (6, 6)
+    ap_ref = idx.all_pairs(use_pallas=False)
+    np.testing.assert_allclose(ap, ap_ref, rtol=1e-4,
+                               atol=1e-4 * np.abs(ap_ref).max())
