@@ -32,6 +32,12 @@ def run(quick: bool = True) -> Csv:
     methods = {
         "TS-weighted": lambda v, m, s: threshold_sketch(v, m, s).idx,
         "PS-weighted": lambda v, m, s: priority_sketch(v, m, s).idx,
+        # linear-time fused build pipeline (kernels.sketch_build): histogram
+        # rank selection instead of per-vector sort/top_k (DESIGN.md §13)
+        "TS-fused": lambda v, m, s: threshold_sketch(
+            v, m, s, backend="pallas").idx,
+        "PS-fused": lambda v, m, s: priority_sketch(
+            v, m, s, backend="pallas").idx,
         "CS": countsketch,
         "JL": lambda v, m, s: jl_sketch(v, m, s),
         "MH": lambda v, m, s: minhash_sketch(v, m, s).idx,
@@ -67,6 +73,20 @@ def run(quick: bool = True) -> Csv:
     faster = times[("PS-weighted", hi_mh)] * 3 < times[("MH", hi_mh)]
     csv.add("fig7/validate/ps_much_faster_than_minhash", 0,
             f"{'ok' if faster else 'FAIL'}")
+    # the fused linear-time build must also be ~flat in m (its selection is
+    # O(n) independent of m; the m-sized suffix sort is negligible)
+    fused_flat = (times[("TS-fused", hi)] < 3 * times[("TS-fused", lo)]
+                  and times[("PS-fused", hi)] < 3 * times[("PS-fused", lo)])
+    csv.add("fig7/validate/fused_build_flat_in_m", 0,
+            f"{'ok' if fused_flat else 'FAIL'} "
+            f"ts_fused_ratio={times[('TS-fused', hi)]/times[('TS-fused', lo)]:.2f} "
+            f"ps_fused_ratio={times[('PS-fused', hi)]/times[('PS-fused', lo)]:.2f}")
+    # informational (not a gate — wall clock on shared runners): the fused
+    # threshold build vs the sort-based reference at the largest m
+    csv.add("fig7/info/ts_fused_vs_sorted_speedup",
+            times[("TS-weighted", hi)] / times[("TS-fused", hi)],
+            f"reference_us={times[('TS-weighted', hi)]:.0f} "
+            f"fused_us={times[('TS-fused', hi)]:.0f}")
     return csv
 
 

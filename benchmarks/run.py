@@ -16,9 +16,9 @@ import json
 import sys
 import time
 
-from . import (allpairs_throughput, fig3_synthetic_ip, fig4_binary,
-               fig5_endbiased, fig6_join_corr, fig7_runtime, fig9_textsim,
-               fig10_joinsize, table2_realworld)
+from . import (allpairs_throughput, construction_throughput,
+               fig3_synthetic_ip, fig4_binary, fig5_endbiased, fig6_join_corr,
+               fig7_runtime, fig9_textsim, fig10_joinsize, table2_realworld)
 
 MODULES = [
     ("fig3_synthetic_ip", fig3_synthetic_ip),
@@ -30,6 +30,7 @@ MODULES = [
     ("fig9_textsim", fig9_textsim),
     ("fig10_joinsize", fig10_joinsize),
     ("allpairs_throughput", allpairs_throughput),
+    ("construction_throughput", construction_throughput),
 ]
 
 

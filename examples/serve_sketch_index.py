@@ -1,5 +1,8 @@
 """Sketch index service: the O(D^2 m) all-pairs workload from the paper's
-introduction, served by the bucketized Pallas estimator kernel.
+introduction, served by the bucketized Pallas estimator kernel.  Ingestion
+runs through the linear-time batched build pipeline: ``add_many`` sketches
+a whole block with one fused build, and sparse columns can be added as
+``(indices, values)`` without materializing the dense vector.
 
     PYTHONPATH=src python examples/serve_sketch_index.py
 """
@@ -16,7 +19,13 @@ for d in range(D):
     ii = rng.choice(n, 2000, replace=False)
     v[ii] = rng.uniform(-1, 1, 2000)
     vecs.append(v)
-    idx.add(f"doc{d:03d}", v)
+
+# batch ingestion: one fused linear-time build for the whole block
+idx.add_many([f"doc{d:03d}" for d in range(D - 1)], np.stack(vecs[:-1]))
+# sparse ingestion: hash only the nonzero coordinates (O(nnz), not O(n))
+last = vecs[-1]
+nz = np.nonzero(last)[0]
+idx.add(f"doc{D - 1:03d}", indices=nz, values=last[nz])
 
 query = vecs[17] + 0.05 * rng.standard_normal(n).astype(np.float32) * (vecs[17] != 0)
 print(f"indexed {len(idx)} vectors; querying near-duplicate of doc017")

@@ -14,7 +14,8 @@ Zhang — "Sampling Methods for Inner Product Sketching", PVLDB):
   threshold_sketch(variant="l1")).
 """
 from .hashing import fold_seed, hash_bucket, hash_sign, hash_u32, hash_unit, mix32
-from .sketches import INVALID_IDX, Sketch, default_capacity, densify, weight
+from .sketches import (INVALID_IDX, Sketch, default_capacity, densify,
+                       sampling_ranks, weight)
 from .threshold import adaptive_tau, threshold_sketch
 from .priority import priority_sketch
 from .estimator import (estimate_inner_product, estimate_inner_product_dense,
@@ -39,7 +40,8 @@ from .variance import (chebyshev_interval, error_guarantee,
 
 __all__ = [
     "fold_seed", "hash_bucket", "hash_sign", "hash_u32", "hash_unit", "mix32",
-    "INVALID_IDX", "Sketch", "default_capacity", "densify", "weight",
+    "INVALID_IDX", "Sketch", "default_capacity", "densify", "sampling_ranks",
+    "weight",
     "adaptive_tau", "threshold_sketch", "priority_sketch",
     "estimate_inner_product", "estimate_inner_product_dense", "intersection_size",
     "CombinedSketch", "combined_estimates", "combined_estimates_matrix",

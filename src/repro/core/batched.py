@@ -20,12 +20,31 @@ from .threshold import threshold_sketch
 
 
 def sketch_corpus(A: jnp.ndarray, m: int, seed, *, method: str = "priority",
-                  variant: str = "l2") -> Sketch:
+                  variant: str = "l2", backend: str = "reference") -> Sketch:
     """Sketch every row of A: (D, n) -> Sketch with leading batch dim D.
 
     All rows share the same seed — that is what makes the samples
     *coordinated* across vectors (Section 2 of the paper).
+
+    ``backend="reference"`` vmaps the single-vector sort/top_k builders;
+    ``backend="pallas"`` runs the batched linear-time build pipeline
+    (``repro.kernels.sketch_build``): one fused hash/rank pass for the whole
+    block, histogram rank selection instead of per-row sorts, and a
+    prefix-sum compaction (DESIGN.md §13).  Kept sets and values are
+    identical; threshold tau can differ by summation-order rounding.
     """
+    if backend == "pallas":
+        # local import: repro.kernels itself imports from repro.core
+        from repro.kernels import (build_priority_corpus,
+                                   build_threshold_corpus)
+        if method == "priority":
+            return build_priority_corpus(A, m, seed, variant=variant)
+        if method == "threshold":
+            return build_threshold_corpus(A, m, seed, variant=variant)
+        raise ValueError(f"unknown method {method!r}")
+    if backend != "reference":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'reference' or 'pallas'")
     if method == "priority":
         fn = functools.partial(priority_sketch, m=m, seed=seed, variant=variant)
     elif method == "threshold":

@@ -197,8 +197,28 @@ def estimate_join_correlation(sa: CombinedSketch, sb: CombinedSketch) -> jnp.nda
 
 
 def combined_sketch_corpus(A: jnp.ndarray, m: int, seed, *,
-                           method: str = "priority") -> CombinedSketch:
-    """Sketch every row of A: (D, n) -> CombinedSketch with leading dim D."""
+                           method: str = "priority",
+                           backend: str = "reference") -> CombinedSketch:
+    """Sketch every row of A: (D, n) -> CombinedSketch with leading dim D.
+
+    ``backend="pallas"`` runs the batched linear-time build
+    (``repro.kernels.sketch_build``): histogram rank selection replaces the
+    three per-row argsorts of Algorithm 6 (the heaviest construction path
+    here) and the prefix-sum compaction replaces top_k + argsort packing
+    (DESIGN.md §13).
+    """
+    if backend == "pallas":
+        # local import: repro.kernels itself imports from repro.core
+        from repro.kernels import (build_combined_priority_corpus,
+                                   build_combined_threshold_corpus)
+        if method == "priority":
+            return build_combined_priority_corpus(A, m, seed)
+        if method == "threshold":
+            return build_combined_threshold_corpus(A, m, seed)
+        raise ValueError(f"unknown method {method!r}")
+    if backend != "reference":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'reference' or 'pallas'")
     if method == "priority":
         fn = lambda row: combined_priority_sketch(row, m, seed)
     elif method == "threshold":

@@ -12,18 +12,34 @@ import jax
 import jax.numpy as jnp
 
 from .hashing import hash_unit
-from .sketches import Sketch, select_and_pack, weight
+from .sketches import Sketch, sampling_ranks, select_and_pack, weight
 
 
 def priority_sketch(a: jnp.ndarray, m: int, seed, *, variant: str = "l2",
-                    indices: jnp.ndarray | None = None) -> Sketch:
-    """Fixed-size-m sketch of a dense vector ``a`` (or sparse (indices, a))."""
+                    indices: jnp.ndarray | None = None,
+                    backend: str = "reference") -> Sketch:
+    """Fixed-size-m sketch of a dense vector ``a`` (or sparse (indices, a)).
+
+    ``backend="pallas"`` routes through the linear-time fused build pipeline
+    (``repro.kernels.sketch_build``), which finds the (m+1)-st smallest rank
+    with a log-domain histogram descent instead of this ``top_k`` over all n
+    (DESIGN.md §13); ``"reference"`` is the parity oracle.
+    """
+    if backend == "pallas":
+        from repro.kernels.sketch_build import build_priority_corpus
+        a2 = jnp.asarray(a, jnp.float32)[None, :]
+        sk = build_priority_corpus(a2, m, seed, variant=variant,
+                                   indices=indices)
+        return Sketch(idx=sk.idx[0], val=sk.val[0], tau=sk.tau[0])
+    if backend != "reference":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'reference' or 'pallas'")
     a = jnp.asarray(a)
     n = a.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32) if indices is None else indices.astype(jnp.int32)
     w = weight(a.astype(jnp.float32), variant)
     h = hash_unit(seed, idx)
-    ranks = jnp.where(w > 0, h / jnp.where(w > 0, w, 1.0), jnp.inf)
+    ranks = sampling_ranks(w, h)
     # (m+1)-st smallest rank -> tau. Pad so top_k(m+1) is always legal.
     k = m + 1
     if n < k:

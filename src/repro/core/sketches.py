@@ -79,6 +79,18 @@ def default_capacity(m: int) -> int:
     return int(m + 4 * math.ceil(math.sqrt(max(m, 1))))
 
 
+def sampling_ranks(w: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Sampling rank ``R_i = h_i / w_i`` (+inf where ``w_i == 0``).
+
+    The shared order statistic of Algorithms 1 and 3: priority sampling keeps
+    the ``m`` smallest ranks, and threshold sampling's inclusion test
+    ``h <= tau * w`` is the comparison ``R <= tau`` (threshold overflow also
+    evicts largest-rank entries first).  Used by the host builders, the
+    hash_rank kernel oracle, and the sketch_build selection pipeline.
+    """
+    return jnp.where(w > 0, h / jnp.where(w > 0, w, 1.0), jnp.inf)
+
+
 def select_and_pack(scores: jnp.ndarray, include: jnp.ndarray, idx: jnp.ndarray,
                     val: jnp.ndarray, cap: int) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Keep included entries (lowest ``scores`` first) up to ``cap``; sort by idx.

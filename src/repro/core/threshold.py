@@ -16,7 +16,8 @@ import jax
 import jax.numpy as jnp
 
 from .hashing import hash_unit
-from .sketches import Sketch, default_capacity, select_and_pack, weight
+from .sketches import (Sketch, default_capacity, sampling_ranks,
+                       select_and_pack, weight)
 
 
 def adaptive_tau(w: jnp.ndarray, m: int) -> jnp.ndarray:
@@ -25,6 +26,11 @@ def adaptive_tau(w: jnp.ndarray, m: int) -> jnp.ndarray:
     ``w``: nonnegative sampling weights (0 for absent entries).
     Returns ``tau`` such that ``sum_i min(1, tau * w_i) == min(m, nnz)``.
     If ``nnz <= m`` every entry is kept (tau large enough to cap them all).
+
+    This closed form costs a full O(n log n) descending sort; the batched
+    construction pipeline (``repro.kernels.sketch_build``) computes the same
+    ``tau`` in linear time by extracting only the top-``m`` weights with a
+    histogram selection pass (DESIGN.md §13).
     """
     n = w.shape[0]
     nnz = jnp.sum(w > 0)
@@ -59,12 +65,25 @@ def adaptive_tau(w: jnp.ndarray, m: int) -> jnp.ndarray:
 
 def threshold_sketch(a: jnp.ndarray, m: int, seed, *, variant: str = "l2",
                      cap: int | None = None, adaptive: bool = True,
-                     indices: jnp.ndarray | None = None) -> Sketch:
+                     indices: jnp.ndarray | None = None,
+                     backend: str = "reference") -> Sketch:
     """Algorithm 1 (+ Algorithm 4 when ``adaptive=True``).
 
     ``a``: dense vector (n,).  For pre-sparsified inputs pass the nonzero
     values in ``a`` and their original coordinates in ``indices``.
+    ``backend="pallas"`` routes through the linear-time fused build pipeline
+    (``repro.kernels.sketch_build``); ``"reference"`` is this sort-based
+    closed form, which doubles as the parity oracle.
     """
+    if backend == "pallas":
+        from repro.kernels.sketch_build import build_threshold_corpus
+        a2 = jnp.asarray(a, jnp.float32)[None, :]
+        sk = build_threshold_corpus(a2, m, seed, variant=variant, cap=cap,
+                                    adaptive=adaptive, indices=indices)
+        return Sketch(idx=sk.idx[0], val=sk.val[0], tau=sk.tau[0])
+    if backend != "reference":
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'reference' or 'pallas'")
     a = jnp.asarray(a)
     n = a.shape[0]
     idx = jnp.arange(n, dtype=jnp.int32) if indices is None else indices.astype(jnp.int32)
@@ -77,7 +96,7 @@ def threshold_sketch(a: jnp.ndarray, m: int, seed, *, variant: str = "l2",
     h = hash_unit(seed, idx)
     include = (w > 0) & (h <= tau * w)
     # Overflow priority: smallest h/w first == priority-sampling rank order.
-    scores = jnp.where(w > 0, h / jnp.where(w > 0, w, 1.0), jnp.inf)
+    scores = sampling_ranks(w, h)
     if cap is None:
         cap = default_capacity(m)
     kidx, kval = select_and_pack(scores, include, idx, a.astype(jnp.float32), cap)

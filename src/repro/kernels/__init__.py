@@ -5,13 +5,21 @@ VMEM tiling), ``ops.py`` (jit'd public wrapper, interpret=True off-TPU) and
 ``ref.py`` (pure-jnp oracle the tests assert against):
 
 - ``hash_rank``          fused hash + sampling rank (the O(N) loop of Algs 1/3)
+- ``sketch_build``       batched linear-time sketch construction: fused 2D
+  hash/rank pass + log-domain histogram rank selection + prefix-sum
+  compaction — replaces the O(n log n) sort/top_k build path (DESIGN.md §13)
 - ``countsketch``        CountSketch as one-hot MXU matmuls (scatter-free)
 - ``jl_rademacher``      matrix-free JL projection (Pi regenerated in VMEM)
 - ``intersect_estimate`` bucketized batched estimator: one query vs a corpus
   (serving path) and the tiled all-pairs / co-moments kernel that emits the
   full (D1, D2) estimate matrix in one launch (the O(D^2 m) workload)
 """
-from .hash_rank import hash_rank, hash_rank_ref
+from .hash_rank import (hash_rank, hash_rank_batched, hash_rank_batched_ref,
+                        hash_rank_ref)
+from .sketch_build import (build_combined_priority_corpus,
+                           build_combined_threshold_corpus,
+                           build_priority_corpus, build_threshold_corpus,
+                           kth_smallest_ranks)
 from .countsketch import countsketch as countsketch_kernel
 from .countsketch import countsketch_ref
 from .jl_rademacher import jl_project, jl_ref
@@ -24,7 +32,10 @@ from .intersect_estimate import (MOMENT_CHANNELS, BucketizedSketch,
                                  round_up_pow2, slot_inclusion_probs)
 
 __all__ = [
-    "hash_rank", "hash_rank_ref",
+    "hash_rank", "hash_rank_batched", "hash_rank_batched_ref", "hash_rank_ref",
+    "build_priority_corpus", "build_threshold_corpus",
+    "build_combined_priority_corpus", "build_combined_threshold_corpus",
+    "kth_smallest_ranks",
     "countsketch_kernel", "countsketch_ref",
     "jl_project", "jl_ref",
     "BucketizedSketch", "bucketize", "bucketize_corpus", "bucketize_payloads",

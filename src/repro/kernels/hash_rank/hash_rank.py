@@ -49,18 +49,27 @@ def _weight(v, variant: str):
     raise ValueError(variant)
 
 
-def _kernel(seed_ref, val_ref, h_ref, rank_ref, *, variant: str):
-    t = pl.program_id(0)
+def _block_hash_rank(seed_ref, v, block_j, variant: str):
+    """Shared fused body: (h, rank) for one (SUBLANES, LANES) value block at
+    block index ``block_j`` along the vector.  The single source of the
+    hash/rank formula for every kernel that must stay bit-coordinated
+    (scalar, batched, and sketch_build's histogram-fused variant)."""
     r = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 0)
     c = jax.lax.broadcasted_iota(jnp.int32, (SUBLANES, LANES), 1)
-    gidx = ((t * SUBLANES + r) * LANES + c).astype(jnp.uint32)
+    gidx = ((block_j * SUBLANES + r) * LANES + c).astype(jnp.uint32)
     seed = seed_ref[0, 0].astype(jnp.uint32)
     h = _mix32(gidx * _GOLDEN + seed)
     hu = ((h >> np.uint32(8)).astype(jnp.float32) + np.float32(0.5)) * _UNIT
-    v = val_ref[...].astype(jnp.float32)
-    w = _weight(v, variant)
+    w = _weight(v.astype(jnp.float32), variant)
+    rank = jnp.where(w > 0, hu / jnp.where(w > 0, w, 1.0), jnp.inf)
+    return hu, rank
+
+
+def _kernel(seed_ref, val_ref, h_ref, rank_ref, *, variant: str):
+    hu, rank = _block_hash_rank(seed_ref, val_ref[...], pl.program_id(0),
+                                variant)
     h_ref[...] = hu
-    rank_ref[...] = jnp.where(w > 0, hu / jnp.where(w > 0, w, 1.0), jnp.inf)
+    rank_ref[...] = rank
 
 
 def hash_rank_pallas(values2d: jnp.ndarray, seed: jnp.ndarray, *,
@@ -81,4 +90,45 @@ def hash_rank_pallas(values2d: jnp.ndarray, seed: jnp.ndarray, *,
                    pl.BlockSpec((SUBLANES, LANES), lambda i: (i, 0))),
         interpret=interpret,
     )(seed.reshape(1, 1).astype(jnp.int32), values2d)
+    return h, rank
+
+
+def _batched_kernel(seed_ref, val_ref, h_ref, rank_ref, *, variant: str):
+    """One (vector d, block j) grid cell of the batched 2D pass.
+
+    The global coordinate is the position *within the row* (all vectors of a
+    coordinated corpus share the hash stream), reconstructed from the block
+    grid position j — no index array is materialized.  The hash output is a
+    single (blocks, BLOCK) row shared by every d (its block is revisited once
+    per vector; every visit writes the same bits, so the revisit is benign).
+    """
+    hu, rank = _block_hash_rank(seed_ref, val_ref[0], pl.program_id(1),
+                                variant)
+    h_ref[...] = hu
+    rank_ref[0] = rank
+
+
+def hash_rank_batched_pallas(values3d: jnp.ndarray, seed: jnp.ndarray, *,
+                             variant: str = "l2", interpret: bool = True):
+    """Batched fused pass: values3d (D, rows, 128) f32, rows % 8 == 0.
+
+    Returns (h (rows, 128), rank (D, rows, 128)): hash + weight + rank for a
+    whole (D, n) corpus block in one HBM pass — the 2D extension of
+    ``hash_rank_pallas`` that feeds the sketch_build pipeline.
+    """
+    D, rows, lanes = values3d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    grid = (D, rows // SUBLANES)
+    kern = functools.partial(_batched_kernel, variant=variant)
+    h, rank = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+                   jax.ShapeDtypeStruct((D, rows, LANES), jnp.float32)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda d, j: (0, 0)),
+                  pl.BlockSpec((1, SUBLANES, LANES), lambda d, j: (d, j, 0))],
+        out_specs=(pl.BlockSpec((SUBLANES, LANES), lambda d, j: (j, 0)),
+                   pl.BlockSpec((1, SUBLANES, LANES), lambda d, j: (d, j, 0))),
+        interpret=interpret,
+    )(seed.reshape(1, 1).astype(jnp.int32), values3d)
     return h, rank

@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.hashing import hash_unit
-from repro.core.sketches import weight
+from repro.core.sketches import sampling_ranks, weight
 
 
 def hash_rank_ref(values: jnp.ndarray, seed, *, variant: str = "l2"):
@@ -18,5 +18,17 @@ def hash_rank_ref(values: jnp.ndarray, seed, *, variant: str = "l2"):
     idx = jnp.arange(n, dtype=jnp.int32)
     h = hash_unit(seed, idx)
     w = weight(values.astype(jnp.float32), variant)
-    rank = jnp.where(w > 0, h / jnp.where(w > 0, w, 1.0), jnp.inf)
-    return h, rank
+    return h, sampling_ranks(w, h)
+
+
+def hash_rank_batched_ref(values: jnp.ndarray, seed, *, variant: str = "l2"):
+    """values: (D, n) f32. Returns (h (n,), rank (D, n)).
+
+    The hash depends only on the coordinate, so the batched oracle (and the
+    batched kernel's wrapper) emits it once for all D rows — the vmapped
+    scalar path recomputes it D times.
+    """
+    n = values.shape[-1]
+    h = hash_unit(seed, jnp.arange(n, dtype=jnp.int32))
+    w = weight(values.astype(jnp.float32), variant)
+    return h, sampling_ranks(w, h[None, :])

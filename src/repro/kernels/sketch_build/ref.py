@@ -1,0 +1,46 @@
+"""Parity oracles for the sketch_build pipeline.
+
+Per the ISSUE/DESIGN contract the *current jnp builders* are the oracle:
+the fused pipeline must produce the same kept set (bit-exact ``idx``/``val``)
+and an estimator-equivalent ``tau`` (bit-exact for priority sampling, where
+tau is a pure order statistic; equal up to summation-order rounding for the
+adaptive-threshold closed form — see DESIGN.md §13).  These wrappers just
+vmap the legacy single-vector code so tests can compare corpus to corpus.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.join_correlation import (combined_priority_sketch,
+                                         combined_threshold_sketch)
+from repro.core.priority import priority_sketch
+from repro.core.sketches import Sketch
+from repro.core.threshold import threshold_sketch
+
+
+def build_threshold_corpus_ref(A, m: int, seed, *, variant: str = "l2",
+                               cap: int | None = None,
+                               adaptive: bool = True) -> Sketch:
+    A = jnp.atleast_2d(jnp.asarray(A, jnp.float32))
+    return jax.vmap(lambda row: threshold_sketch(
+        row, m, seed, variant=variant, cap=cap, adaptive=adaptive))(A)
+
+
+def build_priority_corpus_ref(A, m: int, seed, *,
+                              variant: str = "l2") -> Sketch:
+    A = jnp.atleast_2d(jnp.asarray(A, jnp.float32))
+    return jax.vmap(lambda row: priority_sketch(
+        row, m, seed, variant=variant))(A)
+
+
+def build_combined_priority_corpus_ref(A, m: int, seed):
+    A = jnp.atleast_2d(jnp.asarray(A, jnp.float32))
+    return jax.vmap(lambda row: combined_priority_sketch(row, m, seed))(A)
+
+
+def build_combined_threshold_corpus_ref(A, m: int, seed, *,
+                                        cap: int | None = None):
+    A = jnp.atleast_2d(jnp.asarray(A, jnp.float32))
+    return jax.vmap(lambda row: combined_threshold_sketch(
+        row, m, seed, cap=cap))(A)

@@ -1,0 +1,134 @@
+"""Pallas TPU kernels: fused batched sketch construction (the O(N) build).
+
+The construction hot loop of Algorithms 1/3 is (a) hash every coordinate,
+(b) weight every value, (c) divide into sampling ranks, (d) find a rank
+order statistic (the (m+1)-st smallest rank for priority sampling / the
+overflow cut for threshold sampling), and (e) compact the kept entries.
+The legacy path does (d) with a full per-row sort or ``top_k`` over all n —
+O(n log n) — and (a)-(c) in separate HBM passes per vector.
+
+Two kernels make the whole build linear time (DESIGN.md §13):
+
+- ``hash_rank_hist_pallas``: one HBM pass over a (D, n) block that fuses
+  hash + weight + rank (the 2D extension of ``kernels/hash_rank``) and, in
+  the same pass, accumulates a per-row **log-domain histogram** of the rank
+  bit patterns: the top 8 bits of a positive float32 are its sign (always 0
+  for ranks) and exponent, so the 256 fixed-width bins partition ranks by
+  powers of two.  IEEE-754 positive floats compare like their unsigned bit
+  patterns, so bin counts are exactly the level-0 refinement of any rank
+  order statistic.
+- ``rank_hist_pallas``: one refinement level — counts the next 8 bits of
+  every rank whose higher bits match a per-row prefix.  Four levels resolve
+  all 32 bits, i.e. the *exact* k-th smallest rank, in O(n) work per level
+  with no sort and no data-dependent shapes.
+
+Off-TPU the same selection runs as a fused XLA formulation (see ops.py);
+both are bit-exact because the k-th order statistic is a pure bit-pattern
+question.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from ..hash_rank.hash_rank import LANES, SUBLANES, _block_hash_rank
+
+NBINS = 256  # one level resolves 8 bits of the rank's bit pattern
+
+
+def _bin_counts(digits: jnp.ndarray, active: jnp.ndarray) -> jnp.ndarray:
+    """(SUBLANES, LANES) digits in [0, NBINS) -> (1, NBINS) active counts."""
+    oh = (digits[:, :, None]
+          == jax.lax.broadcasted_iota(jnp.int32, (1, 1, NBINS), 2))
+    oh = oh & active[:, :, None]
+    return jnp.sum(oh.astype(jnp.int32), axis=(0, 1)).reshape(1, NBINS)
+
+
+def _hash_rank_hist_kernel(seed_ref, val_ref, h_ref, rank_ref, hist_ref, *,
+                           variant: str):
+    j = pl.program_id(1)
+    hu, rank = _block_hash_rank(seed_ref, val_ref[0], j, variant)
+    h_ref[...] = hu
+    rank_ref[0] = rank
+    # log-domain level: top 8 bits = sign (0) + exponent of the rank
+    u = jax.lax.bitcast_convert_type(rank, jnp.uint32)
+    digits = (u >> np.uint32(32 - 8)).astype(jnp.int32)
+    counts = _bin_counts(digits, jnp.ones_like(digits, dtype=bool))
+
+    @pl.when(j == 0)
+    def _():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += counts
+
+
+def hash_rank_hist_pallas(values3d: jnp.ndarray, seed: jnp.ndarray, *,
+                          variant: str = "l2", interpret: bool = True):
+    """One fused HBM pass over values3d (D, rows, 128), rows % 8 == 0.
+
+    Returns ``h (rows, 128)``, ``rank (D, rows, 128)`` and the level-0
+    log-domain histogram ``hist (D, NBINS)`` of the rank bit patterns.
+    """
+    D, rows, lanes = values3d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    grid = (D, rows // SUBLANES)
+    kern = functools.partial(_hash_rank_hist_kernel, variant=variant)
+    h, rank, hist = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+                   jax.ShapeDtypeStruct((D, rows, LANES), jnp.float32),
+                   jax.ShapeDtypeStruct((D, NBINS), jnp.int32)),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda d, j: (0, 0)),
+                  pl.BlockSpec((1, SUBLANES, LANES), lambda d, j: (d, j, 0))],
+        out_specs=(pl.BlockSpec((SUBLANES, LANES), lambda d, j: (j, 0)),
+                   pl.BlockSpec((1, SUBLANES, LANES), lambda d, j: (d, j, 0)),
+                   pl.BlockSpec((1, NBINS), lambda d, j: (d, 0))),
+        interpret=interpret,
+    )(seed.reshape(1, 1).astype(jnp.int32), values3d)
+    return h, rank, hist
+
+
+def _rank_hist_kernel(prefix_ref, keys_ref, hist_ref, *, shift: int):
+    j = pl.program_id(1)
+    u = jax.lax.bitcast_convert_type(keys_ref[0], jnp.uint32)
+    digits = ((u >> np.uint32(shift)) & np.uint32(0xFF)).astype(jnp.int32)
+    prefix = prefix_ref[0, 0].astype(jnp.uint32)
+    if shift >= 24:
+        active = jnp.ones_like(digits, dtype=bool)
+    else:
+        active = (u >> np.uint32(shift + 8)) == prefix
+    counts = _bin_counts(digits, active)
+
+    @pl.when(j == 0)
+    def _():
+        hist_ref[...] = jnp.zeros_like(hist_ref)
+
+    hist_ref[...] += counts
+
+
+def rank_hist_pallas(keys3d: jnp.ndarray, prefix: jnp.ndarray, *, shift: int,
+                     interpret: bool = True) -> jnp.ndarray:
+    """One histogram refinement level over rank keys (D, rows, 128) f32.
+
+    Counts ``(bits(key) >> shift) & 0xFF`` for every key whose higher bits
+    equal the per-row ``prefix (D,) uint32``; returns ``(D, NBINS) int32``.
+    ``shift`` descends 24 -> 16 -> 8 -> 0 to resolve the full 32-bit pattern.
+    """
+    D, rows, lanes = keys3d.shape
+    assert lanes == LANES and rows % SUBLANES == 0
+    grid = (D, rows // SUBLANES)
+    kern = functools.partial(_rank_hist_kernel, shift=shift)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((D, NBINS), jnp.int32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1), lambda d, j: (d, 0)),
+                  pl.BlockSpec((1, SUBLANES, LANES), lambda d, j: (d, j, 0))],
+        out_specs=pl.BlockSpec((1, NBINS), lambda d, j: (d, 0)),
+        interpret=interpret,
+    )(prefix.reshape(-1, 1).astype(jnp.int32), keys3d)

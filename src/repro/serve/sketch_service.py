@@ -2,11 +2,16 @@
 paper's introduction, backed by the bucketized Pallas kernels.
 
 Vectors are sketched once on ingestion (O(N) per vector — the paper's
-headline construction cost) and bucketized *immediately* into pre-allocated
+headline construction cost, now actually linear via the fused batched build
+pipeline, DESIGN.md §13) and bucketized *immediately* into pre-allocated
 (capacity, B, S) blocks: each ``add`` is an amortized O(m) append, not a
-full corpus rebuild.  Capacity grows by doubling and is always a power of
-two, so the jit'd kernels see a fixed corpus shape between growth events —
-no recompilation on each ingestion flush (DESIGN.md §4, §12).
+full corpus rebuild.  ``add_many`` ingests a whole (D, n) block with one
+batched build + one vmapped bucketize, feeding the bucketized blocks
+directly — the heavy-ingestion path.  Sparse columns can skip the dense
+materialization entirely by passing ``(indices, values)`` to ``add``.
+Capacity grows by doubling and is always a power of two, so the jit'd
+kernels see a fixed corpus shape between growth events — no recompilation
+on each ingestion flush (DESIGN.md §4, §12).
 
 A query answers all D inner-product estimates with one kernel launch;
 ``all_pairs`` emits the full D x D estimate matrix with one launch of the
@@ -14,13 +19,14 @@ tiled all-pairs kernel.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core import INVALID_IDX, priority_sketch
-from repro.kernels import (BucketizedSketch, bucketize,
+from repro.kernels import (BucketizedSketch, bucketize, bucketize_corpus,
+                           build_priority_corpus,
                            estimate_all_pairs_bucketized, query_corpus,
                            round_up_pow2)
 
@@ -68,11 +74,37 @@ class SketchIndex:
         self._dropped = extend(self._dropped, 0)
         self._cap = new_cap
 
-    def add(self, name, vector: np.ndarray) -> None:
+    def add(self, name, vector: Optional[np.ndarray] = None, *,
+            indices: Optional[np.ndarray] = None,
+            values: Optional[np.ndarray] = None) -> None:
         """Sketch + bucketize one vector and append it in place: amortized
-        O(m) — no re-bucketize of the existing corpus."""
-        sk = priority_sketch(jnp.asarray(vector, jnp.float32), self.m,
-                             self.seed)
+        O(m) — no re-bucketize of the existing corpus.
+
+        Accepts either a dense ``vector`` or a pre-sparsified column as
+        ``(indices, values)`` (ascending coordinates, e.g. np.nonzero
+        order), which skips the dense materialization: the sketch hashes
+        the given coordinates directly, so ingestion is O(nnz) not O(n).
+        Sparse inputs are padded to the next power of two (padding weight 0
+        can never be sampled) to bound jit recompiles across nnz values.
+        """
+        if (vector is None) == (indices is None and values is None):
+            raise ValueError("pass either a dense vector or (indices, values)")
+        if vector is not None:
+            sk = priority_sketch(jnp.asarray(vector, jnp.float32), self.m,
+                                 self.seed)
+        else:
+            if indices is None or values is None:
+                raise ValueError("sparse input needs both indices and values")
+            indices = np.asarray(indices, np.int32)
+            values = np.asarray(values, np.float32)
+            if indices.shape != values.shape or indices.ndim != 1:
+                raise ValueError("indices/values must be equal-length 1-D")
+            nnz = indices.shape[0]
+            pad = round_up_pow2(max(nnz, 1)) - nnz
+            # padding: value 0 -> weight 0 -> rank +inf, never selected
+            vals_p = jnp.asarray(np.pad(values, (0, pad)))
+            idx_p = jnp.asarray(np.pad(indices, (0, pad)))
+            sk = priority_sketch(vals_p, self.m, self.seed, indices=idx_p)
         b = bucketize(sk, n_buckets=self.n_buckets, slots=self.slots)
         if len(self._names) == self._cap:
             self._grow()
@@ -83,6 +115,33 @@ class SketchIndex:
         self._dropped[d] = int(b.dropped)
         self._names.append(name)
         self._device_corpus = None  # re-upload (not re-bucketize) lazily
+
+    def add_many(self, names: Sequence, matrix: np.ndarray) -> None:
+        """Batch-ingest a (D, n) block: one fused linear-time build for all
+        D vectors (``kernels.sketch_build``) + one vmapped bucketize, written
+        straight into the pre-allocated bucketized blocks.
+
+        Equivalent to D ``add`` calls (same sketches, same layout) but the
+        construction is a single batched pipeline — no per-vector sort, no
+        per-vector dispatch (DESIGN.md §13).
+        """
+        matrix = np.asarray(matrix, np.float32)
+        if matrix.ndim != 2 or matrix.shape[0] != len(names):
+            raise ValueError("matrix must be (len(names), n)")
+        D = matrix.shape[0]
+        if D == 0:
+            return
+        sk = build_priority_corpus(jnp.asarray(matrix), self.m, self.seed)
+        bc = bucketize_corpus(sk, n_buckets=self.n_buckets, slots=self.slots)
+        while len(self._names) + D > self._cap:
+            self._grow()
+        d0 = len(self._names)
+        self._idx[d0:d0 + D] = np.asarray(bc.idx)
+        self._val[d0:d0 + D] = np.asarray(bc.val)
+        self._tau[d0:d0 + D] = np.asarray(bc.tau)
+        self._dropped[d0:d0 + D] = np.asarray(bc.dropped)
+        self._names.extend(names)
+        self._device_corpus = None
 
     def _corpus(self) -> BucketizedSketch:
         """Occupied corpus prefix on device, rounded up to a power of two so

@@ -1,4 +1,5 @@
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
 
@@ -111,3 +112,53 @@ def test_sketch_index_all_pairs_consistent_with_queries():
     ap_ref = idx.all_pairs(use_pallas=False)
     np.testing.assert_allclose(ap, ap_ref, rtol=1e-4,
                                atol=1e-4 * np.abs(ap_ref).max())
+
+
+def test_sketch_index_add_many_matches_sequential_add():
+    """Batch ingestion (one fused build + vmapped bucketize) must produce
+    exactly the blocks sequential adds produce, growth events included."""
+    rng = np.random.default_rng(6)
+    D = 10
+    vecs = _sparse_vecs(rng, D, nnz=250)
+    seq = SketchIndex(m=64, n_buckets=128, slots=4, initial_capacity=4)
+    for d, v in enumerate(vecs):
+        seq.add(f"v{d}", v)
+    bat = SketchIndex(m=64, n_buckets=128, slots=4, initial_capacity=4)
+    bat.add_many([f"v{d}" for d in range(D)], np.stack(vecs))
+    assert len(bat) == len(seq) == D
+    assert bat.capacity == seq.capacity
+    np.testing.assert_array_equal(bat._idx[:D], seq._idx[:D])
+    np.testing.assert_array_equal(bat._val[:D], seq._val[:D])
+    np.testing.assert_array_equal(bat._tau[:D], seq._tau[:D])
+    np.testing.assert_array_equal(bat._dropped[:D], seq._dropped[:D])
+    q = vecs[3]
+    np.testing.assert_allclose(dict(bat.query(q))["v3"],
+                               dict(seq.query(q))["v3"], rtol=1e-6)
+
+
+def test_sketch_index_sparse_add_matches_dense_add():
+    """(indices, values) ingestion skips the dense materialization but must
+    index the identical sketch."""
+    rng = np.random.default_rng(7)
+    vecs = _sparse_vecs(rng, 3, nnz=150)
+    dense = SketchIndex(m=64, n_buckets=128, slots=4)
+    sparse = SketchIndex(m=64, n_buckets=128, slots=4)
+    for d, v in enumerate(vecs):
+        dense.add(f"v{d}", v)
+        nz = np.nonzero(v)[0]
+        sparse.add(f"v{d}", indices=nz, values=v[nz])
+    D = len(vecs)
+    np.testing.assert_array_equal(sparse._idx[:D], dense._idx[:D])
+    np.testing.assert_array_equal(sparse._val[:D], dense._val[:D])
+    np.testing.assert_array_equal(sparse._tau[:D], dense._tau[:D])
+
+
+def test_sketch_index_add_rejects_ambiguous_input():
+    idx = SketchIndex(m=16, n_buckets=64, slots=2)
+    v = np.ones(32, np.float32)
+    with pytest.raises(ValueError):
+        idx.add("both", v, indices=np.arange(3), values=v[:3])
+    with pytest.raises(ValueError):
+        idx.add("neither")
+    with pytest.raises(ValueError):
+        idx.add("half", indices=np.arange(3))

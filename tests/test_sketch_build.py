@@ -1,0 +1,347 @@
+"""Construction parity: the linear-time fused build pipeline vs the legacy
+sort/top_k builders (the parity oracle, per DESIGN.md §13).
+
+Contract under test:
+
+- priority: bit-exact ``idx``/``val`` AND bit-exact ``tau`` (tau is the
+  exact (m+1)-st smallest rank, a pure order statistic);
+- threshold: bit-exact ``idx``/``val`` (same kept set); ``tau`` equal up to
+  summation-order rounding of the adaptive suffix sums;
+- Pallas kernels (interpret off-TPU) bit-exact vs the fused XLA formulation
+  of the same algorithm;
+- estimator-relevant equivalence on the combined (join-correlation) path.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (Sketch, estimate_inner_product, priority_sketch,
+                        sketch_corpus, threshold_sketch)
+from repro.core.join_correlation import (combined_sketch_corpus,
+                                         estimate_join_correlation)
+from repro.core.sketches import INVALID_IDX, sampling_ranks
+from repro.kernels import hash_rank_batched, hash_rank_batched_ref
+from repro.kernels.sketch_build import (build_combined_priority_corpus,
+                                        build_combined_priority_corpus_ref,
+                                        build_combined_threshold_corpus,
+                                        build_combined_threshold_corpus_ref,
+                                        build_priority_corpus,
+                                        build_priority_corpus_ref,
+                                        build_threshold_corpus,
+                                        build_threshold_corpus_ref,
+                                        kth_smallest_ranks, pack_kept)
+
+VARIANTS = ("l2", "l1", "uniform")
+
+
+def _corpus(rng, D=6, n=3000, density=0.3):
+    A = rng.standard_normal((D, n)).astype(np.float32)
+    mask = rng.random((D, n)) < density
+    return np.where(mask, A, 0.0).astype(np.float32)
+
+
+def _assert_sketch_parity(fast: Sketch, ref: Sketch, *, tau_exact: bool,
+                          tau_rtol: float = 1e-5):
+    np.testing.assert_array_equal(np.asarray(fast.idx), np.asarray(ref.idx))
+    np.testing.assert_array_equal(np.asarray(fast.val), np.asarray(ref.val))
+    tf, tr = np.asarray(fast.tau), np.asarray(ref.tau)
+    if tau_exact:
+        np.testing.assert_array_equal(tf, tr)
+    else:
+        both_inf = np.isinf(tf) & np.isinf(tr)
+        np.testing.assert_allclose(np.where(both_inf, 0, tf),
+                                   np.where(both_inf, 0, tr), rtol=tau_rtol)
+
+
+# ---------------------------------------------------------------------------
+# selection primitive
+# ---------------------------------------------------------------------------
+
+
+def test_kth_smallest_matches_numpy_partition():
+    rng = np.random.default_rng(0)
+    R = np.abs(rng.standard_normal((5, 777))).astype(np.float32)
+    R[1, :50] = np.inf
+    R[2] = 0.25            # massive ties
+    R[3] = np.float32(1.0 / (1 << 24))  # identical tiny values
+    for k in (1, 2, 100, 777):
+        got = np.asarray(kth_smallest_ranks(jnp.asarray(R), k))
+        want = np.sort(R, axis=1)[:, k - 1]
+        np.testing.assert_array_equal(got, want)
+
+
+def test_kth_smallest_per_row_k():
+    rng = np.random.default_rng(1)
+    R = np.abs(rng.standard_normal((4, 300))).astype(np.float32)
+    ks = np.array([1, 7, 150, 300], np.int32)
+    got = np.asarray(kth_smallest_ranks(jnp.asarray(R), jnp.asarray(ks)))
+    want = np.array([np.sort(R[i])[ks[i] - 1] for i in range(4)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kth_smallest_pallas_bit_exact():
+    rng = np.random.default_rng(2)
+    R = np.abs(rng.standard_normal((3, 1111))).astype(np.float32)
+    R[0, :200] = np.inf
+    for k in (1, 64, 1111):
+        xla = np.asarray(kth_smallest_ranks(jnp.asarray(R), k,
+                                            use_pallas=False))
+        pal = np.asarray(kth_smallest_ranks(jnp.asarray(R), k,
+                                            use_pallas=True))
+        np.testing.assert_array_equal(xla, pal)
+
+
+def test_pack_kept_matches_nonzero_order():
+    rng = np.random.default_rng(3)
+    keep = rng.random((4, 97)) < 0.2
+    vals = rng.standard_normal((4, 97)).astype(np.float32)
+    idx, val = pack_kept(jnp.asarray(keep), jnp.asarray(vals), 30)
+    for d in range(4):
+        want = np.nonzero(keep[d])[0][:30]
+        got = np.asarray(idx[d])
+        got = got[got != INVALID_IDX]
+        np.testing.assert_array_equal(got, want)
+        np.testing.assert_array_equal(np.asarray(val[d])[: len(want)],
+                                      vals[d][want])
+        assert np.all(np.asarray(val[d])[len(want):] == 0)
+
+
+# ---------------------------------------------------------------------------
+# batched hash_rank kernel
+# ---------------------------------------------------------------------------
+
+
+def test_hash_rank_batched_kernel_bit_exact():
+    rng = np.random.default_rng(4)
+    A = jnp.asarray(_corpus(rng, D=3, n=2500))
+    for variant in VARIANTS:
+        h_k, r_k = hash_rank_batched(A, 11, variant=variant, use_pallas=True)
+        h_r, r_r = hash_rank_batched_ref(A, 11, variant=variant)
+        np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_r))
+        np.testing.assert_array_equal(np.asarray(r_k), np.asarray(r_r))
+
+
+def test_hash_rank_batched_matches_host_hashing():
+    # the coordination invariant: kernel ranks == host sampling_ranks
+    from repro.core.hashing import hash_unit
+    from repro.core.sketches import weight
+    rng = np.random.default_rng(5)
+    A = jnp.asarray(_corpus(rng, D=2, n=700))
+    h, r = hash_rank_batched(A, 13, use_pallas=True)
+    h_host = hash_unit(13, jnp.arange(700, dtype=jnp.int32))
+    np.testing.assert_array_equal(np.asarray(h), np.asarray(h_host))
+    np.testing.assert_array_equal(
+        np.asarray(r), np.asarray(sampling_ranks(weight(A, "l2"),
+                                                 h_host[None, :])))
+
+
+# ---------------------------------------------------------------------------
+# build parity across variants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_priority_build_parity(variant):
+    rng = np.random.default_rng(6)
+    A = jnp.asarray(_corpus(rng))
+    fast = build_priority_corpus(A, 64, 7, variant=variant)
+    ref = build_priority_corpus_ref(A, 64, 7, variant=variant)
+    _assert_sketch_parity(fast, ref, tau_exact=True)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_threshold_build_parity(variant):
+    rng = np.random.default_rng(7)
+    A = jnp.asarray(_corpus(rng))
+    fast = build_threshold_corpus(A, 64, 7, variant=variant)
+    ref = build_threshold_corpus_ref(A, 64, 7, variant=variant)
+    _assert_sketch_parity(fast, ref, tau_exact=False)
+
+
+def test_threshold_build_nonadaptive_parity():
+    rng = np.random.default_rng(8)
+    A = jnp.asarray(_corpus(rng))
+    fast = build_threshold_corpus(A, 64, 7, adaptive=False)
+    ref = build_threshold_corpus_ref(A, 64, 7, adaptive=False)
+    # non-adaptive tau = m / W: identical arithmetic -> bit-exact
+    _assert_sketch_parity(fast, ref, tau_exact=True)
+
+
+def test_build_pallas_vs_xla_bit_exact():
+    rng = np.random.default_rng(9)
+    A = jnp.asarray(_corpus(rng, D=3, n=1500))
+    for variant in ("l2", "uniform"):
+        fp = build_priority_corpus(A, 32, 9, variant=variant, use_pallas=True)
+        fx = build_priority_corpus(A, 32, 9, variant=variant,
+                                   use_pallas=False)
+        _assert_sketch_parity(fp, fx, tau_exact=True)
+        tp = build_threshold_corpus(A, 32, 9, variant=variant,
+                                    use_pallas=True)
+        tx = build_threshold_corpus(A, 32, 9, variant=variant,
+                                    use_pallas=False)
+        _assert_sketch_parity(tp, tx, tau_exact=True)
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_edge_cases_parity():
+    rng = np.random.default_rng(10)
+    m = 64
+    edge = np.zeros((4, 300), np.float32)
+    edge[1, :10] = rng.standard_normal(10)       # nnz <= m
+    edge[2] = rng.standard_normal(300)           # dense row
+    edge[3, 250] = 5.0                           # single spike
+    A = jnp.asarray(edge)                        # row 0: all-zero
+    for variant in VARIANTS:
+        fast = build_priority_corpus(A, m, 3, variant=variant)
+        ref = build_priority_corpus_ref(A, m, 3, variant=variant)
+        _assert_sketch_parity(fast, ref, tau_exact=True)
+        fast = build_threshold_corpus(A, m, 3, variant=variant)
+        ref = build_threshold_corpus_ref(A, m, 3, variant=variant)
+        _assert_sketch_parity(fast, ref, tau_exact=False)
+
+
+def test_n_not_multiple_of_block_parity():
+    # kernel BLOCK is 1024; exercise ragged tails through the Pallas path
+    rng = np.random.default_rng(11)
+    for n in (1000, 1025, 2047):
+        A = jnp.asarray(_corpus(rng, D=2, n=n, density=0.5))
+        fp = build_priority_corpus(A, 48, 5, use_pallas=True)
+        fr = build_priority_corpus_ref(A, 48, 5)
+        _assert_sketch_parity(fp, fr, tau_exact=True)
+
+
+def test_n_smaller_than_m_parity():
+    rng = np.random.default_rng(12)
+    A = jnp.asarray(_corpus(rng, D=3, n=40, density=0.8))
+    fast = build_priority_corpus(A, 64, 3)
+    ref = build_priority_corpus_ref(A, 64, 3)
+    _assert_sketch_parity(fast, ref, tau_exact=True)
+    fast = build_threshold_corpus(A, 64, 3)
+    ref = build_threshold_corpus_ref(A, 64, 3)
+    _assert_sketch_parity(fast, ref, tau_exact=False)
+
+
+def test_threshold_overflow_event_parity():
+    # cap below m forces the overflow eviction deterministically
+    rng = np.random.default_rng(13)
+    A = jnp.asarray(_corpus(rng, D=5, n=2000, density=0.5))
+    for cap in (16, 33):
+        fast = build_threshold_corpus(A, 64, 7, cap=cap)
+        ref = build_threshold_corpus_ref(A, 64, 7, cap=cap)
+        _assert_sketch_parity(fast, ref, tau_exact=False)
+        assert int(fast.size().max()) <= cap
+
+
+# ---------------------------------------------------------------------------
+# core wiring (backend switches) + estimates
+# ---------------------------------------------------------------------------
+
+
+def test_single_vector_backend_switch():
+    rng = np.random.default_rng(14)
+    a = _corpus(rng, D=1, n=2500)[0]
+    for variant in ("l2", "uniform"):
+        sp = priority_sketch(jnp.asarray(a), 48, 3, variant=variant,
+                             backend="pallas")
+        sr = priority_sketch(jnp.asarray(a), 48, 3, variant=variant)
+        _assert_sketch_parity(sp, sr, tau_exact=True)
+        tp = threshold_sketch(jnp.asarray(a), 48, 3, variant=variant,
+                              backend="pallas")
+        tr = threshold_sketch(jnp.asarray(a), 48, 3, variant=variant)
+        _assert_sketch_parity(tp, tr, tau_exact=False)
+    with pytest.raises(ValueError):
+        priority_sketch(jnp.asarray(a), 48, 3, backend="nope")
+
+
+def test_sketch_corpus_backend_estimates_agree():
+    rng = np.random.default_rng(15)
+    A = jnp.asarray(_corpus(rng, D=4, n=4000))
+    for method in ("priority", "threshold"):
+        sp = sketch_corpus(A, 64, 3, method=method, backend="pallas")
+        sr = sketch_corpus(A, 64, 3, method=method, backend="reference")
+        ep = estimate_inner_product(Sketch(sp.idx[0], sp.val[0], sp.tau[0]),
+                                    Sketch(sp.idx[1], sp.val[1], sp.tau[1]))
+        er = estimate_inner_product(Sketch(sr.idx[0], sr.val[0], sr.tau[0]),
+                                    Sketch(sr.idx[1], sr.val[1], sr.tau[1]))
+        np.testing.assert_allclose(float(ep), float(er), rtol=1e-4, atol=1e-4)
+
+
+def test_combined_builds_parity_and_correlation():
+    rng = np.random.default_rng(16)
+    A = jnp.asarray(_corpus(rng, D=4, n=2500, density=0.4))
+    fast = build_combined_priority_corpus(A, 48, 5)
+    ref = build_combined_priority_corpus_ref(A, 48, 5)
+    np.testing.assert_array_equal(np.asarray(fast.idx), np.asarray(ref.idx))
+    np.testing.assert_array_equal(np.asarray(fast.val), np.asarray(ref.val))
+    for f in ("tau_ones", "tau_val", "tau_sq", "scale"):
+        ff, fr = np.asarray(getattr(fast, f)), np.asarray(getattr(ref, f))
+        both_inf = np.isinf(ff) & np.isinf(fr)
+        np.testing.assert_allclose(np.where(both_inf, 0, ff),
+                                   np.where(both_inf, 0, fr), rtol=1e-5)
+    fast_t = build_combined_threshold_corpus(A, 48, 5)
+    ref_t = build_combined_threshold_corpus_ref(A, 48, 5)
+    np.testing.assert_array_equal(np.asarray(fast_t.idx),
+                                  np.asarray(ref_t.idx))
+    np.testing.assert_allclose(np.asarray(fast_t.tau_val),
+                               np.asarray(ref_t.tau_val), rtol=1e-6)
+    # end to end: correlations from both backends agree
+    from repro.core.join_correlation import CombinedSketch
+    row = lambda S, d: CombinedSketch(*[jnp.asarray(x)[d] for x in S])
+    cf = float(estimate_join_correlation(row(fast, 0), row(fast, 1)))
+    cr = float(estimate_join_correlation(row(ref, 0), row(ref, 1)))
+    np.testing.assert_allclose(cf, cr, atol=1e-5)
+
+
+def test_combined_corpus_backend_switch():
+    rng = np.random.default_rng(17)
+    A = jnp.asarray(_corpus(rng, D=3, n=1200, density=0.4))
+    for method in ("priority", "threshold"):
+        sp = combined_sketch_corpus(A, 32, 3, method=method,
+                                    backend="pallas")
+        sr = combined_sketch_corpus(A, 32, 3, method=method,
+                                    backend="reference")
+        np.testing.assert_array_equal(np.asarray(sp.idx), np.asarray(sr.idx))
+
+
+# ---------------------------------------------------------------------------
+# sparse (indices, values) construction
+# ---------------------------------------------------------------------------
+
+
+def test_sparse_indices_build_matches_dense():
+    rng = np.random.default_rng(18)
+    a = _corpus(rng, D=1, n=3000, density=0.1)[0]
+    nz = np.nonzero(a)[0].astype(np.int32)
+    vals = a[nz]
+    dense = priority_sketch(jnp.asarray(a), 48, 7)
+    sparse = priority_sketch(jnp.asarray(vals), 48, 7,
+                             indices=jnp.asarray(nz))
+    _assert_sketch_parity(sparse, dense, tau_exact=True)
+    sparse_f = build_priority_corpus(jnp.asarray(vals)[None, :], 48, 7,
+                                     indices=jnp.asarray(nz))
+    _assert_sketch_parity(
+        Sketch(sparse_f.idx[0], sparse_f.val[0], sparse_f.tau[0]), dense,
+        tau_exact=True)
+
+
+def test_sparse_indices_unsorted_input_normalized():
+    # the fused builders sort (indices, values) so Sketch.idx stays
+    # ascending (the estimators' searchsorted contract) for any input order
+    rng = np.random.default_rng(19)
+    a = _corpus(rng, D=1, n=2000, density=0.1)[0]
+    nz = np.nonzero(a)[0].astype(np.int32)
+    perm = rng.permutation(len(nz))
+    dense = priority_sketch(jnp.asarray(a), 32, 7)
+    vals_p = jnp.asarray(a[nz][perm])[None, :]
+    idx_p = jnp.asarray(nz[perm])
+    for build in (build_priority_corpus, build_threshold_corpus):
+        shuf = build(vals_p, 32, 7, indices=idx_p)
+        row = np.asarray(shuf.idx[0])
+        assert np.all(np.diff(row[row != INVALID_IDX]) > 0)
+    shuf = build_priority_corpus(vals_p, 32, 7, indices=idx_p)
+    _assert_sketch_parity(Sketch(shuf.idx[0], shuf.val[0], shuf.tau[0]),
+                          dense, tau_exact=True)
