@@ -1,0 +1,177 @@
+"""Merge throughput: partitioned (map-reduce / streaming) sketch maintenance
+vs rebuilding from scratch (DESIGN.md §14).
+
+The serving story for a row-partitioned corpus is *incremental*: when one
+partition's rows change, rebuild that partition's sketches (O(n/P) work)
+and fold the P partition sketches back together with a log2(P)-deep tree of
+batched merges (O(P m) work on sketch-sized data) — instead of re-sketching
+all n rows.  Contenders per (method, D, n, m, P) point:
+
+- ``rebuild``: the fused linear-time builder over the full (D, n) corpus —
+  the best single-shot baseline this repo has (PR 2);
+- ``merged``: rebuild ONE dirty partition (D, n/P) + tree-merge all P
+  partition sketches.  Bit-exact against ``rebuild`` for priority sampling
+  (checked every run).
+
+The acceptance gate requires merged >= 3x rebuild at the headline point
+(priority, D=256, n=2^16, m=256, P=8 on CPU); the asymptotic ratio is ~P
+minus merge overhead.  A second family of rows reports the serving-layer
+bucketized merge (``kernels/sketch_merge``, one launch for D rows) in
+merged rows/sec.
+
+Standalone entry point writes ``BENCH_merge.json``:
+
+    PYTHONPATH=src python -m benchmarks.merge_throughput \
+        --json-out BENCH_merge.json
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketches import Sketch
+from repro.distributed import partition_bounds, tree_merge_sketches
+from repro.kernels import bucketize_corpus, merge_bucketized_corpora
+from repro.kernels.sketch_build import build_priority_corpus
+
+from .common import Csv, time_callable
+
+# (D, n, m, P)
+HEADLINE = (256, 1 << 16, 256, 8)
+HEADLINE_SPEEDUP = 3.0
+
+QUICK_POINTS = [
+    HEADLINE,
+    (64, 1 << 14, 128, 8),
+]
+FULL_POINTS = QUICK_POINTS + [
+    (256, 1 << 16, 256, 4),
+    (256, 1 << 16, 256, 16),
+]
+
+
+def _bench_point(D: int, n: int, m: int, P: int, seed: int = 3, *,
+                 n_rep: int = 3) -> dict:
+    rng = np.random.default_rng(D * 31 + P)
+    A = jnp.asarray(rng.standard_normal((D, n)).astype(np.float32))
+    bounds = partition_bounds(n, P)
+    dirty = P // 2
+    s, e = bounds[dirty]
+
+    rebuild = jax.jit(lambda M: build_priority_corpus(M, m, seed))
+
+    part_idxs = [jnp.arange(a, b, dtype=jnp.int32) for (a, b) in bounds]
+    parts = [build_priority_corpus(A[:, a:b], m, seed, indices=part_idxs[p])
+             for p, (a, b) in enumerate(bounds)]
+    stacked = Sketch(idx=jnp.stack([p.idx for p in parts]),
+                     val=jnp.stack([p.val for p in parts]),
+                     tau=jnp.stack([p.tau for p in parts]))
+
+    @jax.jit
+    def merged_build(dirty_block, parts_sk: Sketch):
+        fresh = build_priority_corpus(dirty_block, m, seed,
+                                      indices=part_idxs[dirty])
+        parts_sk = jax.tree.map(lambda x, y: x.at[dirty].set(y),
+                                parts_sk, fresh)
+        # column partitions are disjoint by construction: no duplicate scan
+        return tree_merge_sketches(parts_sk, seed, m=m, dedupe=False)
+
+    us_rebuild = time_callable(rebuild, A, n_rep=n_rep, warmup=1)
+    us_merged = time_callable(merged_build, A[:, s:e], stacked,
+                              n_rep=n_rep, warmup=1)
+
+    full = rebuild(A)
+    mg = merged_build(A[:, s:e], stacked)
+    exact = (bool(np.array_equal(np.asarray(full.idx), np.asarray(mg.idx)))
+             and bool(np.array_equal(np.asarray(full.val), np.asarray(mg.val)))
+             and bool(np.array_equal(np.asarray(full.tau), np.asarray(mg.tau))))
+
+    # serving-layer point: one batched bucketized merge for all D rows
+    half = n // 2
+    lo = bucketize_corpus(build_priority_corpus(A[:, :half], m, seed))
+    hi = bucketize_corpus(build_priority_corpus(
+        A[:, half:], m, seed,
+        indices=jnp.arange(half, n, dtype=jnp.int32)))
+    bmerge = jax.jit(functools.partial(merge_bucketized_corpora,
+                                       seed=seed, m=m))
+    us_bucket = time_callable(lambda a, b: bmerge(a, b), lo, hi,
+                              n_rep=n_rep, warmup=1)
+
+    return {
+        "D": D, "n": n, "m": m, "P": P,
+        "us_rebuild": us_rebuild,
+        "us_merged": us_merged,
+        "us_bucketized_merge": us_bucket,
+        "sketches_per_sec_rebuild": D / (us_rebuild * 1e-6),
+        "sketches_per_sec_merged": D / (us_merged * 1e-6),
+        "bucketized_merges_per_sec": D / (us_bucket * 1e-6),
+        "speedup": us_rebuild / us_merged,
+        "bit_exact": exact,
+    }
+
+
+def run(quick: bool = True) -> Csv:
+    csv = Csv()
+    points = QUICK_POINTS if quick else FULL_POINTS
+    results = []
+    for (D, n, m, P) in points:
+        r = _bench_point(D, n, m, P)
+        results.append(r)
+        tag = f"merge/priority_D{D}_n{n}_m{m}_P{P}"
+        csv.add(f"{tag}/rebuild", r["us_rebuild"],
+                f"sketches_per_sec={r['sketches_per_sec_rebuild']:.1f}")
+        csv.add(f"{tag}/merged", r["us_merged"],
+                f"sketches_per_sec={r['sketches_per_sec_merged']:.1f}"
+                f";speedup={r['speedup']:.2f}"
+                f";bit_exact={r['bit_exact']}")
+        csv.add(f"{tag}/bucketized", r["us_bucketized_merge"],
+                f"merged_rows_per_sec={r['bucketized_merges_per_sec']:.1f}")
+    head = [r for r in results
+            if (r["D"], r["n"], r["m"], r["P"]) == HEADLINE]
+    gate = bool(head and head[0]["speedup"] >= HEADLINE_SPEEDUP)
+    detail = f";speedup={head[0]['speedup']:.2f}" if head else ";missing"
+    csv.add("merge/validate/speedup_3x_rebuild_headline", 0.0,
+            ("PASS" if gate else "FAIL") + detail)
+    parity = all(r["bit_exact"] for r in results)
+    csv.add("merge/validate/merged_bit_exact", 0.0,
+            "PASS" if parity else "FAIL")
+    csv.results = results  # for the JSON emitter
+    return csv
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json-out", default="BENCH_merge.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    csv = run(quick=not args.full)
+    payload = {
+        "benchmark": "merge_throughput",
+        "backend": jax.default_backend(),
+        "headline": {"point": {"D": HEADLINE[0], "n": HEADLINE[1],
+                               "m": HEADLINE[2], "P": HEADLINE[3]},
+                     "required_speedup": HEADLINE_SPEEDUP},
+        "points": csv.results,
+        "rows": [{"name": n, "us_per_call": u, "derived": d}
+                 for n, u, d in csv.rows],
+    }
+    with open(args.json_out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.json_out}")
+    failures = [(n, d) for n, _, d in csv.rows
+                if "/validate/" in n and "FAIL" in d]
+    if failures:
+        print(f"# VALIDATION FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,8 @@ import time
 
 from . import (allpairs_throughput, construction_throughput,
                fig3_synthetic_ip, fig4_binary, fig5_endbiased, fig6_join_corr,
-               fig7_runtime, fig9_textsim, fig10_joinsize, table2_realworld)
+               fig7_runtime, fig9_textsim, fig10_joinsize, merge_throughput,
+               table2_realworld)
 
 MODULES = [
     ("fig3_synthetic_ip", fig3_synthetic_ip),
@@ -31,6 +32,7 @@ MODULES = [
     ("fig10_joinsize", fig10_joinsize),
     ("allpairs_throughput", allpairs_throughput),
     ("construction_throughput", construction_throughput),
+    ("merge_throughput", merge_throughput),
 ]
 
 

@@ -1,6 +1,11 @@
 """Quickstart: sketch two vectors, estimate their inner product with a
 confidence interval, and compare against the linear-sketch baseline.
 
+Sketches are built through the fused linear-time pipeline
+(``backend="pallas"``, the production construction path since PR 2); the
+final asserts check the paper's error guarantees, so this example doubles
+as an end-to-end smoke test.
+
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
@@ -25,19 +30,30 @@ true = float(a @ b)
 
 # --- the paper's methods: coordinated (same seed!) weighted sampling ---
 seed = 42
-sa = priority_sketch(jnp.asarray(a), m, seed)      # Algorithm 3, size == m
-sb = priority_sketch(jnp.asarray(b), m, seed)
+sa = priority_sketch(jnp.asarray(a), m, seed, backend="pallas")  # Alg. 3
+sb = priority_sketch(jnp.asarray(b), m, seed, backend="pallas")
 est = float(estimate_inner_product(sa, sb))        # Algorithm 2, unbiased
 lo, hi = chebyshev_interval(est, float(a @ a), float(b @ b), m)
 print(f"true <a,b>            = {true:+.3f}")
 print(f"priority sampling     = {est:+.3f}   95% CI [{float(lo):+.1f}, {float(hi):+.1f}]")
 
-ta = threshold_sketch(jnp.asarray(a), m, seed)     # Algorithm 1 (+ Alg. 4)
-tb = threshold_sketch(jnp.asarray(b), m, seed)
-print(f"threshold sampling    = {float(estimate_inner_product(ta, tb)):+.3f}"
+ta = threshold_sketch(jnp.asarray(a), m, seed, backend="pallas")  # Alg. 1+4
+tb = threshold_sketch(jnp.asarray(b), m, seed, backend="pallas")
+est_t = float(estimate_inner_product(ta, tb))
+print(f"threshold sampling    = {est_t:+.3f}"
       f"   (sketch size {int(ta.size())}, E[size]=m)")
 
 # --- linear-sketch baseline at the same storage (1.5x samples rule) ---
 ca = countsketch(jnp.asarray(a), int(m * 1.5), seed)
 cb = countsketch(jnp.asarray(b), int(m * 1.5), seed)
 print(f"CountSketch baseline  = {float(countsketch_estimate(ca, cb)):+.3f}")
+
+# smoke-test teeth: Theorem 1/3 concentration — the scaled error
+# |est - true| / (||a|| ||b||) is O(1/sqrt(m)); 8x covers the tail
+# comfortably at this seed while still failing on any real regression.
+bound = 8.0 / np.sqrt(m)
+for name, e in (("priority", est), ("threshold", est_t)):
+    scaled = abs(e - true) / (np.linalg.norm(a) * np.linalg.norm(b))
+    assert scaled < bound, f"{name} scaled error {scaled:.4f} > {bound:.4f}"
+assert int(sa.size()) == m, "priority sketch must have exactly m samples"
+print("error bounds ok")

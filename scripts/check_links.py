@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in the markdown docs.
+
+Checks every ``[text](target)`` in the given files (default: README.md,
+DESIGN.md, docs/*.md, examples and benchmarks referenced from them) whose
+target is *not* an external URL: the referenced file must exist relative
+to the markdown file's directory (anchors are stripped; ``#section``
+fragments within a file are not validated).  Also checks that ``§N``
+DESIGN.md sections cited anywhere in the docs actually exist.
+
+    python scripts/check_links.py [files...]
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SECTION_CITE = re.compile(r"DESIGN\.md\s+§(\d+)")
+SECTION_DEF = re.compile(r"^##\s+§(\d+)\b", re.M)
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def default_files() -> list:
+    files = [REPO / "README.md", REPO / "DESIGN.md", REPO / "ROADMAP.md"]
+    files += sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.exists()]
+
+
+def _rel(f: Path) -> str:
+    try:
+        return str(f.relative_to(REPO))
+    except ValueError:
+        return str(f)
+
+
+def check(files) -> int:
+    errors = []
+    design = (REPO / "DESIGN.md").read_text()
+    defined = set(SECTION_DEF.findall(design))
+    for f in files:
+        text = f.read_text()
+        for target in LINK.findall(text):
+            if target.startswith(EXTERNAL) or target.startswith("#"):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (f.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{_rel(f)}: broken link -> {target}")
+        for sec in SECTION_CITE.findall(text):
+            if sec not in defined:
+                errors.append(f"{_rel(f)}: cites DESIGN.md §{sec}, "
+                              "which is not defined")
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    checked = ", ".join(_rel(f) for f in files)
+    print(f"checked {len(files)} files ({checked}): "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    args = [Path(a).resolve() for a in sys.argv[1:]]
+    sys.exit(check(args or default_files()))

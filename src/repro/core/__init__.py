@@ -34,6 +34,8 @@ from .baselines import (MinHashSketch, WMHSketch, countsketch,
                         minhash_estimate, minhash_sketch, wmh_estimate,
                         wmh_sketch)
 from .batched import estimate_all_pairs, estimate_query, sketch_corpus
+from .merge import (PartitionStats, merge_combined_sketches, merge_sketches,
+                    merge_sketches_many, merge_stats, partition_stats)
 from .variance import (chebyshev_interval, error_guarantee,
                        linear_sketch_error, sketch_size_high_prob,
                        variance_bound)
@@ -52,6 +54,8 @@ __all__ = [
     "jl_estimate", "jl_sketch", "minhash_estimate", "minhash_sketch",
     "wmh_estimate", "wmh_sketch",
     "estimate_all_pairs", "estimate_query", "sketch_corpus",
+    "PartitionStats", "merge_combined_sketches", "merge_sketches",
+    "merge_sketches_many", "merge_stats", "partition_stats",
     "chebyshev_interval", "error_guarantee", "linear_sketch_error",
     "sketch_size_high_prob", "variance_bound",
 ]

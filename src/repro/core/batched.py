@@ -23,8 +23,10 @@ def sketch_corpus(A: jnp.ndarray, m: int, seed, *, method: str = "priority",
                   variant: str = "l2", backend: str = "reference") -> Sketch:
     """Sketch every row of A: (D, n) -> Sketch with leading batch dim D.
 
-    All rows share the same seed — that is what makes the samples
-    *coordinated* across vectors (Section 2 of the paper).
+    ``method`` selects the sampling scheme: ``"priority"`` (Algorithm 3)
+    or ``"threshold"`` (Algorithms 1+4).  All rows share the same seed —
+    that is what makes the samples *coordinated* across vectors (Section 2
+    of the paper).
 
     ``backend="reference"`` vmaps the single-vector sort/top_k builders;
     ``backend="pallas"`` runs the batched linear-time build pipeline
@@ -60,10 +62,11 @@ def estimate_all_pairs(SA: Sketch, SB: Sketch, *, variant: str = "l2",
     """(D1, cap) x (D2, cap) sketches -> (D1, D2) inner product estimates.
 
     ``backend="reference"`` runs the exact nested-vmap searchsorted join;
-    ``backend="pallas"`` re-lays both corpora into the bucketized format and
-    runs the tiled all-pairs kernel (``estimate_all_pairs_bucketized``) —
-    identical up to bucket-overflow drops, which are rare for
-    ``n_buckets >= cap`` (DESIGN.md §4, §12).
+    ``backend="pallas"`` re-lays both corpora into the bucketized
+    ``(n_buckets, slots)`` format and runs the tiled all-pairs kernel
+    (``estimate_all_pairs_bucketized``) — identical up to bucket-overflow
+    drops, which are rare for ``n_buckets >= cap`` (DESIGN.md §4, §12).
+    ``n_buckets``/``slots`` only apply to the pallas backend.
     """
     if backend == "pallas":
         # local import: repro.kernels itself imports from repro.core

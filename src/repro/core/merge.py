@@ -1,0 +1,437 @@
+"""Merging coordinated sketches of row-partitioned data (DESIGN.md §14).
+
+The paper's sketches are *coordinated samples*: every partition hashes a
+coordinate with the same seed, so a sketch of a row-partitioned vector is
+recoverable from the partitions' sketches alone — union the kept entries and
+re-apply the rank cutoff.  This is the primitive behind map-reduce sketch
+construction (``repro.distributed.partitioned_build``), multi-host corpora,
+and streaming re-ingestion: re-sketch only the dirty partition, then merge.
+
+Semantics (all derivations in DESIGN.md §14):
+
+- **Priority** (Algorithm 3): the (m+1)-st smallest sampling rank of the
+  merged vector is always present among the parts' kept ranks and published
+  taus, so the merged ``tau`` is an exact order statistic of that candidate
+  multiset (computed bit-exactly with ``kth_smallest_ranks``) and the kept
+  set follows by comparison.  ``merge_sketches`` is **bit-exact** against
+  ``priority_sketch`` of the merged vector.
+- **Threshold** (Algorithms 1+4): inclusion is the deterministic test
+  ``h <= tau * w`` and the merged adaptive ``tau`` is always <= each part's
+  tau, so every merged-kept entry survives in some part sketch.  Recomputing
+  the adaptive tau needs each partition's total weight and nonzero count
+  (``PartitionStats`` — O(1) extra state per partition); the capped prefix
+  the closed form inspects is deterministically kept, so the merged tau is
+  exact up to summation-order rounding.
+- **Combined** (Algorithms 5/6): per-family taus are rescaled to the merged
+  normalization and combined conservatively (min), with a global re-cut at
+  the (m+1)-st smallest min-rank so the merged sketch respects capacity.
+  The result is a valid coordinated sample under the published taus (the
+  estimator contract of ``combined_estimates``), not bit-identical to a
+  single-shot combined build.
+
+Partitions must have **disjoint supports** (row partitioning); coordinates
+present in both parts must carry identical values (replicated rows) and are
+deduplicated by rank coordination — same seed, same index, same value means
+the same rank, so either copy stands for the entry.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import hash_unit
+from .join_correlation import CombinedSketch
+from .sketches import (INVALID_IDX, Sketch, default_capacity, sampling_ranks,
+                       select_and_pack, weight)
+
+
+class PartitionStats(NamedTuple):
+    """O(1) per-partition state needed to merge *threshold* sketches.
+
+    ``total_weight``: sum of sampling weights over the partition (the ``W``
+    of Algorithm 4); ``nnz``: number of nonzero entries.  Both are additive
+    across disjoint partitions (``merge_stats``).  Priority merges need
+    neither — their tau is a pure rank order statistic.
+    """
+
+    total_weight: jnp.ndarray  # f32, scalar or (D,)
+    nnz: jnp.ndarray           # int32, scalar or (D,)
+
+
+def partition_stats(A: jnp.ndarray, *, variant: str = "l2") -> PartitionStats:
+    """Stats of a (n,) vector or (D, n) block of partition rows."""
+    W = weight(jnp.asarray(A, jnp.float32), variant)
+    return PartitionStats(total_weight=jnp.sum(W, axis=-1),
+                          nnz=jnp.sum(W > 0, axis=-1).astype(jnp.int32))
+
+
+def merge_stats(a: PartitionStats, b: PartitionStats) -> PartitionStats:
+    """Stats of the union of two disjoint partitions."""
+    return PartitionStats(total_weight=a.total_weight + b.total_weight,
+                          nnz=a.nnz + b.nnz)
+
+
+# ---------------------------------------------------------------------------
+# Union plumbing shared by every merge
+# ---------------------------------------------------------------------------
+
+
+def _dedup_b(idx_a: jnp.ndarray, idx_b: jnp.ndarray) -> jnp.ndarray:
+    """True at b-entries whose coordinate also appears in a (searchsorted
+    against a's idx-sorted layout); those are coordinated duplicates and the
+    a-side copy stands for the entry."""
+    def one(ia, ib):
+        pos = jnp.clip(jnp.searchsorted(ia, ib), 0, ia.shape[0] - 1)
+        return (jnp.take(ia, pos) == ib) & (ib != INVALID_IDX)
+    return jax.vmap(one)(idx_a, idx_b)
+
+
+def _dup_earlier(parts_idx: jnp.ndarray) -> jnp.ndarray:
+    """(P, D, cap) part coordinates -> mask of entries already present in an
+    earlier part (first occurrence stands for the entry)."""
+    n_parts = parts_idx.shape[0]
+    dup = [jnp.zeros(parts_idx.shape[1:], bool)]
+    for j in range(1, n_parts):
+        d = jnp.zeros(parts_idx.shape[1:], bool)
+        for i in range(j):
+            d = d | _dedup_b(parts_idx[i], parts_idx[j])
+        dup.append(d)
+    return jnp.stack(dup)
+
+
+def _union_many(parts: Sketch, seed, variant: str, dedupe: bool):
+    """Flatten (P, D, cap) parts into (D, P*cap) union lanes with recomputed
+    sampling ranks; duplicates (unless ``dedupe=False``) and padding carry
+    rank +inf (padding has val 0 -> weight 0).  Ranks are recomputed from
+    the stored (idx, val) — the hash is stateless, which is what makes
+    sketches mergeable without any side channel.
+    """
+    n_parts, D, cap = parts.idx.shape
+    idx_u = jnp.transpose(parts.idx, (1, 0, 2)).reshape(D, n_parts * cap)
+    val_u = jnp.transpose(parts.val, (1, 0, 2)).reshape(D, n_parts * cap)
+    w = weight(val_u, variant)
+    ranks = sampling_ranks(w, hash_unit(seed, idx_u))
+    if dedupe:
+        dup = _dup_earlier(parts.idx)
+        keep_lane = ~jnp.transpose(dup, (1, 0, 2)).reshape(D, n_parts * cap)
+        ranks = jnp.where(keep_lane, ranks, jnp.inf)
+    return idx_u, val_u, ranks
+
+
+def _pack(ranks, include, idx_u, val_u, cap: int, tau) -> Sketch:
+    kidx, kval = jax.vmap(
+        lambda s, i, ix, v: select_and_pack(s, i, ix, v, cap))(
+            ranks, include, idx_u, val_u)
+    return Sketch(idx=kidx, val=kval, tau=tau.astype(jnp.float32))
+
+
+def _kth_smallest(keys: jnp.ndarray, k: int) -> jnp.ndarray:
+    # local import: repro.kernels imports from repro.core at module scope
+    from repro.kernels.sketch_build import kth_smallest_ranks
+    return kth_smallest_ranks(keys, k)
+
+
+# ---------------------------------------------------------------------------
+# Priority merge (bit-exact)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("m", "variant", "dedupe"))
+def _merge_priority(parts: Sketch, seed, *, m: int, variant: str,
+                    dedupe: bool) -> Sketch:
+    idx_u, val_u, ranks = _union_many(parts, seed, variant, dedupe)
+    # The (m+1)-st smallest merged rank is either kept in some part or equals
+    # that part's tau (DESIGN.md §14), so the candidate multiset
+    # {kept ranks} ∪ {part taus} contains it exactly.
+    cand = jnp.concatenate([ranks, parts.tau.T], axis=-1)
+    tau = _kth_smallest(cand, m + 1)
+    include = ranks < tau[:, None]
+    return _pack(ranks, include, idx_u, val_u, m, tau)
+
+
+# ---------------------------------------------------------------------------
+# Threshold merge (exact up to summation order, needs PartitionStats)
+# ---------------------------------------------------------------------------
+
+
+def _adaptive_tau_union(w_u: jnp.ndarray, W: jnp.ndarray, nnz: jnp.ndarray,
+                        m: int) -> jnp.ndarray:
+    """Adaptive tau (Algorithm 4 closed form) of the merged vector from the
+    union's kept weights plus the partitions' total weight.
+
+    Entries absent from the union were random-dropped, hence uncapped under
+    every candidate tau (a capped entry has inclusion probability 1 and is
+    always kept), so they only contribute suffix mass — which ``W`` supplies
+    exactly, up to summation order.  Mirrors ``threshold.adaptive_tau``.
+    """
+    K = w_u.shape[1]
+    w_sorted = -jnp.sort(-w_u, axis=1)
+    # one zero column so the scan can select k == K (all union entries
+    # capped, remaining mass uncapped)
+    w_sorted = jnp.concatenate(
+        [w_sorted, jnp.zeros((w_u.shape[0], 1), w_u.dtype)], axis=1)
+    W_rest = jnp.maximum(W - jnp.sum(w_u, axis=1), 0.0)
+    suffix_in = jnp.cumsum(w_sorted[:, ::-1], axis=1)[:, ::-1]
+    suffix = suffix_in + W_rest[:, None]
+    ks_i = jnp.arange(K + 1, dtype=jnp.int32)
+    ks = ks_i.astype(w_u.dtype)
+    m_f = jnp.asarray(m, w_u.dtype)
+    tau_k = jnp.where(suffix > 0,
+                      (m_f - ks[None, :]) / jnp.where(suffix > 0, suffix, 1.0),
+                      jnp.inf)
+    not_capped_next = tau_k * w_sorted < 1.0
+    w_prev = jnp.concatenate([w_sorted[:, :1], w_sorted[:, :-1]], axis=1)
+    capped_prev = jnp.where(ks_i[None, :] > 0,
+                            tau_k * w_prev >= 1.0 - 1e-6, True)
+    valid = not_capped_next & capped_prev & (m_f - ks[None, :] > 0)
+    k_star = jnp.argmax(valid, axis=1)
+    tau = jnp.take_along_axis(tau_k, k_star[:, None], axis=1)[:, 0]
+    any_valid = jnp.any(valid, axis=1)
+    tau = jnp.where(~any_valid, jnp.where(W > 0, m_f / W, 0.0), tau)
+    # nnz <= m: every entry of every partition was kept, so the union IS the
+    # merged vector and its min nonzero weight is exact.
+    w_min_nz = jnp.min(jnp.where(w_u > 0, w_u, jnp.inf), axis=1)
+    tau_all = jnp.where(jnp.isfinite(w_min_nz), 1.0 / w_min_nz, jnp.inf)
+    return jnp.where(nnz <= m, tau_all, tau)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "variant", "cap", "adaptive",
+                                    "dedupe"))
+def _merge_threshold(parts: Sketch, seed, stats, *, m: int,
+                     variant: str, cap: int, adaptive: bool,
+                     dedupe: bool) -> Sketch:
+    idx_u, val_u, ranks = _union_many(parts, seed, variant, dedupe)
+    w_u = jnp.where(jnp.isfinite(ranks), weight(val_u, variant), 0.0)
+    if adaptive:
+        W, nnz = stats
+        tau = _adaptive_tau_union(w_u, W, nnz, m)
+    elif stats is not None:
+        W, _ = stats
+        tau = jnp.where(W > 0, m / W, 0.0)
+    else:
+        # non-adaptive tau = m / W_part, so each part's W is recoverable
+        W = jnp.sum(jnp.where(parts.tau > 0, m / parts.tau, 0.0), axis=0)
+        tau = jnp.where(W > 0, m / W, 0.0)
+    h_u = hash_unit(seed, idx_u)
+    include = jnp.isfinite(ranks) & (w_u > 0) & (h_u <= tau[:, None] * w_u)
+    # overflow beyond cap evicts largest ranks first, exactly as the builders
+    # do (select_and_pack keeps the smallest-rank cap entries)
+    return _pack(ranks, include, idx_u, val_u, cap, tau)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+
+def _stack_for_merge(parts):
+    """List of sketches (or an already-stacked Sketch) -> ((P, D, cap)
+    Sketch, squeeze) with per-part cap padding so heterogeneous capacities
+    stack; 1-D parts lift to a singleton batch dim."""
+    if isinstance(parts, Sketch):
+        stacked = parts
+    else:
+        cap = max(p.idx.shape[-1] for p in parts)
+
+        def pad(p: Sketch) -> Sketch:
+            extra = cap - p.idx.shape[-1]
+            if extra == 0:
+                return p
+            widths = [(0, 0)] * (p.idx.ndim - 1) + [(0, extra)]
+            return Sketch(
+                jnp.pad(p.idx, widths, constant_values=INVALID_IDX),
+                jnp.pad(p.val, widths), p.tau)
+
+        padded = [pad(p) for p in parts]
+        stacked = Sketch(
+            idx=jnp.stack([p.idx for p in padded]),
+            val=jnp.stack([p.val for p in padded]),
+            tau=jnp.stack([jnp.asarray(p.tau, jnp.float32) for p in padded]))
+    if stacked.idx.ndim == 2:                  # (P, cap) single-vector parts
+        return Sketch(stacked.idx[:, None], stacked.val[:, None],
+                      stacked.tau.reshape(-1, 1)), True
+    return Sketch(stacked.idx, stacked.val,
+                  stacked.tau.reshape(stacked.idx.shape[:2])), False
+
+
+def _fold_stats(stats, adaptive: bool, method: str):
+    """PartitionStats with leading part dim -> summed ((D,), (D,)) pair."""
+    if method != "threshold":
+        return None
+    if stats is None:
+        if adaptive:
+            raise ValueError(
+                "merging adaptive threshold sketches needs PartitionStats "
+                "for every part (tau = m'/W does not expose W); collect "
+                "them with partition_stats() at build time")
+        return None
+    W = jnp.asarray(stats.total_weight, jnp.float32)
+    nnz = jnp.asarray(stats.nnz, jnp.int32)
+    return (jnp.sum(W.reshape(W.shape[0], -1), axis=0),
+            jnp.sum(nnz.reshape(nnz.shape[0], -1), axis=0))
+
+
+def merge_sketches_many(parts, seed, *, m: int, method: str = "priority",
+                        variant: str = "l2", cap: int | None = None,
+                        adaptive: bool = True,
+                        stats: PartitionStats | None = None,
+                        dedupe: bool = True) -> Sketch:
+    """Sketch of the union of P disjoint partitions from their sketches.
+
+    ``parts``: list of same-seed sketches (or a stacked ``Sketch`` with a
+    leading partition dim) — (P, cap) single-vector parts or (P, D, cap)
+    corpus parts.  The merge is associative, so the whole reduce runs as
+    ONE flat P-way union: one rank-selection pass for tau and one
+    compaction, which is both cheaper than a pairwise merge tree and
+    result-identical to it (DESIGN.md §14).  ``stats`` stacks every part's
+    :func:`partition_stats` along the leading dim, required when
+    ``method="threshold"`` and ``adaptive=True``.  ``dedupe=False`` skips
+    the cross-part duplicate scan when the caller *guarantees* disjoint
+    supports (e.g. the column slices of ``partitioned_sketch_corpus``) —
+    with replicated coordinates it would double-count them.
+    """
+    parts, squeeze = _stack_for_merge(parts)
+    if method == "priority":
+        out = _merge_priority(parts, seed, m=m, variant=variant,
+                              dedupe=dedupe)
+    elif method == "threshold":
+        folded = _fold_stats(stats, adaptive, method)
+        out = _merge_threshold(parts, seed, folded, m=m, variant=variant,
+                               cap=default_capacity(m) if cap is None else cap,
+                               adaptive=adaptive, dedupe=dedupe)
+    else:
+        raise ValueError(f"unknown method {method!r}; "
+                         "expected 'priority' or 'threshold'")
+    if squeeze:
+        return Sketch(out.idx[0], out.val[0], out.tau[0])
+    return out
+
+
+def merge_sketches(a: Sketch, b: Sketch, seed, *, m: int,
+                   method: str = "priority", variant: str = "l2",
+                   cap: int | None = None, adaptive: bool = True,
+                   stats_a: PartitionStats | None = None,
+                   stats_b: PartitionStats | None = None) -> Sketch:
+    """Sketch of the union of two disjoint partitions from their sketches.
+
+    ``a``/``b``: same-seed sketches of the partitions, built by the ``m``,
+    ``method``, ``variant`` given here (single sketches or corpora with a
+    leading batch dim — both parts must agree in rank).  Partition supports
+    must be disjoint; coordinates in both parts must carry equal values and
+    are deduplicated.
+
+    ``method="priority"``: bit-exact vs ``priority_sketch`` of the merged
+    vector (tau is the (m+1)-st smallest rank of the union candidates).
+    ``method="threshold"``: needs ``stats_a``/``stats_b``
+    (:func:`partition_stats`) when ``adaptive=True``; exact kept set, tau
+    equal to the single-shot build up to summation-order rounding.  With
+    ``adaptive=False`` stats are optional (``W = m/tau`` is recoverable).
+
+    Associative: ``merge(merge(a, b), c)`` == ``merge(a, merge(b, c))``
+    (stats merge with :func:`merge_stats`); P-way reduces should prefer the
+    single-pass :func:`merge_sketches_many`.  See DESIGN.md §14.
+    """
+    if (stats_a is None) != (stats_b is None):
+        raise ValueError("pass PartitionStats for both sides or neither")
+    stats = None
+    if stats_a is not None:
+        stats = PartitionStats(
+            total_weight=jnp.stack([
+                jnp.asarray(stats_a.total_weight, jnp.float32),
+                jnp.asarray(stats_b.total_weight, jnp.float32)]),
+            nnz=jnp.stack([jnp.asarray(stats_a.nnz, jnp.int32),
+                           jnp.asarray(stats_b.nnz, jnp.int32)]))
+    return merge_sketches_many([a, b], seed, m=m, method=method,
+                               variant=variant, cap=cap, adaptive=adaptive,
+                               stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# Combined (join-correlation) merge
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("m", "cap"))
+def _merge_combined(a: CombinedSketch, b: CombinedSketch, seed, *, m: int,
+                    cap: int) -> CombinedSketch:
+    s_m = jnp.maximum(a.scale, b.scale)
+
+    def side_ranks(idx, val):
+        h = hash_unit(seed, idx)
+        w1 = (val != 0).astype(jnp.float32)
+        vn = val / s_m[:, None]
+        wv = vn * vn
+        ws = wv * wv
+        def r(w):
+            return jnp.where(w > 0, h / jnp.maximum(w, 1e-30), jnp.inf)
+        return r(w1), r(wv), r(ws)
+
+    dup = _dedup_b(a.idx, b.idx)
+    idx_u = jnp.concatenate([a.idx, b.idx], axis=-1)
+    val_u = jnp.concatenate([a.val, b.val], axis=-1)
+    r1, rv, rs = side_ranks(idx_u, val_u)
+    keep_lane = jnp.concatenate([jnp.ones(a.idx.shape, bool), ~dup], axis=-1)
+    r1 = jnp.where(keep_lane, r1, jnp.inf)
+    rv = jnp.where(keep_lane, rv, jnp.inf)
+    rs = jnp.where(keep_lane, rs, jnp.inf)
+
+    # part taus live in their own max-|a| normalization; rank_m = rank_part *
+    # (s_m / s_part)^2 for the value family (^4 for squares, ^1 for ones)
+    def to_merged(s):
+        f = s_m / s.scale
+        return (s.tau_ones, s.tau_val * f ** 2, s.tau_sq * f ** 4)
+
+    t1a, tva, tsa = to_merged(a)
+    t1b, tvb, tsb = to_merged(b)
+    tau1 = jnp.minimum(t1a, t1b)
+    tauv = jnp.minimum(tva, tvb)
+    taus = jnp.minimum(tsa, tsb)
+    # conservative global re-cut so the merged sketch fits cap entries: the
+    # (m+1)-st smallest min-family rank bounds the kept count by m
+    scores = jnp.minimum(r1, jnp.minimum(rv, rs))
+    c = _kth_smallest(scores, m + 1) if scores.shape[1] >= m + 1 \
+        else jnp.full(scores.shape[:1], jnp.inf, jnp.float32)
+    tau1 = jnp.minimum(tau1, c)
+    tauv = jnp.minimum(tauv, c)
+    taus = jnp.minimum(taus, c)
+    include = ((r1 < tau1[:, None]) | (rv < tauv[:, None])
+               | (rs < taus[:, None]))
+    kidx, kval = jax.vmap(
+        lambda s, i, ix, v: select_and_pack(s, i, ix, v, cap))(
+            scores, include, idx_u, val_u)
+    return CombinedSketch(kidx, kval, tau1.astype(jnp.float32),
+                          tauv.astype(jnp.float32), taus.astype(jnp.float32),
+                          s_m.astype(jnp.float32))
+
+
+def merge_combined_sketches(a: CombinedSketch, b: CombinedSketch, seed, *,
+                            m: int, cap: int | None = None) -> CombinedSketch:
+    """Merge two join-correlation sketches of disjoint partitions.
+
+    Per-family taus are rescaled to the merged max-|a| normalization and
+    combined conservatively (min over parts, tightened by the (m+1)-st
+    smallest min-family rank so the result fits ``cap``).  The output is a
+    valid coordinated sample under its published taus — the
+    ``combined_estimates`` contract — but, unlike the plain priority merge,
+    not bit-identical to a single-shot combined build (DESIGN.md §14).
+    """
+    squeeze = a.idx.ndim == 1
+
+    def lift(s: CombinedSketch) -> CombinedSketch:
+        if s.idx.ndim == 1:
+            return CombinedSketch(
+                s.idx[None], s.val[None],
+                *(jnp.asarray(t, jnp.float32).reshape(1)
+                  for t in (s.tau_ones, s.tau_val, s.tau_sq, s.scale)))
+        return s
+
+    if cap is None:
+        cap = max(a.idx.shape[-1], b.idx.shape[-1])
+    out = _merge_combined(lift(a), lift(b), seed, m=m, cap=cap)
+    if squeeze:
+        return CombinedSketch(*(f[0] for f in out))
+    return out

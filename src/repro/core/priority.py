@@ -20,6 +20,8 @@ def priority_sketch(a: jnp.ndarray, m: int, seed, *, variant: str = "l2",
                     backend: str = "reference") -> Sketch:
     """Fixed-size-m sketch of a dense vector ``a`` (or sparse (indices, a)).
 
+    For pre-sparsified inputs pass the nonzero values in ``a`` and their
+    original coordinates in ``indices`` (construction is then O(nnz)).
     ``backend="pallas"`` routes through the linear-time fused build pipeline
     (``repro.kernels.sketch_build``), which finds the (m+1)-st smallest rank
     with a log-domain histogram descent instead of this ``top_k`` over all n

@@ -71,6 +71,9 @@ def threshold_sketch(a: jnp.ndarray, m: int, seed, *, variant: str = "l2",
 
     ``a``: dense vector (n,).  For pre-sparsified inputs pass the nonzero
     values in ``a`` and their original coordinates in ``indices``.
+    ``adaptive=False`` uses the plain non-adaptive scale ``tau = m/W``
+    instead of Algorithm 4.  ``cap`` overrides the fixed capacity
+    ``m + 4 ceil(sqrt(m))`` (overflow semantics: DESIGN.md §10).
     ``backend="pallas"`` routes through the linear-time fused build pipeline
     (``repro.kernels.sketch_build``); ``"reference"`` is this sort-based
     closed form, which doubles as the parity oracle.

@@ -13,6 +13,9 @@ VMEM tiling), ``ops.py`` (jit'd public wrapper, interpret=True off-TPU) and
 - ``intersect_estimate`` bucketized batched estimator: one query vs a corpus
   (serving path) and the tiled all-pairs / co-moments kernel that emits the
   full (D1, D2) estimate matrix in one launch (the O(D^2 m) workload)
+- ``sketch_merge``       batched merge of two bucketized corpora: per-bucket
+  union + dedupe + rank re-cut in one launch for all D rows — the serving
+  half of the partition-merge subsystem (DESIGN.md §14)
 """
 from .hash_rank import (hash_rank, hash_rank_batched, hash_rank_batched_ref,
                         hash_rank_ref)
@@ -23,6 +26,8 @@ from .sketch_build import (build_combined_priority_corpus,
 from .countsketch import countsketch as countsketch_kernel
 from .countsketch import countsketch_ref
 from .jl_rademacher import jl_project, jl_ref
+from .sketch_merge import (merge_bucketized_corpora, merge_bucketized_pallas,
+                           merge_bucketized_ref, merged_tau_bucketized)
 from .intersect_estimate import (MOMENT_CHANNELS, BucketizedSketch,
                                  allpairs_estimate_ref, allpairs_moments,
                                  bucketize, bucketize_corpus,
@@ -36,6 +41,8 @@ __all__ = [
     "build_priority_corpus", "build_threshold_corpus",
     "build_combined_priority_corpus", "build_combined_threshold_corpus",
     "kth_smallest_ranks",
+    "merge_bucketized_corpora", "merge_bucketized_pallas",
+    "merge_bucketized_ref", "merged_tau_bucketized",
     "countsketch_kernel", "countsketch_ref",
     "jl_project", "jl_ref",
     "BucketizedSketch", "bucketize", "bucketize_corpus", "bucketize_payloads",

@@ -1,0 +1,99 @@
+"""Jit'd public wrappers for the batched bucketized-corpus merge.
+
+Split mirrors the build pipeline (DESIGN.md §13/§14):
+
+1. **Merged tau** — a per-row rank order statistic.  Ranks of every slot on
+   both sides are recomputed from the stored (idx, val) (the hash is
+   stateless), b-side duplicates are masked by the shared-bucket compare,
+   and the (m+1)-st smallest of {ranks} ∪ {tau_a, tau_b} is resolved with
+   the exact selection primitive ``kth_smallest_ranks`` — the same statistic
+   the core ``merge_sketches`` uses, so the two paths agree.
+2. **Block-wise union/compact** — the Pallas kernel (or its jnp oracle)
+   merges all D rows in one launch without leaving the bucketized layout.
+
+Threshold-style corpora can pass a caller-computed ``tau`` (e.g. the
+adaptive merged tau from ``core.merge``) — the kernel itself is tau-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import hash_unit
+from repro.core.sketches import INVALID_IDX, sampling_ranks, weight
+
+from ..intersect_estimate.ops import BucketizedSketch
+from ..sketch_build.ops import kth_smallest_ranks, resolve_use_pallas
+from .ref import merge_bucketized_ref
+from .sketch_merge import merge_bucketized_pallas
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("m", "variant"))
+def merged_tau_bucketized(A: BucketizedSketch, B: BucketizedSketch, seed, *,
+                          m: int, variant: str = "l2") -> jnp.ndarray:
+    """Per-row merged priority tau: the (m+1)-st smallest rank of the union
+    candidates (kept ranks of both sides, b-duplicates masked, plus both
+    published taus — DESIGN.md §14)."""
+    D, Bk, S = A.idx.shape
+
+    def ranks(idx, val):
+        w = weight(val.astype(jnp.float32), variant)
+        r = sampling_ranks(w, hash_unit(seed, idx))
+        return jnp.where(idx != INVALID_IDX, r, jnp.inf)
+
+    ra = ranks(A.idx, A.val)
+    rb = ranks(B.idx, B.val)
+    dup = jnp.zeros(B.idx.shape, bool)
+    for s in range(S):
+        a_s = A.idx[:, :, s]
+        dup = dup | ((B.idx == a_s[:, :, None])
+                     & (a_s != INVALID_IDX)[:, :, None])
+    rb = jnp.where(dup, jnp.inf, rb)
+    cand = jnp.concatenate(
+        [ra.reshape(D, -1), rb.reshape(D, -1),
+         jnp.reshape(A.tau, (D, 1)), jnp.reshape(B.tau, (D, 1))], axis=1)
+    return kth_smallest_ranks(cand, m + 1)
+
+
+@functools.partial(jax.jit, static_argnames=("variant", "use_pallas"))
+def _merge_dispatch(a_idx, a_val, b_idx, b_val, tau, seed, *, variant: str,
+                    use_pallas: bool):
+    if use_pallas:
+        return merge_bucketized_pallas(a_idx, a_val, b_idx, b_val, tau, seed,
+                                       variant=variant,
+                                       interpret=_use_interpret())
+    return merge_bucketized_ref(a_idx, a_val, b_idx, b_val, tau, seed,
+                                variant=variant)
+
+
+def merge_bucketized_corpora(A: BucketizedSketch, B: BucketizedSketch,
+                             seed, *, m: int, variant: str = "l2",
+                             tau: jnp.ndarray | None = None,
+                             use_pallas: bool | None = None
+                             ) -> BucketizedSketch:
+    """Row-wise merge of two coordinated (D, B, S) bucketized corpora.
+
+    Row ``d`` of the result is the bucketized sketch of the union of the two
+    partitions row ``d`` was built from (priority semantics unless a
+    caller-computed ``tau`` overrides the order statistic).  ``dropped``
+    accumulates both inputs' counts plus entries lost where a merged bucket
+    needed more than S slots.  ``use_pallas=None`` resolves like the build
+    pipeline: Pallas on TPU, the fused XLA oracle elsewhere.
+    """
+    if A.idx.shape != B.idx.shape:
+        raise ValueError(f"corpus shapes differ: {A.idx.shape} vs "
+                         f"{B.idx.shape}")
+    if tau is None:
+        tau = merged_tau_bucketized(A, B, seed, m=m, variant=variant)
+    out_idx, out_val, new_drop = _merge_dispatch(
+        A.idx, A.val, B.idx, B.val, tau, seed, variant=variant,
+        use_pallas=resolve_use_pallas(use_pallas))
+    dropped = A.dropped + B.dropped + new_drop
+    return BucketizedSketch(out_idx, out_val,
+                            jnp.asarray(tau, jnp.float32), dropped)

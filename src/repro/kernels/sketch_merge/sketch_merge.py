@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: batched merge of two bucketized sketch corpora.
+
+Coordinated sketches share the bucket seed, so a coordinate present in both
+corpora lands in the *same bucket* on both sides — merging two bucketized
+corpora (DESIGN.md §4 layout) is therefore a per-bucket problem: union the
+2S candidate slots, drop b-side duplicates, keep entries whose recomputed
+sampling rank beats the merged ``tau`` (computed once per row on the host
+from the rank order statistic, see ops.py), and compact back to S slots in
+coordinate order.  No sorting, no dynamic shapes: the dedupe is an S x S
+lane-wise compare and the compaction a 2S x 2S position count — the same
+static-slot-loop idiom as ``kernels/intersect_estimate``.
+
+One launch merges all D rows of the corpora (grid over D), which is the
+serving-layer ingredient for partition-merge ingestion: two ``SketchIndex``
+block sets built over different row-partitions combine without ever leaving
+the bucketized layout or touching the raw vectors (DESIGN.md §14).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import hash_unit
+from repro.core.sketches import INVALID_IDX, sampling_ranks, weight
+
+
+def _ranks(idx: jnp.ndarray, val: jnp.ndarray, seed, variant: str):
+    """Sampling rank h(idx)/w(val); +inf at padding (val 0 -> weight 0)."""
+    w = weight(val.astype(jnp.float32), variant)
+    return sampling_ranks(w, hash_unit(seed, idx))
+
+
+def _merge_kernel(seed_ref, tau_ref, ai_ref, av_ref, bi_ref, bv_ref,
+                  oi_ref, ov_ref, drop_ref, *, slots: int, variant: str):
+    ai = ai_ref[0]                    # (B, S)
+    av = av_ref[0].astype(jnp.float32)
+    bi = bi_ref[0]
+    bv = bv_ref[0].astype(jnp.float32)
+    tau = tau_ref[0, 0]
+    seed = seed_ref[0, 0]
+
+    ra = _ranks(ai, av, seed, variant)
+    rb = _ranks(bi, bv, seed, variant)
+    keep_a = (ai != INVALID_IDX) & (ra < tau)
+    # b-side duplicates: same coordinate hashes to the same bucket on both
+    # sides, so an S x S slot compare within the bucket finds every one
+    dup = jnp.zeros(bi.shape, bool)
+    for s in range(slots):
+        a_s = ai[:, s]
+        dup = dup | ((bi == a_s[:, None]) & (a_s != INVALID_IDX)[:, None])
+    keep_b = (bi != INVALID_IDX) & ~dup & (rb < tau)
+
+    cand_idx = jnp.concatenate([ai, bi], axis=1)        # (B, 2S)
+    cand_val = jnp.concatenate([av, bv], axis=1)
+    keep = jnp.concatenate([keep_a, keep_b], axis=1)
+    # canonical coordinate order: a kept candidate's output slot is the
+    # number of kept candidates with a smaller coordinate (keys are unique
+    # after dedupe; dropped lanes carry INVALID = int32 max and sink)
+    key = jnp.where(keep, cand_idx, INVALID_IDX)
+    pos = jnp.zeros(key.shape, jnp.int32)
+    for k in range(2 * slots):
+        pos = pos + (key[:, k][:, None] < key).astype(jnp.int32)
+    out_i, out_v = [], []
+    for t in range(slots):
+        col_i = jnp.full(key.shape[:1], INVALID_IDX, jnp.int32)
+        col_v = jnp.zeros(key.shape[:1], jnp.float32)
+        for j in range(2 * slots):
+            sel = keep[:, j] & (pos[:, j] == t)
+            col_i = jnp.where(sel, cand_idx[:, j], col_i)
+            col_v = jnp.where(sel, cand_val[:, j], col_v)
+        out_i.append(col_i)
+        out_v.append(col_v)
+    oi_ref[0] = jnp.stack(out_i, axis=1)
+    ov_ref[0] = jnp.stack(out_v, axis=1)
+    # entries the merged bucket cannot hold (> S kept): counted like
+    # bucketize's own overflow accounting
+    drop_ref[0, 0] = jnp.sum((keep & (pos >= slots)).astype(jnp.int32))
+
+
+def merge_bucketized_pallas(a_idx, a_val, b_idx, b_val, tau, seed, *,
+                            variant: str = "l2", interpret: bool = True):
+    """Merge two (D, B, S) bucketized corpora under per-row merged ``tau``.
+
+    Returns ``(out_idx (D,B,S), out_val (D,B,S), dropped (D,) int32)`` where
+    ``dropped`` counts entries lost to bucket overflow *during the merge*
+    (union needed more than S slots).  One launch for all D merges.
+    """
+    D, B, S = a_idx.shape
+    assert b_idx.shape == (D, B, S), (a_idx.shape, b_idx.shape)
+    kern = functools.partial(_merge_kernel, slots=S, variant=variant)
+    oi, ov, drop = pl.pallas_call(
+        kern,
+        out_shape=(jax.ShapeDtypeStruct((D, B, S), jnp.int32),
+                   jax.ShapeDtypeStruct((D, B, S), jnp.float32),
+                   jax.ShapeDtypeStruct((D, 1), jnp.int32)),
+        grid=(D,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda d: (0, 0)),
+            pl.BlockSpec((1, 1), lambda d: (d, 0)),
+            pl.BlockSpec((1, B, S), lambda d: (d, 0, 0)),
+            pl.BlockSpec((1, B, S), lambda d: (d, 0, 0)),
+            pl.BlockSpec((1, B, S), lambda d: (d, 0, 0)),
+            pl.BlockSpec((1, B, S), lambda d: (d, 0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, B, S), lambda d: (d, 0, 0)),
+                   pl.BlockSpec((1, B, S), lambda d: (d, 0, 0)),
+                   pl.BlockSpec((1, 1), lambda d: (d, 0))),
+        interpret=interpret,
+    )(jnp.asarray(seed, jnp.int32).reshape(1, 1),
+      jnp.asarray(tau, jnp.float32).reshape(D, 1),
+      a_idx, a_val, b_idx, b_val)
+    return oi, ov, drop.reshape(D)

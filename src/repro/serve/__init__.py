@@ -1,5 +1,5 @@
 """Serving: batched LM engine + sketch index service."""
 from .engine import Engine, Request
-from .sketch_service import SketchIndex
+from .sketch_service import ShardedSketchIndex, SketchIndex
 
-__all__ = ["Engine", "Request", "SketchIndex"]
+__all__ = ["Engine", "Request", "ShardedSketchIndex", "SketchIndex"]

@@ -27,11 +27,21 @@ import jax.numpy as jnp
 from repro.core import INVALID_IDX, priority_sketch
 from repro.kernels import (BucketizedSketch, bucketize, bucketize_corpus,
                            build_priority_corpus,
-                           estimate_all_pairs_bucketized, query_corpus,
+                           estimate_all_pairs_bucketized,
+                           merge_bucketized_corpora, query_corpus,
                            round_up_pow2)
 
 
 class SketchIndex:
+    """Incremental priority-sketch index.
+
+    ``m``: samples per indexed vector; ``n_buckets``/``slots``: the
+    bucketized serving layout (``n_buckets >= 2 m`` keeps overflow drops
+    near zero, DESIGN.md §4); ``seed``: the shared coordination seed —
+    indexes can only be queried against / merged with same-seed sketches;
+    ``initial_capacity``: starting row allocation (grows by doubling).
+    """
+
     def __init__(self, m: int = 256, *, n_buckets: int = 512, slots: int = 4,
                  seed: int = 11, initial_capacity: int = 64):
         self.m = m
@@ -174,3 +184,126 @@ class SketchIndex:
             c, c, use_pallas=use_pallas))
         D = len(self._names)
         return est[:D, :D]
+
+    def merge_from(self, other: "SketchIndex") -> None:
+        """Merge a partition-peer index into this one, row by row, without
+        leaving the bucketized layout (DESIGN.md §14).
+
+        ``other`` must index the *same names in the same order*, each row
+        sketching a disjoint coordinate partition of the same logical vector
+        (e.g. two ingestion hosts each sketching half the rows of every
+        column).  One ``kernels/sketch_merge`` launch merges all rows; raw
+        vectors are never touched.  Exact up to bucket-overflow drops on
+        either side (counted in ``total_dropped``; rare for the default
+        ``n_buckets >= 2 m`` sizing, DESIGN.md §4) — an entry already lost
+        to a full bucket cannot re-enter the union.
+        """
+        if (other.m, other.n_buckets, other.slots, other.seed) != \
+                (self.m, self.n_buckets, self.slots, self.seed):
+            raise ValueError("indexes must share m/n_buckets/slots/seed "
+                             "to merge")
+        if other._names != self._names:
+            raise ValueError("row names must align for a partition merge")
+        D = len(self._names)
+        if D == 0:
+            return
+        mine = BucketizedSketch(
+            jnp.asarray(self._idx[:D]), jnp.asarray(self._val[:D]),
+            jnp.asarray(self._tau[:D]), jnp.asarray(self._dropped[:D]))
+        theirs = BucketizedSketch(
+            jnp.asarray(other._idx[:D]), jnp.asarray(other._val[:D]),
+            jnp.asarray(other._tau[:D]), jnp.asarray(other._dropped[:D]))
+        merged = merge_bucketized_corpora(mine, theirs, self.seed, m=self.m)
+        self._idx[:D] = np.asarray(merged.idx)
+        self._val[:D] = np.asarray(merged.val)
+        self._tau[:D] = np.asarray(merged.tau)
+        self._dropped[:D] = np.asarray(merged.dropped)
+        self._device_corpus = None
+
+
+class ShardedSketchIndex:
+    """Corpus-dim sharded serving: rows scatter round-robin over per-shard
+    ``SketchIndex`` block sets (one per device/host in a real deployment),
+    and reads run over the merged view — ``query`` fans out one kernel
+    launch per shard and reassembles, ``all_pairs`` tiles the global (D, D)
+    estimate matrix from per-shard-pair launches.  Each shard keeps its own
+    pre-allocated power-of-two blocks, so ingestion scales shard-locally
+    (amortized O(m) per add, no cross-shard traffic until read time).
+    """
+
+    def __init__(self, num_shards: int = 2, **index_kwargs):
+        if num_shards < 1:
+            raise ValueError("need at least one shard")
+        self.num_shards = num_shards
+        self._shards = [SketchIndex(**index_kwargs)
+                        for _ in range(num_shards)]
+        self._names: list = []
+        self._homes: list = []   # global row -> (shard, row-in-shard)
+
+    def __len__(self):
+        return len(self._names)
+
+    @property
+    def total_dropped(self) -> int:
+        return sum(s.total_dropped for s in self._shards)
+
+    def _route(self) -> int:
+        return len(self._names) % self.num_shards
+
+    def add(self, name, vector: Optional[np.ndarray] = None, *,
+            indices: Optional[np.ndarray] = None,
+            values: Optional[np.ndarray] = None) -> None:
+        s = self._route()
+        # delegate first: a rejected add must not leave a dangling home
+        self._shards[s].add(name, vector, indices=indices, values=values)
+        self._homes.append((s, len(self._shards[s]) - 1))
+        self._names.append(name)
+
+    def add_many(self, names: Sequence, matrix: np.ndarray) -> None:
+        """Scatter a (D, n) block round-robin: one batched ``add_many`` per
+        shard, preserving the global insertion order for reads."""
+        matrix = np.asarray(matrix, np.float32)
+        if matrix.ndim != 2 or matrix.shape[0] != len(names):
+            raise ValueError("matrix must be (len(names), n)")
+        rows_of = [[] for _ in range(self.num_shards)]
+        for k, name in enumerate(names):
+            s = self._route()
+            self._homes.append((s, len(self._shards[s]) + len(rows_of[s])))
+            self._names.append(name)
+            rows_of[s].append(k)
+        for s, rows in enumerate(rows_of):
+            if rows:
+                self._shards[s].add_many([names[k] for k in rows],
+                                         matrix[rows])
+
+    def query(self, vector: np.ndarray, top_k: Optional[int] = None):
+        """Fan out one bucketized launch per shard, reassemble globally."""
+        per = [s.query(vector) if len(s) else [] for s in self._shards]
+        est = np.empty(len(self._names), np.float32)
+        for g, (s, r) in enumerate(self._homes):
+            est[g] = per[s][r][1]
+        if top_k is None:
+            return list(zip(self._names, est.tolist()))
+        order = np.argsort(-est)[:top_k]
+        return [(self._names[i], float(est[i])) for i in order]
+
+    def all_pairs(self, *, use_pallas: bool = True) -> np.ndarray:
+        """Global (D, D) estimates assembled from shard-pair launches."""
+        D = len(self._names)
+        out = np.zeros((D, D), np.float32)
+        gids = [[] for _ in range(self.num_shards)]
+        for g, (s, _) in enumerate(self._homes):
+            gids[s].append(g)
+        for i in range(self.num_shards):
+            if not gids[i]:
+                continue
+            ci = self._shards[i]._corpus()
+            for j in range(self.num_shards):
+                if not gids[j]:
+                    continue
+                cj = self._shards[j]._corpus()
+                blk = np.asarray(estimate_all_pairs_bucketized(
+                    ci, cj, use_pallas=use_pallas))
+                out[np.ix_(gids[i], gids[j])] = \
+                    blk[: len(gids[i]), : len(gids[j])]
+        return out

@@ -1,0 +1,347 @@
+"""Merge subsystem contract (DESIGN.md §14):
+
+- priority merge is bit-exact (idx/val/tau) vs sketching the merged vector;
+- threshold merge reproduces the kept set exactly and the adaptive tau up
+  to summation-order rounding, given PartitionStats;
+- merges are associative and tree-reduce equals the single-shot build;
+- edge cases: disjoint interleaved supports, identical partitions,
+  empty/all-zero partitions, nnz < m partitions;
+- the combined (join-correlation) merge stays estimator-valid.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from _subproc import run_with_devices
+from repro.core import (combined_priority_sketch, estimate_inner_product,
+                        estimate_join_correlation, merge_combined_sketches,
+                        merge_sketches, merge_sketches_many, merge_stats,
+                        partition_stats, priority_sketch, sketch_corpus,
+                        threshold_sketch)
+from repro.core.sketches import INVALID_IDX
+from repro.distributed import (partition_bounds, partitioned_sketch_corpus,
+                               tree_merge_sketches)
+
+VARIANTS = ("l2", "l1", "uniform")
+
+
+def _split(rng, a, interleaved=True):
+    """Two disjoint-support partitions of ``a`` (random interleaved mask or
+    contiguous halves)."""
+    n = a.shape[0]
+    mask = rng.random(n) < 0.5 if interleaved else \
+        (np.arange(n) < n // 2)
+    lo = np.where(mask, a, 0.0).astype(np.float32)
+    hi = np.where(mask, 0.0, a).astype(np.float32)
+    return lo, hi
+
+
+def _sparse(rng, n, density=0.3):
+    a = rng.standard_normal(n).astype(np.float32)
+    return np.where(rng.random(n) < density, a, 0.0).astype(np.float32)
+
+
+def _assert_bit_exact(got, want):
+    np.testing.assert_array_equal(np.asarray(got.idx), np.asarray(want.idx))
+    np.testing.assert_array_equal(np.asarray(got.val), np.asarray(want.val))
+    np.testing.assert_array_equal(np.asarray(got.tau), np.asarray(want.tau))
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_priority_merge_bit_exact(variant):
+    rng = np.random.default_rng(0)
+    a = _sparse(rng, 6000)
+    lo, hi = _split(rng, a)
+    m, seed = 96, 7
+    full = priority_sketch(jnp.asarray(a), m, seed, variant=variant)
+    mg = merge_sketches(priority_sketch(jnp.asarray(lo), m, seed, variant=variant),
+                        priority_sketch(jnp.asarray(hi), m, seed, variant=variant),
+                        seed, m=m, variant=variant)
+    _assert_bit_exact(mg, full)
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_threshold_merge_exact_kept_set(variant):
+    rng = np.random.default_rng(1)
+    a = _sparse(rng, 6000)
+    lo, hi = _split(rng, a)
+    m, seed = 96, 9
+    full = threshold_sketch(jnp.asarray(a), m, seed, variant=variant)
+    mg = merge_sketches(
+        threshold_sketch(jnp.asarray(lo), m, seed, variant=variant),
+        threshold_sketch(jnp.asarray(hi), m, seed, variant=variant),
+        seed, m=m, method="threshold", variant=variant,
+        stats_a=partition_stats(lo, variant=variant),
+        stats_b=partition_stats(hi, variant=variant))
+    np.testing.assert_array_equal(np.asarray(mg.idx), np.asarray(full.idx))
+    np.testing.assert_array_equal(np.asarray(mg.val), np.asarray(full.val))
+    np.testing.assert_allclose(np.asarray(mg.tau), np.asarray(full.tau),
+                               rtol=1e-5)
+
+
+def test_threshold_merge_nonadaptive_recovers_W_from_tau():
+    rng = np.random.default_rng(2)
+    a = _sparse(rng, 4000)
+    lo, hi = _split(rng, a)
+    m, seed = 64, 5
+    full = threshold_sketch(jnp.asarray(a), m, seed, adaptive=False)
+    mg = merge_sketches(
+        threshold_sketch(jnp.asarray(lo), m, seed, adaptive=False),
+        threshold_sketch(jnp.asarray(hi), m, seed, adaptive=False),
+        seed, m=m, method="threshold", adaptive=False)
+    np.testing.assert_array_equal(np.asarray(mg.idx), np.asarray(full.idx))
+    np.testing.assert_allclose(np.asarray(mg.tau), np.asarray(full.tau),
+                               rtol=1e-6)
+
+
+def test_threshold_adaptive_merge_requires_stats():
+    rng = np.random.default_rng(3)
+    a = _sparse(rng, 1000)
+    lo, hi = _split(rng, a)
+    sa = threshold_sketch(jnp.asarray(lo), 32, 1)
+    sb = threshold_sketch(jnp.asarray(hi), 32, 1)
+    with pytest.raises(ValueError, match="PartitionStats"):
+        merge_sketches(sa, sb, 1, m=32, method="threshold")
+    with pytest.raises(ValueError, match="both sides"):
+        merge_sketches(sa, sb, 1, m=32, method="threshold",
+                       stats_a=partition_stats(lo))
+
+
+def test_identical_partitions_dedupe_to_one():
+    rng = np.random.default_rng(4)
+    a = _sparse(rng, 3000)
+    sk = priority_sketch(jnp.asarray(a), 64, 3)
+    _assert_bit_exact(merge_sketches(sk, sk, 3, m=64), sk)
+
+
+def test_empty_partition_is_identity():
+    rng = np.random.default_rng(5)
+    a = _sparse(rng, 3000)
+    z = np.zeros_like(a)
+    m, seed = 64, 3
+    sa = priority_sketch(jnp.asarray(a), m, seed)
+    sz = priority_sketch(jnp.asarray(z), m, seed)
+    _assert_bit_exact(merge_sketches(sa, sz, seed, m=m), sa)
+    _assert_bit_exact(merge_sketches(sz, sa, seed, m=m), sa)
+    # both empty: still a valid empty sketch
+    both = merge_sketches(sz, sz, seed, m=m)
+    assert int(both.size()) == 0
+    assert np.isinf(float(both.tau))
+    # threshold flavor, with stats
+    ta = threshold_sketch(jnp.asarray(a), m, seed)
+    tz = threshold_sketch(jnp.asarray(z), m, seed)
+    mg = merge_sketches(ta, tz, seed, m=m, method="threshold",
+                        stats_a=partition_stats(a), stats_b=partition_stats(z))
+    np.testing.assert_array_equal(np.asarray(mg.idx), np.asarray(ta.idx))
+
+
+def test_small_nnz_partitions_keep_everything():
+    rng = np.random.default_rng(6)
+    n, m, seed = 3000, 64, 11
+    lo = np.zeros(n, np.float32)
+    hi = np.zeros(n, np.float32)
+    lo[rng.choice(n // 2, 20, replace=False)] = rng.standard_normal(20)
+    hi[n // 2 + rng.choice(n // 2, 25, replace=False)] = \
+        rng.standard_normal(25)
+    full = priority_sketch(jnp.asarray(lo + hi), m, seed)
+    mg = merge_sketches(priority_sketch(jnp.asarray(lo), m, seed),
+                        priority_sketch(jnp.asarray(hi), m, seed),
+                        seed, m=m)
+    _assert_bit_exact(mg, full)
+    assert np.isinf(float(mg.tau))          # nnz <= m: keep-everything tau
+    assert int(mg.size()) == 45
+
+
+def test_merge_associative():
+    rng = np.random.default_rng(7)
+    n, m, seed = 6000, 64, 13
+    a = _sparse(rng, n)
+    thirds = np.floor(rng.random(n) * 3)
+    parts = [np.where(thirds == i, a, 0.0).astype(np.float32)
+             for i in range(3)]
+    ps = [priority_sketch(jnp.asarray(p), m, seed) for p in parts]
+    left = merge_sketches(merge_sketches(ps[0], ps[1], seed, m=m), ps[2],
+                          seed, m=m)
+    right = merge_sketches(ps[0], merge_sketches(ps[1], ps[2], seed, m=m),
+                           seed, m=m)
+    _assert_bit_exact(left, right)
+    _assert_bit_exact(left, priority_sketch(jnp.asarray(a), m, seed))
+    # threshold: associativity with stats folding
+    ts = [threshold_sketch(jnp.asarray(p), m, seed) for p in parts]
+    st = [partition_stats(p) for p in parts]
+    left = merge_sketches(
+        merge_sketches(ts[0], ts[1], seed, m=m, method="threshold",
+                       stats_a=st[0], stats_b=st[1]),
+        ts[2], seed, m=m, method="threshold",
+        stats_a=merge_stats(st[0], st[1]), stats_b=st[2])
+    right = merge_sketches(
+        ts[0], merge_sketches(ts[1], ts[2], seed, m=m, method="threshold",
+                              stats_a=st[1], stats_b=st[2]),
+        seed, m=m, method="threshold",
+        stats_a=st[0], stats_b=merge_stats(st[1], st[2]))
+    np.testing.assert_array_equal(np.asarray(left.idx), np.asarray(right.idx))
+    np.testing.assert_allclose(np.asarray(left.tau), np.asarray(right.tau),
+                               rtol=1e-5)
+
+
+def test_merge_many_flat_equals_pairwise_chain():
+    """The flat P-way union is result-identical to a pairwise merge chain
+    and to the single-shot build; dedupe=False matches on disjoint parts."""
+    rng = np.random.default_rng(13)
+    n, m, seed, P = 6000, 64, 27, 5
+    a = _sparse(rng, n)
+    owner = np.floor(rng.random(n) * P)
+    parts = [np.where(owner == i, a, 0.0).astype(np.float32)
+             for i in range(P)]
+    ps = [priority_sketch(jnp.asarray(p), m, seed) for p in parts]
+    flat = merge_sketches_many(ps, seed, m=m)
+    chain = ps[0]
+    for p in ps[1:]:
+        chain = merge_sketches(chain, p, seed, m=m)
+    _assert_bit_exact(flat, chain)
+    _assert_bit_exact(flat, priority_sketch(jnp.asarray(a), m, seed))
+    no_dedupe = merge_sketches_many(ps, seed, m=m, dedupe=False)
+    _assert_bit_exact(no_dedupe, flat)
+    # threshold flavor through the same P-way path
+    ts = [threshold_sketch(jnp.asarray(p), m, seed) for p in parts]
+    st = [partition_stats(p) for p in parts]
+    from repro.core import PartitionStats
+    stacked = PartitionStats(
+        total_weight=jnp.stack([s.total_weight for s in st]),
+        nnz=jnp.stack([s.nnz for s in st]))
+    mg = merge_sketches_many(ts, seed, m=m, method="threshold",
+                             stats=stacked)
+    full = threshold_sketch(jnp.asarray(a), m, seed)
+    np.testing.assert_array_equal(np.asarray(mg.idx), np.asarray(full.idx))
+    np.testing.assert_allclose(np.asarray(mg.tau), np.asarray(full.tau),
+                               rtol=1e-5)
+
+
+def test_batched_corpus_merge():
+    rng = np.random.default_rng(8)
+    D, n, m, seed = 6, 4000, 48, 17
+    A = np.where(rng.random((D, n)) < 0.3, rng.standard_normal((D, n)),
+                 0.0).astype(np.float32)
+    mask = rng.random(n) < 0.5
+    lo = np.where(mask[None, :], A, 0.0).astype(np.float32)
+    hi = np.where(mask[None, :], 0.0, A).astype(np.float32)
+    full = sketch_corpus(jnp.asarray(A), m, seed)
+    mg = merge_sketches(sketch_corpus(jnp.asarray(lo), m, seed),
+                        sketch_corpus(jnp.asarray(hi), m, seed), seed, m=m)
+    _assert_bit_exact(mg, full)
+
+
+@pytest.mark.parametrize("method,P", [("priority", 2), ("priority", 5),
+                                      ("priority", 8), ("threshold", 4)])
+def test_partitioned_corpus_matches_single_shot(method, P):
+    rng = np.random.default_rng(9)
+    D, n, m, seed = 8, 4096, 64, 19
+    A = np.where(rng.random((D, n)) < 0.3, rng.standard_normal((D, n)),
+                 0.0).astype(np.float32)
+    full = sketch_corpus(jnp.asarray(A), m, seed, method=method,
+                         backend="pallas")
+    mg = partitioned_sketch_corpus(jnp.asarray(A), m, seed,
+                                   num_partitions=P, method=method)
+    np.testing.assert_array_equal(np.asarray(mg.idx), np.asarray(full.idx))
+    np.testing.assert_array_equal(np.asarray(mg.val), np.asarray(full.val))
+    if method == "priority":
+        np.testing.assert_array_equal(np.asarray(mg.tau),
+                                      np.asarray(full.tau))
+    else:
+        np.testing.assert_allclose(np.asarray(mg.tau), np.asarray(full.tau),
+                                   rtol=1e-5)
+
+
+def test_tree_merge_list_input_and_single_vector_parts():
+    rng = np.random.default_rng(10)
+    n, m, seed = 3000, 48, 21
+    a = _sparse(rng, n)
+    bounds = partition_bounds(n, 3)
+    parts = []
+    for (s, e) in bounds:
+        p = np.zeros(n, np.float32)
+        p[s:e] = a[s:e]
+        parts.append(priority_sketch(jnp.asarray(p), m, seed))
+    mg = tree_merge_sketches(parts, seed, m=m)
+    _assert_bit_exact(mg, priority_sketch(jnp.asarray(a), m, seed))
+
+
+def test_partition_bounds_validation():
+    assert partition_bounds(10, 3) == [(0, 4), (4, 8), (8, 10)]
+    with pytest.raises(ValueError):
+        partition_bounds(4, 5)
+    with pytest.raises(ValueError):
+        partition_bounds(4, 0)
+
+
+def test_merged_estimates_stay_unbiased_enough():
+    """End-to-end: estimates from merged sketches hit the same error scale
+    as single-shot sketches (Theorem 3 concentration)."""
+    rng = np.random.default_rng(11)
+    n, m, seed = 20000, 256, 23
+    a = _sparse(rng, n, density=0.2)
+    b = np.where(a != 0, 0.7 * a + 0.3 * rng.standard_normal(n), 0.0) \
+        .astype(np.float32)
+    true = float(a @ b)
+    scale = float(np.linalg.norm(a) * np.linalg.norm(b))
+
+    def merged_sketch(v):
+        lo, hi = _split(rng, v)
+        return merge_sketches(priority_sketch(jnp.asarray(lo), m, seed),
+                              priority_sketch(jnp.asarray(hi), m, seed),
+                              seed, m=m)
+
+    est = float(estimate_inner_product(merged_sketch(a), merged_sketch(b)))
+    assert abs(est - true) / scale < 8.0 / np.sqrt(m)
+
+
+def test_combined_merge_estimator_valid():
+    rng = np.random.default_rng(12)
+    n, m, seed = 8000, 256, 25
+    x = _sparse(rng, n)
+    y = np.where(rng.random(n) < 0.3,
+                 0.6 * x + 0.4 * rng.standard_normal(n), 0.0) \
+        .astype(np.float32)
+    lo, hi = _split(rng, x)
+    cx = combined_priority_sketch(jnp.asarray(x), m, seed)
+    cy = combined_priority_sketch(jnp.asarray(y), m, seed)
+    cmg = merge_combined_sketches(
+        combined_priority_sketch(jnp.asarray(lo), m, seed),
+        combined_priority_sketch(jnp.asarray(hi), m, seed), seed, m=m)
+    # capacity respected, entries are a coordinated subset of x's support
+    assert int(cmg.size()) <= m
+    kept = np.asarray(cmg.idx)
+    kept = kept[kept != INVALID_IDX]
+    assert np.all(x[kept] != 0)
+    np.testing.assert_allclose(np.asarray(cmg.val)[np.asarray(cmg.idx)
+                                                   != INVALID_IDX],
+                               x[kept])
+    r_full = float(estimate_join_correlation(cx, cy))
+    r_merge = float(estimate_join_correlation(cmg, cy))
+    mask = (x != 0) & (y != 0)
+    r_true = float(np.corrcoef(x[mask], y[mask])[0, 1])
+    assert abs(r_merge - r_true) < max(0.15, 2 * abs(r_full - r_true) + 0.1)
+
+
+def test_sharded_build_matches_single_shot():
+    """shard_map map-reduce build over 8 fake CPU devices: bit-exact
+    priority merge, rounding-only threshold tau drift."""
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.distributed import partitioned_sketch_corpus_sharded
+from repro.kernels.sketch_build import build_priority_corpus, build_threshold_corpus
+
+rng = np.random.default_rng(2)
+D, n, m, seed = 8, 4096, 64, 17
+A = np.where(rng.random((D, n)) < 0.3, rng.standard_normal((D, n)), 0.0).astype(np.float32)
+full = build_priority_corpus(jnp.asarray(A), m, seed)
+mg = partitioned_sketch_corpus_sharded(jnp.asarray(A), m, seed)
+assert np.array_equal(np.asarray(full.idx), np.asarray(mg.idx))
+assert np.array_equal(np.asarray(full.val), np.asarray(mg.val))
+assert np.array_equal(np.asarray(full.tau), np.asarray(mg.tau))
+fullt = build_threshold_corpus(jnp.asarray(A), m, seed)
+mgt = partitioned_sketch_corpus_sharded(jnp.asarray(A), m, seed, method="threshold")
+assert np.array_equal(np.asarray(fullt.idx), np.asarray(mgt.idx))
+np.testing.assert_allclose(np.asarray(mgt.tau), np.asarray(fullt.tau), rtol=1e-5)
+print("OK")
+""")

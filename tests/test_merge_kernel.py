@@ -1,0 +1,176 @@
+"""Bucketized merge kernel parity (kernels/sketch_merge) and the serving
+layer built on it: Pallas (interpret off-TPU) vs the jnp oracle bit-exact,
+the bucketized path vs bucketizing the core merge, overflow accounting, and
+SketchIndex.merge_from / ShardedSketchIndex behavior.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import merge_sketches, sketch_corpus
+from repro.kernels import (bucketize_corpus, merge_bucketized_corpora,
+                           merge_bucketized_pallas, merge_bucketized_ref,
+                           merged_tau_bucketized)
+from repro.serve import ShardedSketchIndex, SketchIndex
+
+
+def _partitioned_corpora(rng, D=8, n=8192, m=96, seed=11, n_buckets=512):
+    A = np.where(rng.random((D, n)) < 0.3, rng.standard_normal((D, n)),
+                 0.0).astype(np.float32)
+    mask = rng.random(n) < 0.5
+    lo = np.where(mask[None, :], A, 0.0).astype(np.float32)
+    hi = np.where(mask[None, :], 0.0, A).astype(np.float32)
+    SL = sketch_corpus(jnp.asarray(lo), m, seed)
+    SH = sketch_corpus(jnp.asarray(hi), m, seed)
+    SA = sketch_corpus(jnp.asarray(A), m, seed)
+    BL = bucketize_corpus(SL, n_buckets=n_buckets, slots=4)
+    BH = bucketize_corpus(SH, n_buckets=n_buckets, slots=4)
+    return A, SL, SH, SA, BL, BH
+
+
+def test_bucketized_merge_matches_core_merge():
+    rng = np.random.default_rng(0)
+    A, SL, SH, SA, BL, BH = _partitioned_corpora(rng)
+    m, seed = 96, 11
+    assert int(np.sum(np.asarray(BL.dropped))) == 0
+    assert int(np.sum(np.asarray(BH.dropped))) == 0
+    merged_b = merge_bucketized_corpora(BL, BH, seed, m=m)
+    core = merge_sketches(SL, SH, seed, m=m)
+    want = bucketize_corpus(core, n_buckets=512, slots=4)
+    np.testing.assert_array_equal(np.asarray(merged_b.tau),
+                                  np.asarray(core.tau))
+    np.testing.assert_array_equal(np.asarray(merged_b.idx),
+                                  np.asarray(want.idx))
+    np.testing.assert_array_equal(np.asarray(merged_b.val),
+                                  np.asarray(want.val))
+    # and core merge equals the single-shot corpus sketch
+    np.testing.assert_array_equal(np.asarray(core.idx), np.asarray(SA.idx))
+
+
+def test_merge_kernel_pallas_bit_exact_vs_ref():
+    rng = np.random.default_rng(1)
+    _, _, _, _, BL, BH = _partitioned_corpora(rng)
+    m, seed = 96, 11
+    tau = merged_tau_bucketized(BL, BH, seed, m=m)
+    ref = merge_bucketized_ref(BL.idx, BL.val, BH.idx, BH.val, tau, seed)
+    pal = merge_bucketized_pallas(np.asarray(BL.idx), np.asarray(BL.val),
+                                  np.asarray(BH.idx), np.asarray(BH.val),
+                                  np.asarray(tau), seed, interpret=True)
+    for r, p in zip(ref, pal):
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(p))
+
+
+def test_merge_overflow_drops_are_counted():
+    """Tiny bucket space forces merged buckets past S slots; the merge must
+    count what it drops (and never write garbage)."""
+    rng = np.random.default_rng(2)
+    D, n, m, seed = 4, 4096, 64, 3
+    A = rng.standard_normal((D, n)).astype(np.float32)
+    lo = np.where(np.arange(n)[None, :] < n // 2, A, 0.0).astype(np.float32)
+    hi = np.where(np.arange(n)[None, :] < n // 2, 0.0, A).astype(np.float32)
+    BL = bucketize_corpus(sketch_corpus(jnp.asarray(lo), m, seed),
+                          n_buckets=16, slots=4)
+    BH = bucketize_corpus(sketch_corpus(jnp.asarray(hi), m, seed),
+                          n_buckets=16, slots=4)
+    merged = merge_bucketized_corpora(BL, BH, seed, m=m)
+    carried = int(np.sum(np.asarray(BL.dropped)) +
+                  np.sum(np.asarray(BH.dropped)))
+    new_drops = int(np.sum(np.asarray(merged.dropped))) - carried
+    assert new_drops > 0
+    # every surviving entry comes from one of the inputs (no garbage slots)
+    inputs = set(np.asarray(BL.idx).ravel()) | set(np.asarray(BH.idx).ravel())
+    survivors = np.asarray(merged.idx).ravel()
+    assert set(survivors[survivors != np.iinfo(np.int32).max]) <= inputs
+    # slots per bucket never exceed capacity (shape contract) and values at
+    # padding slots are zeroed
+    pad = np.asarray(merged.idx) == np.iinfo(np.int32).max
+    assert np.all(np.asarray(merged.val)[pad] == 0.0)
+
+
+def test_merge_from_partition_peer_index():
+    rng = np.random.default_rng(3)
+    n, m, D = 4096, 64, 12
+    M = np.where(rng.random((D, n)) < 0.3, rng.standard_normal((D, n)),
+                 0.0).astype(np.float32)
+    names = [f"col{d}" for d in range(D)]
+    lo = np.zeros_like(M); hi = np.zeros_like(M)
+    lo[:, : n // 2] = M[:, : n // 2]
+    hi[:, n // 2:] = M[:, n // 2:]
+    ix_lo = SketchIndex(m=m, n_buckets=256)
+    ix_hi = SketchIndex(m=m, n_buckets=256)
+    ix_full = SketchIndex(m=m, n_buckets=256)
+    ix_lo.add_many(names, lo)
+    ix_hi.add_many(names, hi)
+    ix_full.add_many(names, M)
+    assert ix_lo.total_dropped == ix_hi.total_dropped == 0
+    ix_lo.merge_from(ix_hi)
+    q = np.where(rng.random(n) < 0.3, rng.standard_normal(n), 0.0) \
+        .astype(np.float32)
+    em = np.array([e for _, e in ix_lo.query(q)])
+    ef = np.array([e for _, e in ix_full.query(q)])
+    np.testing.assert_array_equal(em, ef)
+    np.testing.assert_array_equal(ix_lo.all_pairs(), ix_full.all_pairs())
+
+
+def test_merge_from_validates_layout():
+    a = SketchIndex(m=32, n_buckets=64)
+    b = SketchIndex(m=64, n_buckets=64)
+    try:
+        a.merge_from(b)
+    except ValueError as e:
+        assert "share" in str(e)
+    else:  # pragma: no cover
+        raise AssertionError("mismatched m must be rejected")
+    c = SketchIndex(m=32, n_buckets=64)
+    a.add("x", np.ones(128, np.float32))
+    c.add("y", np.ones(128, np.float32))
+    try:
+        a.merge_from(c)
+    except ValueError as e:
+        assert "align" in str(e)
+    else:  # pragma: no cover
+        raise AssertionError("misaligned names must be rejected")
+
+
+def test_sharded_index_matches_flat_index():
+    rng = np.random.default_rng(4)
+    n, m, D = 4096, 64, 13
+    M = np.where(rng.random((D, n)) < 0.3, rng.standard_normal((D, n)),
+                 0.0).astype(np.float32)
+    names = [f"col{d}" for d in range(D)]
+    flat = SketchIndex(m=m, n_buckets=256)
+    sh = ShardedSketchIndex(num_shards=3, m=m, n_buckets=256)
+    flat.add_many(names, M)
+    sh.add_many(names, M)
+    extra = np.where(rng.random(n) < 0.3, rng.standard_normal(n), 0.0) \
+        .astype(np.float32)
+    flat.add("extra", extra)
+    sh.add("extra", extra)
+    assert len(sh) == len(flat) == D + 1
+    q = M[5]
+    e_flat = dict(flat.query(q))
+    e_sh = dict(sh.query(q))
+    assert set(e_flat) == set(e_sh)
+    for k in e_flat:
+        np.testing.assert_allclose(e_sh[k], e_flat[k], rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(sh.all_pairs(), flat.all_pairs(),
+                               rtol=1e-5, atol=1e-4)
+    # top-k ordering agrees with the flat index
+    assert [n_ for n_, _ in sh.query(q, top_k=3)] == \
+        [n_ for n_, _ in flat.query(q, top_k=3)]
+
+
+def test_sharded_index_survives_rejected_add():
+    """A delegate-rejected add must not leave a dangling name/home entry."""
+    sh = ShardedSketchIndex(num_shards=2, m=16, n_buckets=32)
+    v = np.ones(128, np.float32)
+    sh.add("ok", v)
+    try:
+        sh.add("bad", indices=np.arange(3), values=np.ones(5, np.float32))
+    except ValueError:
+        pass
+    else:  # pragma: no cover
+        raise AssertionError("mismatched sparse input must be rejected")
+    assert len(sh) == 1
+    sh.add("ok2", v)
+    est = dict(sh.query(v))
+    assert set(est) == {"ok", "ok2"}
