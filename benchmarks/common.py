@@ -78,8 +78,48 @@ def mean_scaled_error(method, pairs, m_budget: int, n_trials: int = 1) -> float:
     return float(np.mean(errs))
 
 
-def time_callable(fn, *args, n_rep: int = 5, warmup: int = 2) -> float:
-    """Median wall time (us) of a jax callable, post-warmup."""
+# Global repetition override, set by ``run.py --repeats N`` (PR 1 measured
+# ~2x wall-clock noise on this box; medians over more repeats tighten every
+# gate the same way, so one flag governs all suites).
+_REPEATS_OVERRIDE: int | None = None
+
+
+def set_repeats(n: int | None) -> None:
+    """Override every ``time_callable`` repetition count (None resets)."""
+    global _REPEATS_OVERRIDE
+    if n is not None and n < 1:
+        raise ValueError(f"--repeats must be >= 1, got {n}")
+    _REPEATS_OVERRIDE = n
+
+
+class Timing(float):
+    """Median wall time (us) that also carries the min and repeat count.
+
+    Compares/prints as its median, so every existing consumer keeps
+    working; JSON emitters read ``min_us``/``n_rep`` to report both center
+    and best-case (the benchmark convention: compare medians, keep min as
+    the noise floor).
+    """
+
+    min_us: float
+    n_rep: int
+
+    def __new__(cls, median_us: float, min_us: float, n_rep: int):
+        out = super().__new__(cls, median_us)
+        out.min_us = float(min_us)
+        out.n_rep = int(n_rep)
+        return out
+
+
+def time_callable(fn, *args, n_rep: int = 5, warmup: int = 2) -> Timing:
+    """Median wall time (us) of a jax callable, post-warmup.
+
+    Returns a :class:`Timing` (a float equal to the median) whose
+    ``min_us`` is the fastest repetition.  ``run.py --repeats N`` overrides
+    ``n_rep`` globally.
+    """
+    if _REPEATS_OVERRIDE is not None:
+        n_rep = _REPEATS_OVERRIDE
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     ts = []
@@ -87,7 +127,7 @@ def time_callable(fn, *args, n_rep: int = 5, warmup: int = 2) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts) * 1e6)
+    return Timing(float(np.median(ts) * 1e6), float(np.min(ts) * 1e6), n_rep)
 
 
 class Csv:

@@ -3,10 +3,14 @@
 
 Checks every ``[text](target)`` in the given files (default: README.md,
 DESIGN.md, docs/*.md, examples and benchmarks referenced from them) whose
-target is *not* an external URL: the referenced file must exist relative
-to the markdown file's directory (anchors are stripped; ``#section``
-fragments within a file are not validated).  Also checks that ``§N``
-DESIGN.md sections cited anywhere in the docs actually exist.
+target is *not* an external URL:
+
+- the referenced file must exist relative to the markdown file's directory;
+- a ``#fragment`` pointing at a markdown file (including same-file
+  ``#anchor`` links) must match a heading of the target, using GitHub's
+  anchor slug rules (lowercase, drop punctuation, spaces to hyphens,
+  ``-N`` suffixes for duplicates);
+- ``§N`` DESIGN.md sections cited anywhere in the docs must exist.
 
     python scripts/check_links.py [files...]
 """
@@ -20,6 +24,7 @@ REPO = Path(__file__).resolve().parent.parent
 LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SECTION_CITE = re.compile(r"DESIGN\.md\s+§(\d+)")
 SECTION_DEF = re.compile(r"^##\s+§(\d+)\b", re.M)
+HEADING = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.M)
 EXTERNAL = ("http://", "https://", "mailto:")
 
 
@@ -36,21 +41,54 @@ def _rel(f: Path) -> str:
         return str(f)
 
 
+def slugify(heading: str) -> str:
+    """GitHub anchor slug of one heading: lowercase, keep only word
+    characters / spaces / hyphens, spaces to hyphens (inline code markers
+    are stripped first — backticks never reach the anchor)."""
+    text = heading.replace("`", "").lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(md: str) -> set:
+    """All anchor slugs of a markdown file, with GitHub's ``-N`` suffixing
+    for repeated headings."""
+    counts: dict = {}
+    slugs = set()
+    for m in HEADING.finditer(md):
+        slug = slugify(m.group(1))
+        n = counts.get(slug, 0)
+        counts[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
 def check(files) -> int:
     errors = []
     design = (REPO / "DESIGN.md").read_text()
     defined = set(SECTION_DEF.findall(design))
+    slug_cache: dict = {}
+
+    def slugs_of(path: Path) -> set:
+        if path not in slug_cache:
+            slug_cache[path] = heading_slugs(path.read_text())
+        return slug_cache[path]
+
     for f in files:
         text = f.read_text()
         for target in LINK.findall(text):
-            if target.startswith(EXTERNAL) or target.startswith("#"):
+            if target.startswith(EXTERNAL):
                 continue
-            path = target.split("#", 1)[0]
-            if not path:
-                continue
-            resolved = (f.parent / path).resolve()
+            path, _, frag = target.partition("#")
+            resolved = (f.parent / path).resolve() if path else f
             if not resolved.exists():
                 errors.append(f"{_rel(f)}: broken link -> {target}")
+                continue
+            if frag and resolved.suffix == ".md":
+                if frag not in slugs_of(resolved):
+                    errors.append(f"{_rel(f)}: broken anchor -> {target} "
+                                  f"(no heading slug {frag!r} in "
+                                  f"{_rel(resolved)})")
         for sec in SECTION_CITE.findall(text):
             if sec not in defined:
                 errors.append(f"{_rel(f)}: cites DESIGN.md §{sec}, "

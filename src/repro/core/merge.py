@@ -41,6 +41,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .hashing import hash_unit
 from .join_correlation import CombinedSketch
@@ -77,6 +78,31 @@ def merge_stats(a: PartitionStats, b: PartitionStats) -> PartitionStats:
 # ---------------------------------------------------------------------------
 # Union plumbing shared by every merge
 # ---------------------------------------------------------------------------
+
+
+def assert_no_duplicate_ids(idx, *, context: str) -> None:
+    """Raise on duplicate coordinates in a merged, idx-sorted sketch.
+
+    A merge with ``dedupe=False`` promises the caller's partitions are
+    disjoint; when they are not, the union double-counts the shared entries
+    and every downstream estimate is silently biased.  Merged sketches are
+    idx-sorted, so duplicates are adjacent and this check is O(cap) per row.
+    It runs eagerly only — inside jit the values are tracers and the
+    disjointness guarantee stays the caller's — and is shared by the vector
+    and matrix (``repro.matrix.merge``) merge paths.
+    """
+    if isinstance(idx, jax.core.Tracer):
+        return
+    arr = np.asarray(idx).reshape(-1, np.shape(idx)[-1])
+    valid = arr[:, :-1] != INVALID_IDX
+    dup = (arr[:, :-1] == arr[:, 1:]) & valid
+    if bool(dup.any()):
+        row, lane = np.argwhere(dup)[0]
+        raise ValueError(
+            f"{context}: merged sketch contains duplicate id "
+            f"{int(arr[row, lane])} — the partitions passed with "
+            "dedupe=False were not disjoint; rebuild with dedupe=True or "
+            "fix the partitioning")
 
 
 def _dedup_b(idx_a: jnp.ndarray, idx_b: jnp.ndarray) -> jnp.ndarray:
@@ -306,6 +332,9 @@ def merge_sketches_many(parts, seed, *, m: int, method: str = "priority",
     else:
         raise ValueError(f"unknown method {method!r}; "
                          "expected 'priority' or 'threshold'")
+    if not dedupe:
+        assert_no_duplicate_ids(out.idx,
+                                context="merge_sketches_many(dedupe=False)")
     if squeeze:
         return Sketch(out.idx[0], out.val[0], out.tau[0])
     return out

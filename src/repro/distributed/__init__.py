@@ -3,17 +3,22 @@ partitioned map-reduce sketch construction, and mesh utilities."""
 from .sharding import (batch_pspec, batch_shardings, decode_state_pspecs,
                        decode_state_shardings, dp_axes, param_pspecs,
                        param_shardings, pspec_for, replicated)
-from .grad_compress import (compression_ratio, init_ef_state,
-                            make_sketchdp_grad_fn, sketch_gradient)
-from .partitioned_build import (partition_bounds, partitioned_sketch_corpus,
+from .grad_compress import (compression_ratio, densify_matrix_mean,
+                            init_ef_state, make_sketchdp_grad_fn,
+                            matrix_compression_ratio, sketch_gradient,
+                            sketch_matrix_gradient)
+from .partitioned_build import (partition_bounds, partitioned_matrix_sketch,
+                                partitioned_sketch_corpus,
                                 partitioned_sketch_corpus_sharded,
                                 tree_merge_sketches)
 
 __all__ = [
     "batch_pspec", "batch_shardings", "decode_state_pspecs",
     "decode_state_shardings", "dp_axes", "param_pspecs", "param_shardings",
-    "pspec_for", "replicated", "compression_ratio", "init_ef_state",
-    "make_sketchdp_grad_fn", "sketch_gradient",
-    "partition_bounds", "partitioned_sketch_corpus",
-    "partitioned_sketch_corpus_sharded", "tree_merge_sketches",
+    "pspec_for", "replicated", "compression_ratio", "densify_matrix_mean",
+    "init_ef_state", "make_sketchdp_grad_fn", "matrix_compression_ratio",
+    "sketch_gradient", "sketch_matrix_gradient",
+    "partition_bounds", "partitioned_matrix_sketch",
+    "partitioned_sketch_corpus", "partitioned_sketch_corpus_sharded",
+    "tree_merge_sketches",
 ]

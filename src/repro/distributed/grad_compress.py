@@ -53,10 +53,18 @@ def _unflatten(flat, meta):
 
 
 def sketch_gradient(flat_grad: jnp.ndarray, m: int, seed, *,
-                    method: str = "threshold"):
-    """Sketch a flat gradient; returns (idx, val, tau)."""
+                    method: str = "threshold",
+                    backend: str = "pallas"):
+    """Sketch a flat gradient; returns (idx, val, tau).
+
+    ``backend="pallas"`` (the default) routes through the fused linear-time
+    build pipeline of ``kernels/sketch_build`` — gradients are the ingestion
+    hot path, so the per-step sort of the legacy reference builders was pure
+    overhead (DESIGN.md §13).  Kept sets and values are identical;
+    parity is asserted in ``tests/test_distributed.py``.
+    """
     fn = threshold_sketch if method == "threshold" else priority_sketch
-    sk = fn(flat_grad, m, seed)
+    sk = fn(flat_grad, m, seed, backend=backend)
     return sk.idx, sk.val, sk.tau
 
 
@@ -141,4 +149,69 @@ def compression_ratio(params, m: int, cap_overhead: float = 1.3) -> float:
     n = sum(x.size for x in jax.tree.leaves(params))
     dense = 4.0 * n
     sketch = 8.0 * m * cap_overhead  # idx (4B) + val (4B) per slot
+    return dense / sketch
+
+
+# ---------------------------------------------------------------------------
+# Matrix mode: row-sampled compression of 2-D gradient tensors
+# ---------------------------------------------------------------------------
+
+
+def sketch_matrix_gradient(G: jnp.ndarray, m: int, seed, *,
+                           method: str = "priority"):
+    """Row-sample a 2-D gradient tensor (n, d) -> (row_idx, rows, tau).
+
+    The matrix-mode compressor (DESIGN.md §15): instead of flattening a
+    weight-matrix gradient and sampling scalars, sample whole *rows* with
+    probability proportional to their squared norms
+    (``repro.matrix`` builders).  Row structure is what downstream
+    consumers want — optimizer blocks, per-row adapters, and coordinated
+    sketches of two shards' gradients estimate the co-occurrence
+    ``G_1^T G_2`` directly via ``estimate_matrix_product``.  The payload is
+    ``m (d + 1)`` words vs ``n d`` dense — same coordination/seed contract
+    as the flat path.
+    """
+    from repro.matrix import priority_matrix_sketch, threshold_matrix_sketch
+    if method == "priority":
+        sk = priority_matrix_sketch(G, m, seed)
+    elif method == "threshold":
+        sk = threshold_matrix_sketch(G, m, seed)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+    return sk.row_idx, sk.rows, sk.tau
+
+
+def densify_matrix_mean(row_idx, rows, tau, n_rows: int):
+    """Reconstruct the unbiased mean of W gathered matrix sketches.
+
+    ``row_idx``: (W, cap); ``rows``: (W, cap, d); ``tau``: (W,).  Row ``i``
+    of shard ``w`` contributes ``rows_w[i] / p_i`` with
+    ``p_i = min(1, tau_w ||rows_w[i]||^2)`` — the matrix analogue of
+    :func:`densify_mean` (Theorem 1 applies per shard and per column).
+    """
+    W = row_idx.shape[0]
+    wgt = jnp.sum(rows * rows, axis=-1)               # (W, cap)
+    p = jnp.minimum(1.0, tau[:, None] * wgt)
+    valid = row_idx != INVALID_IDX
+    scale = jnp.where(valid & (p > 0), 1.0 / jnp.where(p > 0, p, 1.0), 0.0)
+    contrib = rows * scale[..., None]
+    flat_idx = jnp.where(valid, row_idx, 0).reshape(-1)
+    out = jnp.zeros((n_rows, rows.shape[-1]), jnp.float32)
+    out = out.at[flat_idx].add(contrib.reshape(-1, rows.shape[-1]))
+    return out / W
+
+
+def matrix_compression_ratio(shape, m: int, *,
+                             method: str = "priority") -> float:
+    """Dense 2-D grad bytes / matrix-sketch payload bytes (per shard).
+
+    Priority sketches carry exactly ``m`` row slots; threshold sketches
+    carry the Lemma-4 capacity ``m + 4 ceil(sqrt(m))`` (the same overhead
+    the vector :func:`compression_ratio` folds in as ``cap_overhead``).
+    """
+    from repro.matrix import matrix_capacity
+    n, d = shape
+    slots = m if method == "priority" else matrix_capacity(m)
+    dense = 4.0 * n * d
+    sketch = 4.0 * slots * (d + 1)    # d f32 row values + 1 int32 row id
     return dense / sketch

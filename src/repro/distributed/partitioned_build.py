@@ -116,6 +116,56 @@ def partitioned_sketch_corpus(A: jnp.ndarray, m: int, seed, *,
                                stats=st, dedupe=False)
 
 
+def partitioned_matrix_sketch(A: jnp.ndarray, m: int, seed, *,
+                              num_partitions: int, method: str = "priority",
+                              variant: str = "l2", cap: int | None = None,
+                              adaptive: bool = True):
+    """Map-reduce build of a matrix sketch over ``num_partitions`` *row*
+    slices of an (n, d) matrix (DESIGN.md §15).
+
+    Each slice is sketched with the linear-time matrix builders hashing its
+    *global* row ids (the builders' ``row_indices`` path), then one flat
+    P-way union merge (``repro.matrix.merge_matrix_sketches``) folds the
+    partition sketches — bit-exact against the single-shot
+    ``priority_matrix_sketch`` of the full matrix; threshold folds
+    ``matrix_partition_stats`` alongside to recompute the adaptive tau.
+    Only one n/P-row slice is ever touched at a time (the streaming /
+    multi-host ingestion story of §14, one level up).
+    """
+    from repro.matrix import (matrix_partition_stats, merge_matrix_sketches,
+                              priority_matrix_sketch, threshold_matrix_sketch)
+    from repro.core.merge import PartitionStats
+    A = jnp.asarray(A, jnp.float32)
+    if A.ndim != 2:
+        raise ValueError(f"expected an (n, d) matrix, got shape {A.shape}")
+    parts, stats = [], []
+    for (s, e) in partition_bounds(A.shape[0], num_partitions):
+        block = A[s:e]
+        ids = jnp.arange(s, e, dtype=jnp.int32)
+        if method == "priority":
+            parts.append(priority_matrix_sketch(block, m, seed,
+                                                variant=variant,
+                                                row_indices=ids))
+        elif method == "threshold":
+            parts.append(threshold_matrix_sketch(block, m, seed,
+                                                 variant=variant, cap=cap,
+                                                 adaptive=adaptive,
+                                                 row_indices=ids))
+            stats.append(matrix_partition_stats(block, variant=variant))
+        else:
+            raise ValueError(f"unknown method {method!r}")
+    st = None
+    if stats:
+        st = PartitionStats(
+            total_weight=jnp.stack([s_.total_weight for s_ in stats]),
+            nnz=jnp.stack([s_.nnz for s_ in stats]))
+    # row slices are disjoint by construction: skip the duplicate scan (the
+    # merge still raises if the output surfaces a duplicate id)
+    return merge_matrix_sketches(parts, seed, m=m, method=method,
+                                 variant=variant, cap=cap, adaptive=adaptive,
+                                 stats=st, dedupe=False)
+
+
 def partitioned_sketch_corpus_sharded(A: jnp.ndarray, m: int, seed, *,
                                       mesh: Mesh | None = None,
                                       axis_name: str = "data",

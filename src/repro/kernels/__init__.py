@@ -16,6 +16,10 @@ VMEM tiling), ``ops.py`` (jit'd public wrapper, interpret=True off-TPU) and
 - ``sketch_merge``       batched merge of two bucketized corpora: per-bucket
   union + dedupe + rank re-cut in one launch for all D rows — the serving
   half of the partition-merge subsystem (DESIGN.md §14)
+- ``matrix_sketch``      fused batched matrix-product estimation: row-id
+  intersection + inclusion-probability rescale + sampled-rows matmul for a
+  whole batch of coordinated matrix-sketch pairs in one launch — the
+  ``A^T B`` workload of the matrix subsystem (DESIGN.md §15)
 """
 from .hash_rank import (hash_rank, hash_rank_batched, hash_rank_batched_ref,
                         hash_rank_ref)
@@ -28,6 +32,9 @@ from .countsketch import countsketch_ref
 from .jl_rademacher import jl_project, jl_ref
 from .sketch_merge import (merge_bucketized_corpora, merge_bucketized_pallas,
                            merge_bucketized_ref, merged_tau_bucketized)
+from .matrix_sketch import (BucketizedMatrixSketch, bucketize_matrix_sketches,
+                            matrix_products_bucketized, matrix_products_ref,
+                            matrix_slot_probs, stack_matrix_sketches)
 from .intersect_estimate import (MOMENT_CHANNELS, BucketizedSketch,
                                  allpairs_estimate_ref, allpairs_moments,
                                  bucketize, bucketize_corpus,
@@ -43,6 +50,9 @@ __all__ = [
     "kth_smallest_ranks",
     "merge_bucketized_corpora", "merge_bucketized_pallas",
     "merge_bucketized_ref", "merged_tau_bucketized",
+    "BucketizedMatrixSketch", "bucketize_matrix_sketches",
+    "matrix_products_bucketized", "matrix_products_ref", "matrix_slot_probs",
+    "stack_matrix_sketches",
     "countsketch_kernel", "countsketch_ref",
     "jl_project", "jl_ref",
     "BucketizedSketch", "bucketize", "bucketize_corpus", "bucketize_payloads",

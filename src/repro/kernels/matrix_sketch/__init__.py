@@ -1,0 +1,12 @@
+from .matrix_sketch import matrix_products_pallas, pair_product_body
+from .ops import (BucketizedMatrixSketch, bucketize_matrix_sketches,
+                  matrix_products_bucketized, matrix_slot_probs,
+                  stack_matrix_sketches)
+from .ref import matrix_products_ref
+
+__all__ = [
+    "BucketizedMatrixSketch", "bucketize_matrix_sketches",
+    "matrix_products_bucketized", "matrix_products_pallas",
+    "matrix_products_ref", "matrix_slot_probs", "pair_product_body",
+    "stack_matrix_sketches",
+]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the fused batched matrix-product estimator.
+
+Maps the exact per-pair body the Pallas kernel runs (``pair_product_body``)
+over the batch with ``lax.map``: each iteration executes the identical op
+sequence on identically shaped operands, so interpret-mode Pallas and this
+oracle agree **bit for bit** (the matmul accumulation order is fixed by the
+shared body — a vmapped/batched contraction could legally re-tile it).
+``lax.map`` also keeps the whole batch one XLA computation, which makes
+this the fast fused CPU path the benchmark times off-TPU (DESIGN.md §15).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .matrix_sketch import pair_product_body
+
+INVALID_IDX = np.int32(np.iinfo(np.int32).max)
+
+
+def matrix_products_ref(a_idx, a_rows, a_p, b_idx, b_rows, b_p) -> jnp.ndarray:
+    """Same contract as ``matrix_products_pallas``: (P, B, S) ids, (P, B, S,
+    d) rows and (P, B, S) per-slot inclusion probabilities per side ->
+    (P, d_a, d_b) estimates."""
+    S = a_idx.shape[-1]
+    ai = jnp.where(a_idx == INVALID_IDX, -1, a_idx)
+    bi = jnp.where(b_idx == INVALID_IDX, -2, b_idx)
+    ar = 1.0 / a_p
+    br = 1.0 / b_p
+    body = functools.partial(pair_product_body, slots=S)
+
+    def one(args):
+        ai_p, arows_p, ar_p, bi_p, brows_p, br_p = args
+        return body(ai_p, arows_p.astype(jnp.float32), ar_p,
+                    bi_p, brows_p.astype(jnp.float32), br_p)
+
+    return jax.lax.map(one, (ai, a_rows, ar, bi, b_rows, br))

@@ -1,0 +1,36 @@
+"""Matrix-product sketching: coordinated *row* sampling for ``A^T B``.
+
+The paper's vector sketches generalize to matrices by treating each row of
+an (n, d) matrix as one "entry" whose sampling weight is its squared row
+norm (Daliri, Freire, Li, Musco — "Matrix Product Sketching via
+Coordinated Sampling", arXiv 2501.17836).  A sketch keeps ``m`` whole rows
+plus their global row ids; two same-seed sketches estimate ``A^T B``
+unbiasedly by intersecting the sampled row ids, rescaling by the inclusion
+probabilities ``min(1, tau * w_i)``, and one small matmul over the matched
+rows (DESIGN.md §15).
+
+Everything reuses the vector machinery: the linear-time selection
+primitives of ``kernels/sketch_build`` pick the rows, the estimator is
+Algorithm 2 with vector outer products in place of scalar products, and
+the rank-coordination argument of DESIGN.md §14 makes row-partitioned
+sketches mergeable (``merge_matrix_sketches``).
+"""
+from .containers import (MatrixSketch, matrix_capacity, matrix_partition_stats,
+                         row_weight, stack_matrix_sketches)
+from .builders import priority_matrix_sketch, threshold_matrix_sketch
+from .estimator import (estimate_matrix_product, estimate_matrix_products,
+                        matrix_intersection_size)
+from .merge import merge_matrix_sketches
+from .variance import (frobenius_error_guarantee, frobenius_variance_bound,
+                       jl_frobenius_error, matrix_sketch_bytes)
+
+__all__ = [
+    "MatrixSketch", "matrix_capacity", "matrix_partition_stats", "row_weight",
+    "stack_matrix_sketches",
+    "priority_matrix_sketch", "threshold_matrix_sketch",
+    "estimate_matrix_product", "estimate_matrix_products",
+    "matrix_intersection_size",
+    "merge_matrix_sketches",
+    "frobenius_error_guarantee", "frobenius_variance_bound",
+    "jl_frobenius_error", "matrix_sketch_bytes",
+]

@@ -1,0 +1,93 @@
+"""Matrix sketch container and row-weight conventions (DESIGN.md §15).
+
+A matrix sketch of an (n, d) matrix keeps whole rows under the same
+fixed-capacity static-shape discipline as the vector ``Sketch``:
+
+- ``row_idx``: int32[cap], **sorted ascending**, ``INVALID_IDX`` padding;
+- ``rows``:    float32[cap, d], zero rows at padding;
+- ``tau``:     scalar inclusion scale — a kept row's marginal inclusion
+  probability is ``min(1, tau * w_i)`` with ``w_i`` the row's sampling
+  weight, exactly the vector contract of ``core.sketches``.
+
+The sampling weight of row ``i`` is a function of the *stored* row
+(``row_weight``), so the estimator and the merge path recompute inclusion
+probabilities and sampling ranks from the sketch alone — no side channel,
+which is what keeps matrix sketches mergeable (DESIGN.md §14, §15).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.sketches import INVALID_IDX, default_capacity
+
+MATRIX_VARIANTS = ("l2", "uniform")
+
+
+class MatrixSketch(NamedTuple):
+    """Row-sampled sketch of one (n, d) matrix (or a (P, cap, d) batch)."""
+
+    row_idx: jnp.ndarray  # int32[cap], sorted ascending, INVALID_IDX padding
+    rows: jnp.ndarray     # float32[cap, d], zero rows at padding
+    tau: jnp.ndarray      # f32 scalar inclusion scale
+
+    @property
+    def capacity(self) -> int:
+        return self.row_idx.shape[-1]
+
+    @property
+    def dim(self) -> int:
+        return self.rows.shape[-1]
+
+    def size(self) -> jnp.ndarray:
+        """Number of valid (non-padding) sampled rows."""
+        return jnp.sum(self.row_idx != INVALID_IDX, axis=-1)
+
+
+def row_weight(rows: jnp.ndarray, variant: str) -> jnp.ndarray:
+    """Sampling weight of each row: l2 -> ||A_i||^2 (the paper's choice),
+    uniform -> 1 on nonzero rows.  ``rows``: (..., cap, d) -> (..., cap)."""
+    if variant == "l2":
+        return jnp.sum(rows * rows, axis=-1)
+    if variant == "uniform":
+        return jnp.any(rows != 0, axis=-1).astype(rows.dtype)
+    raise ValueError(f"unknown matrix variant {variant!r}; "
+                     f"expected one of {MATRIX_VARIANTS}")
+
+
+def matrix_capacity(m: int) -> int:
+    """Fixed capacity for threshold row sampling: same Lemma-4 sizing as the
+    vector sketches (m + 4 ceil(sqrt(m)))."""
+    return default_capacity(m)
+
+
+def stack_matrix_sketches(sketches) -> MatrixSketch:
+    """List of same-d matrix sketches -> one (P, cap, d) batch, capacities
+    padded to the max part (INVALID ids, zero rows — both inert).  The
+    shared stacking convention of the merge path and the batched kernels."""
+    cap = max(s.row_idx.shape[-1] for s in sketches)
+
+    def pad(s: MatrixSketch) -> MatrixSketch:
+        extra = cap - s.row_idx.shape[-1]
+        if extra == 0:
+            return s
+        return MatrixSketch(
+            jnp.pad(s.row_idx, (0, extra), constant_values=INVALID_IDX),
+            jnp.pad(s.rows, ((0, extra), (0, 0))), s.tau)
+
+    padded = [pad(s) for s in sketches]
+    return MatrixSketch(
+        row_idx=jnp.stack([s.row_idx for s in padded]),
+        rows=jnp.stack([s.rows for s in padded]),
+        tau=jnp.stack([jnp.asarray(s.tau, jnp.float32) for s in padded]))
+
+
+def matrix_partition_stats(A: jnp.ndarray, *, variant: str = "l2"):
+    """``PartitionStats`` of a row partition: total row weight + nonzero-row
+    count, the O(1) state that makes *threshold* matrix sketches mergeable
+    (identical role to ``core.merge.partition_stats``, DESIGN.md §14)."""
+    from repro.core.merge import PartitionStats
+    w = row_weight(jnp.asarray(A, jnp.float32), variant)
+    return PartitionStats(total_weight=jnp.sum(w, axis=-1),
+                          nnz=jnp.sum(w > 0, axis=-1).astype(jnp.int32))

@@ -1,0 +1,130 @@
+"""Merging matrix sketches of row-partitioned matrices (DESIGN.md §14, §15).
+
+Row sampling inherits the vector merge argument wholesale: every partition
+hashes a *global* row id with the same seed, so the sampling rank of a row
+is identical no matter which partition sketched it.  The merged priority
+``tau`` is therefore the (m+1)-st smallest rank of the union candidates —
+always present among the parts' kept ranks and published taus — and the
+merged kept set follows by comparison, bit-exact against sketching the
+stacked matrix in one shot.  Threshold merges recompute the adaptive tau
+from the union's kept row weights plus additive ``PartitionStats``
+(total row weight + nonzero-row count per partition), exactly the §14
+capped-prefix argument with rows in place of scalar entries.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import hash_unit
+from repro.core.merge import (PartitionStats, _adaptive_tau_union,
+                              _dup_earlier, assert_no_duplicate_ids)
+from repro.core.sketches import INVALID_IDX, sampling_ranks
+
+from .containers import (MatrixSketch, matrix_capacity, row_weight,
+                         stack_matrix_sketches)
+
+
+def _stack_parts(parts):
+    """List of single-matrix sketches -> padded (P, cap, ...) arrays."""
+    if isinstance(parts, MatrixSketch):
+        if parts.row_idx.ndim != 2:
+            raise ValueError("a stacked MatrixSketch must be (P, cap, d)")
+        return parts
+    return stack_matrix_sketches(parts)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "method", "variant", "cap",
+                                             "adaptive", "dedupe"))
+def _merge(parts: MatrixSketch, seed, stats, *, m, method, variant, cap,
+           adaptive, dedupe):
+    P, pcap, d = parts.rows.shape
+    idx_u = parts.row_idx.reshape(P * pcap)
+    rows_u = parts.rows.reshape(P * pcap, d)
+    w_u = row_weight(rows_u, variant)
+    h_u = hash_unit(seed, idx_u)
+    ranks = sampling_ranks(w_u, h_u)          # padding: w=0 -> +inf
+    if dedupe:
+        # first occurrence stands for a replicated row (same id + same seed
+        # => same rank, DESIGN.md §14); later copies sink to rank +inf.
+        # Reuses the vector path's searchsorted earlier-part scan on the
+        # per-part sorted id layout (a D=1 corpus of P parts).
+        dup = _dup_earlier(parts.row_idx[:, None, :]).reshape(P * pcap)
+        ranks = jnp.where(dup, jnp.inf, ranks)
+        w_u = jnp.where(dup, 0.0, w_u)
+
+    from repro.kernels.sketch_build import kth_smallest_ranks
+    if method == "priority":
+        cand = jnp.concatenate([ranks, parts.tau.reshape(-1)])
+        if cand.shape[0] < m + 1:
+            tau = jnp.asarray(jnp.inf, jnp.float32)
+        else:
+            tau = kth_smallest_ranks(cand[None, :], m + 1)[0]
+        include = ranks < tau
+        out_cap = m
+    else:
+        if adaptive:
+            W, nnz = stats
+            tau = _adaptive_tau_union(w_u[None, :], W[None], nnz[None], m)[0]
+        elif stats is not None:
+            W, _ = stats
+            tau = jnp.where(W > 0, m / W, 0.0)
+        else:
+            # non-adaptive part tau = m / W_part: each part's W is recoverable
+            W = jnp.sum(jnp.where(parts.tau > 0, m / parts.tau, 0.0))
+            tau = jnp.where(W > 0, m / W, 0.0)
+        include = jnp.isfinite(ranks) & (w_u > 0) & (h_u <= tau * w_u)
+        out_cap = cap
+    # keep smallest-rank included entries up to out_cap (threshold overflow
+    # evicts largest ranks first, as the builders do), then re-sort by id —
+    # positions ride along as a payload so the rows gather afterwards
+    from repro.core.sketches import select_and_pack
+    pos_f = jnp.arange(idx_u.shape[0], dtype=jnp.float32)
+    kidx, kpos = select_and_pack(ranks, include, idx_u, pos_f, out_cap)
+    valid = kidx != INVALID_IDX
+    krows = jnp.where(valid[:, None], rows_u[kpos.astype(jnp.int32)], 0.0)
+    return MatrixSketch(row_idx=kidx, rows=krows,
+                        tau=jnp.asarray(tau, jnp.float32))
+
+
+def merge_matrix_sketches(parts, seed, *, m: int, method: str = "priority",
+                          variant: str = "l2", cap: int | None = None,
+                          adaptive: bool = True,
+                          stats: PartitionStats | None = None,
+                          dedupe: bool = True) -> MatrixSketch:
+    """Matrix sketch of the union of P disjoint row partitions from their
+    sketches alone.
+
+    ``parts``: list of same-seed :class:`MatrixSketch` (or one stacked with
+    a leading partition dim), built over disjoint global row-id ranges via
+    the builders' ``row_indices`` path.  ``method="priority"`` is bit-exact
+    against ``priority_matrix_sketch`` of the stacked matrix (the §14 tau-
+    candidate argument); ``method="threshold"`` with ``adaptive=True`` needs
+    ``stats`` — every part's :func:`~repro.matrix.matrix_partition_stats`
+    stacked along the leading dim.  ``dedupe=False`` skips the cross-part
+    duplicate scan when partitions are disjoint *by construction*; misuse is
+    caught eagerly (duplicate ids in the merged output raise).
+    """
+    stacked = _stack_parts(parts)
+    if method not in ("priority", "threshold"):
+        raise ValueError(f"unknown method {method!r}; "
+                         "expected 'priority' or 'threshold'")
+    folded = None
+    if method == "threshold":
+        if stats is None and adaptive:
+            raise ValueError(
+                "merging adaptive threshold matrix sketches needs "
+                "PartitionStats for every part; collect them with "
+                "matrix_partition_stats() at build time")
+        if stats is not None:
+            folded = (jnp.sum(jnp.asarray(stats.total_weight, jnp.float32)),
+                      jnp.sum(jnp.asarray(stats.nnz, jnp.int32)))
+    out = _merge(stacked, seed, folded, m=m, method=method, variant=variant,
+                 cap=matrix_capacity(m) if cap is None else cap,
+                 adaptive=adaptive, dedupe=dedupe)
+    if not dedupe:
+        assert_no_duplicate_ids(out.row_idx,
+                                context="merge_matrix_sketches(dedupe=False)")
+    return out

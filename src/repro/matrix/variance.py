@@ -1,0 +1,62 @@
+"""Frobenius-norm accuracy guarantees for the matrix-product estimator.
+
+Mirrors ``core.variance`` one level up: summing the vector bound
+(Theorems 1/3) over all (j, k) output entries collapses to Frobenius norms,
+
+    E ||est - A^T B||_F^2  <=  (2/m) max(||A_I||_F^2 ||B||_F^2,
+                                         ||A||_F^2 ||B_I||_F^2)
+
+with ``I`` the rows where both matrices are nonzero — the coordinated-
+sampling analogue of the Bessa et al. vector result and the bound shape of
+Daliri et al. (arXiv 2501.17836).  The comparison scale for linear sketches
+(JL / CountSketch at equal bytes) is ``eps ||A||_F ||B||_F`` with *full*
+Frobenius norms, which is what the sampling methods beat when the row
+supports overlap little (DESIGN.md §15).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def intersection_frobenius(A: jnp.ndarray, B: jnp.ndarray):
+    """(||A_I||_F^2, ||B_I||_F^2, ||A||_F^2, ||B||_F^2) with
+    I = {i : A_i != 0 and B_i != 0} (rows)."""
+    mask = jnp.any(A != 0, axis=1) & jnp.any(B != 0, axis=1)
+    a2 = jnp.sum(A * A)
+    b2 = jnp.sum(B * B)
+    aI2 = jnp.sum(jnp.where(mask[:, None], A * A, 0.0))
+    bI2 = jnp.sum(jnp.where(mask[:, None], B * B, 0.0))
+    return aI2, bI2, a2, b2
+
+
+def frobenius_variance_bound(A: jnp.ndarray, B: jnp.ndarray, m: int, *,
+                             method: str = "threshold") -> jnp.ndarray:
+    """E||est - A^T B||_F^2 <= (2/m) max(||A_I||_F^2 ||B||_F^2,
+    ||A||_F^2 ||B_I||_F^2); priority uses 2/(m-1) like Theorem 3."""
+    aI2, bI2, a2, b2 = intersection_frobenius(A, B)
+    lead = 2.0 / m if method == "threshold" else 2.0 / max(m - 1, 1)
+    return lead * jnp.maximum(aI2 * b2, a2 * bI2)
+
+
+def frobenius_error_guarantee(A: jnp.ndarray, B: jnp.ndarray, m: int,
+                              delta: float = 0.1, *,
+                              method: str = "threshold") -> jnp.ndarray:
+    """With prob 1-delta, ||est - A^T B||_F <= sqrt(bound / delta)
+    (Markov on the squared Frobenius error, as in Corollary 2)."""
+    return jnp.sqrt(frobenius_variance_bound(A, B, m, method=method) / delta)
+
+
+def jl_frobenius_error(A: jnp.ndarray, B: jnp.ndarray, k: int,
+                       delta: float = 0.1) -> jnp.ndarray:
+    """Comparison scale for a k-row linear sketch: eps ||A||_F ||B||_F with
+    eps = sqrt(2/(delta k)) — the matrix analogue of Eq. (1)."""
+    a2 = jnp.sum(A * A)
+    b2 = jnp.sum(B * B)
+    return jnp.sqrt(2.0 / (delta * k) * a2 * b2)
+
+
+def matrix_sketch_bytes(m: int, d: int) -> int:
+    """Storage of one matrix sketch: m sampled rows of d float32 values plus
+    one int32 row id each — the equal-bytes accounting the benchmark uses to
+    size the JL baseline (``benchmarks/matrix_product.py``)."""
+    return m * (4 * d + 4)

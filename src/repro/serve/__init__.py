@@ -1,5 +1,6 @@
 """Serving: batched LM engine + sketch index service."""
 from .engine import Engine, Request
-from .sketch_service import ShardedSketchIndex, SketchIndex
+from .sketch_service import MatrixSketchStore, ShardedSketchIndex, SketchIndex
 
-__all__ = ["Engine", "Request", "ShardedSketchIndex", "SketchIndex"]
+__all__ = ["Engine", "Request", "MatrixSketchStore", "ShardedSketchIndex",
+           "SketchIndex"]

@@ -22,6 +22,7 @@ from __future__ import annotations
 from typing import Optional, Sequence
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import INVALID_IDX, priority_sketch
@@ -30,6 +31,8 @@ from repro.kernels import (BucketizedSketch, bucketize, bucketize_corpus,
                            estimate_all_pairs_bucketized,
                            merge_bucketized_corpora, query_corpus,
                            round_up_pow2)
+from repro.matrix import (MatrixSketch, estimate_matrix_product,
+                          estimate_matrix_products, priority_matrix_sketch)
 
 
 class SketchIndex:
@@ -219,6 +222,148 @@ class SketchIndex:
         self._tau[:D] = np.asarray(merged.tau)
         self._dropped[:D] = np.asarray(merged.dropped)
         self._device_corpus = None
+
+
+class MatrixSketchStore:
+    """Corpus of matrix sketches answering ``A^T B`` estimates
+    (DESIGN.md §15).
+
+    Matrices (n, d) with a shared column count ``d`` are row-sampled once on
+    ingestion (``m`` rows each, the linear-time ``repro.matrix`` builders)
+    and stored in pre-allocated ``(capacity, m)`` id / ``(capacity, m, d)``
+    row blocks — amortized O(m d) per add, capacity doubling like
+    :class:`SketchIndex`, so the batched estimators see a fixed corpus shape
+    between growth events.  Reads:
+
+    - ``product(a, b)`` — one stored-vs-stored ``A^T B`` estimate;
+    - ``products(pairs)`` — a batch of stored pairs in one launch
+      (``estimate_matrix_products``: the fused kernel on TPU, the vmapped
+      join off-TPU);
+    - ``query(matrix)`` — one query matrix against *every* stored sketch
+      (the corpus-level workload: gradient co-occurrence, covariance and
+      attention-score blocks against a library of feature matrices).
+
+    All matrices must share ``d`` and the coordination ``seed``.
+    """
+
+    def __init__(self, m: int = 128, *, dim: int, seed: int = 11,
+                 initial_capacity: int = 8):
+        if dim < 1:
+            raise ValueError("dim must be >= 1")
+        self.m = m
+        self.dim = dim
+        self.seed = seed
+        self._names: list = []
+        self._cap = round_up_pow2(initial_capacity)
+        self._idx = np.full((self._cap, m), INVALID_IDX, np.int32)
+        self._rows = np.zeros((self._cap, m, dim), np.float32)
+        # padding sketches get tau=1: all-INVALID ids match nothing
+        self._tau = np.ones((self._cap,), np.float32)
+        self._device: Optional[MatrixSketch] = None
+
+    def __len__(self):
+        return len(self._names)
+
+    @property
+    def capacity(self) -> int:
+        return self._cap
+
+    def _grow(self) -> None:
+        new_cap = self._cap * 2
+
+        def extend(arr, fill):
+            out = np.full((new_cap,) + arr.shape[1:], fill, arr.dtype)
+            out[: self._cap] = arr
+            return out
+
+        self._idx = extend(self._idx, INVALID_IDX)
+        self._rows = extend(self._rows, 0)
+        self._tau = extend(self._tau, 1)
+        self._cap = new_cap
+
+    def _sketch(self, matrix: np.ndarray) -> MatrixSketch:
+        matrix = np.asarray(matrix, np.float32)
+        if matrix.ndim != 2 or matrix.shape[1] != self.dim:
+            raise ValueError(f"expected an (n, {self.dim}) matrix, got "
+                             f"shape {matrix.shape}")
+        return priority_matrix_sketch(jnp.asarray(matrix), self.m, self.seed)
+
+    def add(self, name, matrix: np.ndarray) -> None:
+        """Row-sample one (n, d) matrix and append it in place: amortized
+        O(m d) storage writes, no re-layout of the existing corpus."""
+        sk = self._sketch(matrix)
+        if len(self._names) == self._cap:
+            self._grow()
+        c = len(self._names)
+        self._idx[c] = np.asarray(sk.row_idx)
+        self._rows[c] = np.asarray(sk.rows)
+        self._tau[c] = float(sk.tau)
+        self._names.append(name)
+        self._device = None   # re-upload (not re-sketch) lazily
+
+    def _corpus(self) -> MatrixSketch:
+        """Occupied corpus prefix on device, rounded to a power of two so
+        batched estimators recompile only on doublings."""
+        if self._device is None:
+            c = min(self._cap, max(round_up_pow2(max(len(self._names), 1)),
+                                   4))
+            self._device = MatrixSketch(jnp.asarray(self._idx[:c]),
+                                        jnp.asarray(self._rows[:c]),
+                                        jnp.asarray(self._tau[:c]))
+        return self._device
+
+    def _pick(self, name) -> int:
+        try:
+            return self._names.index(name)
+        except ValueError:
+            raise KeyError(f"unknown matrix {name!r}") from None
+
+    def product(self, name_a, name_b) -> np.ndarray:
+        """(d, d) estimate of ``A^T B`` for two stored matrices."""
+        ia, ib = self._pick(name_a), self._pick(name_b)
+        sa = MatrixSketch(jnp.asarray(self._idx[ia]),
+                          jnp.asarray(self._rows[ia]),
+                          jnp.asarray(self._tau[ia]))
+        sb = MatrixSketch(jnp.asarray(self._idx[ib]),
+                          jnp.asarray(self._rows[ib]),
+                          jnp.asarray(self._tau[ib]))
+        return np.asarray(estimate_matrix_product(sa, sb))
+
+    def products(self, pairs: Sequence) -> np.ndarray:
+        """(len(pairs), d, d) estimates for a batch of stored-name pairs in
+        one launch."""
+        ia = np.array([self._pick(a) for a, _ in pairs], np.int64)
+        ib = np.array([self._pick(b) for _, b in pairs], np.int64)
+        SA = MatrixSketch(jnp.asarray(self._idx[ia]),
+                          jnp.asarray(self._rows[ia]),
+                          jnp.asarray(self._tau[ia]))
+        SB = MatrixSketch(jnp.asarray(self._idx[ib]),
+                          jnp.asarray(self._rows[ib]),
+                          jnp.asarray(self._tau[ib]))
+        return np.asarray(estimate_matrix_products(SA, SB))
+
+    def query(self, matrix: np.ndarray) -> list:
+        """Estimate ``Q^T A_c`` against every stored matrix in one launch;
+        returns ``[(name, (d, d) ndarray), ...]`` in insertion order."""
+        from repro.kernels.sketch_build import resolve_use_pallas
+        sq = self._sketch(matrix)
+        corpus = self._corpus()
+        if resolve_use_pallas(None):
+            # TPU kernel path: the batched kernel wants a materialized
+            # (C, ...) query side; C identical copies is the v1 trade
+            C = corpus.row_idx.shape[0]
+            SQ = MatrixSketch(
+                jnp.broadcast_to(sq.row_idx[None], (C,) + sq.row_idx.shape),
+                jnp.broadcast_to(sq.rows[None], (C,) + sq.rows.shape),
+                jnp.broadcast_to(jnp.reshape(sq.tau, (1,)), (C,)))
+            est = np.asarray(estimate_matrix_products(SQ, corpus))
+        else:
+            # off-TPU: hold the query fixed (O(m d) query memory, no copies)
+            est = np.asarray(jax.vmap(
+                lambda i, r, t: estimate_matrix_product(
+                    sq, MatrixSketch(i, r, t)))(
+                        corpus.row_idx, corpus.rows, corpus.tau))
+        return [(name, est[i]) for i, name in enumerate(self._names)]
 
 
 class ShardedSketchIndex:

@@ -1,8 +1,34 @@
 """Multi-device tests (8 fake CPU devices in a subprocess): sharding rules,
-SketchDP compressed gradients, elastic checkpoint restore across meshes."""
+SketchDP compressed gradients, elastic checkpoint restore across meshes.
+Plus single-device parity of the compressor's sketch path."""
+import numpy as np
+import jax.numpy as jnp
 import pytest
 
 from _subproc import run_with_devices
+
+
+def test_sketch_gradient_pallas_routing_parity():
+    """The compressor's default (fused ``backend="pallas"`` builders,
+    DESIGN.md §13) must produce the same sketch as the legacy sort-based
+    reference path it replaced: identical (idx, val), tau bit-equal for
+    priority (an order statistic) and equal up to summation-order rounding
+    for adaptive threshold."""
+    from repro.distributed import sketch_gradient
+    rng = np.random.default_rng(0)
+    g = rng.standard_normal(1 << 14).astype(np.float32)
+    g[rng.random(1 << 14) < 0.5] = 0
+    for method, tau_exact in (("threshold", False), ("priority", True)):
+        i_p, v_p, t_p = sketch_gradient(jnp.asarray(g), 256, 7,
+                                        method=method)   # default: pallas
+        i_r, v_r, t_r = sketch_gradient(jnp.asarray(g), 256, 7,
+                                        method=method, backend="reference")
+        np.testing.assert_array_equal(np.asarray(i_p), np.asarray(i_r))
+        np.testing.assert_array_equal(np.asarray(v_p), np.asarray(v_r))
+        if tau_exact:
+            assert float(t_p) == float(t_r)
+        else:
+            np.testing.assert_allclose(float(t_p), float(t_r), rtol=1e-5)
 
 
 def test_param_shardings_apply():

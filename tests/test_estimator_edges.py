@@ -1,0 +1,155 @@
+"""Estimator edge cases shared by the vector and matrix paths: m > n,
+all-zero inputs, and the dedupe=False misuse guarantee (merged output must
+be duplicate-free or raise)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (INVALID_IDX, estimate_inner_product, merge_sketches,
+                        merge_sketches_many, priority_sketch,
+                        threshold_sketch)
+from repro.matrix import (estimate_matrix_product, merge_matrix_sketches,
+                          priority_matrix_sketch, threshold_matrix_sketch)
+
+
+# ---------------------------------------------------------------------------
+# m > n: fewer coordinates than the sample budget
+# ---------------------------------------------------------------------------
+
+
+def test_vector_m_exceeds_n():
+    a = jnp.asarray(np.array([1.0, -2.0, 0.0, 3.0], np.float32))
+    b = jnp.asarray(np.array([2.0, 1.0, 5.0, -1.0], np.float32))
+    for fn in (priority_sketch, threshold_sketch):
+        sa = fn(a, 64, 3)
+        sb = fn(b, 64, 3)
+        assert int(sa.size()) == 3          # nnz, not m
+        assert not np.isfinite(float(sa.tau)) or float(sa.tau) > 0
+        est = float(estimate_inner_product(sa, sb))
+        assert est == pytest.approx(float(jnp.dot(a, b)), rel=1e-5)
+
+
+def test_matrix_m_exceeds_n():
+    rng = np.random.default_rng(0)
+    A = rng.standard_normal((6, 3)).astype(np.float32)
+    B = rng.standard_normal((6, 3)).astype(np.float32)
+    A[2] = 0
+    for build in (priority_matrix_sketch, threshold_matrix_sketch):
+        sa = build(jnp.asarray(A), 32, 3)
+        sb = build(jnp.asarray(B), 32, 3)
+        assert int(sa.size()) == 5          # nonzero rows only
+        est = np.asarray(estimate_matrix_product(sa, sb))
+        np.testing.assert_allclose(est, A.T @ B, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# All-zero inputs
+# ---------------------------------------------------------------------------
+
+
+def test_vector_all_zero():
+    z = jnp.zeros((32,), jnp.float32)
+    b = jnp.asarray(np.random.default_rng(1).standard_normal(32)
+                    .astype(np.float32))
+    for fn in (priority_sketch, threshold_sketch):
+        sz = fn(z, 8, 3)
+        sb = fn(b, 8, 3)
+        assert int(sz.size()) == 0
+        assert float(estimate_inner_product(sz, sb)) == 0.0
+        assert float(estimate_inner_product(sz, sz)) == 0.0
+
+
+def test_matrix_all_zero_rows():
+    Z = jnp.zeros((32, 4), jnp.float32)
+    B = jnp.asarray(np.random.default_rng(1).standard_normal((32, 4))
+                    .astype(np.float32))
+    for build in (priority_matrix_sketch, threshold_matrix_sketch):
+        sz = build(Z, 8, 3)
+        sb = build(B, 8, 3)
+        assert int(sz.size()) == 0
+        np.testing.assert_array_equal(
+            np.asarray(estimate_matrix_product(sz, sb)), 0.0)
+
+
+def test_matrix_partially_zero_rows_never_sampled():
+    rng = np.random.default_rng(2)
+    A = rng.standard_normal((128, 4)).astype(np.float32)
+    A[::2] = 0
+    sk = priority_matrix_sketch(jnp.asarray(A), 32, 3)
+    idx = np.asarray(sk.row_idx)
+    assert np.all(idx[idx != INVALID_IDX] % 2 == 1)
+
+
+# ---------------------------------------------------------------------------
+# dedupe=False misuse: overlapping partitions must raise, not silently bias
+# ---------------------------------------------------------------------------
+
+
+def _vector_parts(overlapping: bool):
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal(256).astype(np.float32)
+    hi = jnp.asarray(a[128:])
+    if overlapping:
+        lo = jnp.asarray(a[:192])         # rows 128..191 in both parts
+        ids = (jnp.arange(192), jnp.arange(128, 256))
+    else:
+        lo = jnp.asarray(a[:128])
+        ids = (jnp.arange(128), jnp.arange(128, 256))
+    m, seed = 64, 5
+    parts = [priority_sketch(v, m, seed, indices=i.astype(jnp.int32))
+             for v, i in zip((lo, hi), ids)]
+    return parts, m, seed
+
+
+def test_vector_dedupe_false_misuse_raises():
+    parts, m, seed = _vector_parts(overlapping=True)
+    with pytest.raises(ValueError, match="dedupe"):
+        merge_sketches_many(parts, seed, m=m, dedupe=False)
+    # honest disjoint partitions pass the same check
+    parts, m, seed = _vector_parts(overlapping=False)
+    out = merge_sketches_many(parts, seed, m=m, dedupe=False)
+    idx = np.asarray(out.idx)
+    valid = idx[idx != INVALID_IDX]
+    assert np.all(np.diff(valid) > 0)
+
+
+def test_vector_dedupe_true_handles_overlap():
+    parts, m, seed = _vector_parts(overlapping=True)
+    out = merge_sketches_many(parts, seed, m=m, dedupe=True)
+    idx = np.asarray(out.idx)
+    valid = idx[idx != INVALID_IDX]
+    assert np.all(np.diff(valid) > 0)       # duplicate-free by construction
+
+
+def test_matrix_dedupe_false_misuse_raises():
+    rng = np.random.default_rng(4)
+    A = rng.standard_normal((256, 4)).astype(np.float32)
+    m, seed = 64, 5
+    overlapping = [
+        priority_matrix_sketch(jnp.asarray(A[:192]), m, seed,
+                               row_indices=jnp.arange(192)),
+        priority_matrix_sketch(jnp.asarray(A[128:]), m, seed,
+                               row_indices=jnp.arange(128, 256)),
+    ]
+    with pytest.raises(ValueError, match="dedupe"):
+        merge_matrix_sketches(overlapping, seed, m=m, dedupe=False)
+    disjoint = [
+        priority_matrix_sketch(jnp.asarray(A[:128]), m, seed,
+                               row_indices=jnp.arange(128)),
+        priority_matrix_sketch(jnp.asarray(A[128:]), m, seed,
+                               row_indices=jnp.arange(128, 256)),
+    ]
+    out = merge_matrix_sketches(disjoint, seed, m=m, dedupe=False)
+    idx = np.asarray(out.row_idx)
+    valid = idx[idx != INVALID_IDX]
+    assert np.all(np.diff(valid) > 0)
+
+
+def test_pairwise_merge_still_checks():
+    """merge_sketches (two-part wrapper) inherits the dedupe=False check via
+    merge_sketches_many; dedupe=True path stays silent on overlap."""
+    parts, m, seed = _vector_parts(overlapping=True)
+    out = merge_sketches(parts[0], parts[1], seed, m=m)
+    idx = np.asarray(out.idx)
+    valid = idx[idx != INVALID_IDX]
+    assert np.all(np.diff(valid) > 0)

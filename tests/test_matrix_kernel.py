@@ -1,0 +1,115 @@
+"""kernels/matrix_sketch parity: bucketized layout round trip, Pallas
+kernel bit-exact vs its jnp oracle, and bucketized-vs-sorted estimator
+agreement (DESIGN.md §15)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import INVALID_IDX
+from repro.kernels import (bucketize_matrix_sketches,
+                           matrix_products_bucketized, matrix_products_ref,
+                           matrix_slot_probs, stack_matrix_sketches)
+from repro.kernels.matrix_sketch.matrix_sketch import matrix_products_pallas
+from repro.matrix import (estimate_matrix_product, priority_matrix_sketch,
+                          row_weight)
+
+from test_matrix_sketch import make_matrix_pair
+
+
+@pytest.fixture(scope="module")
+def sketch_batch():
+    rng = np.random.default_rng(2)
+    P, n, d, m = 6, 1024, 8, 96
+    sas, sbs = [], []
+    for _ in range(P):
+        A, B = make_matrix_pair(rng, n=n, d=d, overlap=0.5)
+        sas.append(priority_matrix_sketch(jnp.asarray(A), m, 5))
+        sbs.append(priority_matrix_sketch(jnp.asarray(B), m, 5))
+    return stack_matrix_sketches(sas), stack_matrix_sketches(sbs), sas, sbs
+
+
+def test_bucketize_round_trip(sketch_batch):
+    SA, _, sas, _ = sketch_batch
+    # 4x buckets: zero drops, every (id, row) pair must survive re-layout
+    BA = bucketize_matrix_sketches(SA, n_buckets=512, slots=4)
+    assert int(np.asarray(BA.dropped).sum()) == 0
+    for p, sk in enumerate(sas):
+        got = {}
+        idx = np.asarray(BA.idx[p])
+        rows = np.asarray(BA.rows[p])
+        for b in range(idx.shape[0]):
+            for s in range(idx.shape[1]):
+                if idx[b, s] != INVALID_IDX:
+                    got[int(idx[b, s])] = rows[b, s]
+        src = np.asarray(sk.row_idx)
+        for j, i in enumerate(src):
+            if i != INVALID_IDX:
+                np.testing.assert_array_equal(got[int(i)],
+                                              np.asarray(sk.rows)[j])
+        assert len(got) == int(sk.size())
+
+
+def test_pallas_bit_exact_vs_ref(sketch_batch):
+    SA, SB, _, _ = sketch_batch
+    BA = bucketize_matrix_sketches(SA, n_buckets=256, slots=4)
+    BB = bucketize_matrix_sketches(SB, n_buckets=256, slots=4)
+    a_p = matrix_slot_probs(BA)
+    b_p = matrix_slot_probs(BB)
+    ref = np.asarray(matrix_products_ref(BA.idx, BA.rows, a_p,
+                                         BB.idx, BB.rows, b_p))
+    pal = np.asarray(matrix_products_pallas(BA.idx, BA.rows, a_p,
+                                            BB.idx, BB.rows, b_p,
+                                            interpret=True))
+    np.testing.assert_array_equal(ref, pal)     # bit-exact, shared body
+
+
+def test_dispatch_paths_agree(sketch_batch):
+    SA, SB, _, _ = sketch_batch
+    BA = bucketize_matrix_sketches(SA, n_buckets=512, slots=4)
+    BB = bucketize_matrix_sketches(SB, n_buckets=512, slots=4)
+    ref = np.asarray(matrix_products_bucketized(BA, BB, use_pallas=False))
+    pal = np.asarray(matrix_products_bucketized(BA, BB, use_pallas=True))
+    np.testing.assert_array_equal(ref, pal)
+
+
+def test_bucketized_matches_sorted_estimator_when_drop_free(sketch_batch):
+    SA, SB, sas, sbs = sketch_batch
+    BA = bucketize_matrix_sketches(SA, n_buckets=512, slots=4)
+    BB = bucketize_matrix_sketches(SB, n_buckets=512, slots=4)
+    assert int(np.asarray(BA.dropped).sum() + np.asarray(BB.dropped).sum()) \
+        == 0
+    est = np.asarray(matrix_products_bucketized(BA, BB, use_pallas=False))
+    for p, (sa, sb) in enumerate(zip(sas, sbs)):
+        np.testing.assert_allclose(
+            est[p], np.asarray(estimate_matrix_product(sa, sb)),
+            rtol=1e-5, atol=1e-4)
+
+
+def test_overflow_drops_are_counted():
+    rng = np.random.default_rng(6)
+    A, _ = make_matrix_pair(rng, n=1024, d=4, overlap=1.0)
+    sk = priority_matrix_sketch(jnp.asarray(A), 256, 3)
+    # 16 buckets x 2 slots for 256 kept rows: heavy overflow by design
+    bc = bucketize_matrix_sketches(sk, n_buckets=16, slots=2)
+    kept = int(np.sum(np.asarray(bc.idx) != INVALID_IDX))
+    assert kept + int(bc.dropped[0]) == int(sk.size())
+    assert int(bc.dropped[0]) > 0
+
+
+def test_slot_probs_padding_is_one(sketch_batch):
+    SA, _, _, _ = sketch_batch
+    BA = bucketize_matrix_sketches(SA, n_buckets=512, slots=4)
+    p = np.asarray(matrix_slot_probs(BA))
+    pad = np.asarray(BA.idx) == INVALID_IDX
+    np.testing.assert_array_equal(p[pad], 1.0)
+    w = np.asarray(row_weight(BA.rows, "l2"))
+    assert np.all(p[~pad] <= 1.0) and np.all(p[~pad] > 0)
+    assert np.all(w[pad] == 0)
+
+
+def test_shape_mismatch_raises(sketch_batch):
+    SA, SB, _, _ = sketch_batch
+    BA = bucketize_matrix_sketches(SA, n_buckets=512, slots=4)
+    BB = bucketize_matrix_sketches(SB, n_buckets=256, slots=4)
+    with pytest.raises(ValueError, match="layouts"):
+        matrix_products_bucketized(BA, BB)

@@ -111,3 +111,40 @@ def test_densify_unbiased_support(a, m, seed):
     d = np.asarray(densify(s, len(a)))
     assert np.all((d != 0) <= (a != 0))
     assert np.all(np.sign(d[d != 0]) == np.sign(a[d != 0]))
+
+
+N_UNBIASED_SEEDS = 200
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 16 - 1),
+       st.integers(min_value=6, max_value=12),
+       st.sampled_from([2, 3]))
+def test_matrix_estimator_unbiased(data_seed, m, d):
+    """The matrix-product estimator is unbiased: averaged over
+    ``N_UNBIASED_SEEDS`` independent hash seeds, the estimate of ``A^T B``
+    converges on the truth within the CLT band implied by the Frobenius
+    variance bound (DESIGN.md §15)."""
+    from repro.matrix import (estimate_matrix_product,
+                              frobenius_variance_bound,
+                              priority_matrix_sketch)
+    rng = np.random.default_rng(data_seed)
+    n = 32
+    A = rng.standard_normal((n, d)).astype(np.float32)
+    B = rng.standard_normal((n, d)).astype(np.float32)
+    A[rng.random(n) < 0.3] = 0
+    B[rng.random(n) < 0.3] = 0
+    aj, bj = jnp.asarray(A), jnp.asarray(B)
+    true = A.T @ B
+    acc = np.zeros_like(true)
+    for seed in range(N_UNBIASED_SEEDS):
+        sa = priority_matrix_sketch(aj, m, seed)
+        sb = priority_matrix_sketch(bj, m, seed)
+        acc += np.asarray(estimate_matrix_product(sa, sb))
+    mean = acc / N_UNBIASED_SEEDS
+    # per-entry variance <= total Frobenius variance bound; 5 sigma of the
+    # seed-averaged noise (plus a small absolute floor for ~0 entries)
+    sigma = np.sqrt(float(frobenius_variance_bound(aj, bj, m,
+                                                   method="priority"))
+                    / N_UNBIASED_SEEDS)
+    np.testing.assert_allclose(mean, true, atol=5 * sigma + 1e-3)
