@@ -1,0 +1,205 @@
+"""Degraded serving: observed error vs the widened bound across shard
+loss, and crash recovery vs full rebuild (DESIGN.md §16).
+
+Two claims are gated:
+
+- **bounds hold under loss** — a :class:`ResilientSketchIndex` over P
+  independently-seeded coordinate shards is queried with 0–50% of shards
+  killed; at every loss level the observed error vs the FULL inner
+  product must stay within the reported widened bound
+  (``core.variance.surviving_corpus_bound``: Chebyshev sampling
+  half-width over survivors + Cauchy-Schwarz lost-mass term), while the
+  reported coverage tracks the surviving query energy;
+- **recovery beats rebuild** — a crashed :class:`DurableSketchIndex`
+  (snapshot at 7/8 ingested + journal tail) must recover >= 3x faster
+  than re-sketching the full corpus, and bit-exactly: snapshot-load is a
+  block copy and journal replay re-runs only the post-snapshot tail
+  through the deterministic build pipeline.
+
+Standalone entry point writes ``BENCH_degraded.json``:
+
+    PYTHONPATH=src python -m benchmarks.degraded_serving \
+        --json-out BENCH_degraded.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+import jax
+
+from repro.serve import DurableSketchIndex, ResilientSketchIndex, RetryPolicy, SketchIndex
+
+from .common import Csv, time_callable
+
+# (D, n, m, P)
+QUICK_POINT = (64, 1 << 13, 128, 8)
+FULL_POINT = (256, 1 << 15, 128, 8)
+LOSS_FRACTIONS = [0.0, 0.125, 0.25, 0.375, 0.5]
+N_QUERIES = 8
+RECOVERY_SPEEDUP = 3.0
+# recovery point (D, n, m): big enough that the rebuild's O(D n) sketch
+# work dominates recovery's fixed costs (snapshot load + one-record
+# journal decode) — the regime the >= 3x gate is about
+QUICK_RECOVERY_POINT = (256, 1 << 13, 128)
+FULL_RECOVERY_POINT = (512, 1 << 15, 128)
+# ingest in 8 batches, snapshot after 7 (1/8 tail replay)
+RECOVERY_BATCHES = 8
+
+
+def _degraded_sweep(D: int, n: int, m: int, P: int, *, n_rep: int = 3,
+                    seed: int = 11) -> list:
+    rng = np.random.default_rng(17)
+    idx = ResilientSketchIndex(n, num_shards=P, m=m, n_buckets=2 * m,
+                               seed=seed, retry=RetryPolicy(attempts=1,
+                                                            deadline=None))
+    V = rng.standard_normal((D, n)).astype(np.float32)
+    idx.add_many([f"v{d}" for d in range(D)], V)
+    queries = rng.standard_normal((N_QUERIES, n)).astype(np.float32)
+    true = V.astype(np.float64) @ queries.astype(np.float64).T   # (D, Q)
+
+    out = []
+    for frac in LOSS_FRACTIONS:
+        k = int(round(frac * P))
+        for p in range(P):
+            idx.revive_shard(p)
+        for p in range(k):
+            idx.kill_shard(p, "chaos sweep")
+        max_ratio = 0.0
+        coverages = []
+        for qi in range(N_QUERIES):
+            res = idx.query(queries[qi])
+            err = np.abs(np.asarray(res.estimates, np.float64) - true[:, qi])
+            max_ratio = max(max_ratio,
+                            float(np.max(err / np.asarray(res.bound))))
+            coverages.append(res.coverage)
+        us = time_callable(idx.query, queries[0], n_rep=n_rep, warmup=1)
+        out.append({
+            "D": D, "n": n, "m": m, "P": P,
+            "loss_fraction": frac, "shards_down": k,
+            "us_query": us,
+            "coverage": float(np.mean(coverages)),
+            "max_err_over_bound": max_ratio,
+            "within_bound": bool(max_ratio <= 1.0),
+        })
+    return out
+
+
+def _bench_recovery(D: int, n: int, m: int, *, n_rep: int = 3,
+                    seed: int = 11) -> dict:
+    rng = np.random.default_rng(23)
+    V = rng.standard_normal((D, n)).astype(np.float32)
+    names = [f"v{d}" for d in range(D)]
+    batch = max(D // RECOVERY_BATCHES, 1)
+    splits = [(i, min(i + batch, D)) for i in range(0, D, batch)]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        wal_dir = os.path.join(tmp, "durable")
+        dur = DurableSketchIndex(wal_dir, m=m, n_buckets=2 * m, seed=seed)
+        for bi, (lo, hi) in enumerate(splits):
+            dur.add_many(names[lo:hi], V[lo:hi])
+            if bi == len(splits) - 2:
+                dur.snapshot()           # crash point: 1 batch un-snapshot
+        dur.journal.close()
+
+        def recover():
+            rec = DurableSketchIndex.recover(wal_dir)
+            rec.journal.close()
+            return rec
+
+        def rebuild():
+            fresh = SketchIndex(m=m, n_buckets=2 * m, seed=seed)
+            fresh.add_many(names, V)
+            return fresh
+
+        us_recover = time_callable(recover, n_rep=n_rep, warmup=1)
+        us_rebuild = time_callable(rebuild, n_rep=n_rep, warmup=1)
+
+        rec, ref = recover(), rebuild()
+        exact = (rec.index._names == ref._names
+                 and np.array_equal(rec.index._idx[:D], ref._idx[:D])
+                 and np.array_equal(rec.index._val[:D], ref._val[:D])
+                 and np.array_equal(rec.index._tau[:D], ref._tau[:D]))
+
+    return {
+        "D": D, "n": n, "m": m, "batches": len(splits),
+        "us_recover": us_recover, "us_rebuild": us_rebuild,
+        "speedup": us_rebuild / us_recover,
+        "bit_exact": bool(exact),
+    }
+
+
+def run(quick: bool = True) -> Csv:
+    csv = Csv()
+    D, n, m, P = QUICK_POINT if quick else FULL_POINT
+
+    sweep = _degraded_sweep(D, n, m, P)
+    for r in sweep:
+        tag = (f"degraded/P{P}_D{D}_n{n}_m{m}/"
+               f"loss{int(r['loss_fraction'] * 100)}")
+        csv.add(tag, r["us_query"],
+                f"coverage={r['coverage']:.3f}"
+                f";max_err_over_bound={r['max_err_over_bound']:.3f}"
+                f";shards_down={r['shards_down']}")
+    within = all(r["within_bound"] for r in sweep)
+    worst = max(r["max_err_over_bound"] for r in sweep)
+    csv.add("degraded/validate/error_within_widened_bound", 0.0,
+            ("PASS" if within else "FAIL")
+            + f";worst_err_over_bound={worst:.3f}")
+    # coverage must fall monotonically with loss and stay correctly ordered
+    covs = [r["coverage"] for r in sweep]
+    mono = all(c1 >= c2 - 1e-6 for c1, c2 in zip(covs, covs[1:])) \
+        and covs[0] == 1.0
+    csv.add("degraded/validate/coverage_tracks_loss", 0.0,
+            ("PASS" if mono else "FAIL")
+            + ";" + ",".join(f"{c:.3f}" for c in covs))
+
+    D, n, m = QUICK_RECOVERY_POINT if quick else FULL_RECOVERY_POINT
+    rec = _bench_recovery(D, n, m)
+    csv.add(f"degraded/recovery_D{D}_n{n}_m{m}/recover", rec["us_recover"],
+            f"speedup={rec['speedup']:.2f};bit_exact={rec['bit_exact']}")
+    csv.add(f"degraded/recovery_D{D}_n{n}_m{m}/rebuild", rec["us_rebuild"],
+            "full corpus re-sketch")
+    csv.add("degraded/validate/recovery_3x_rebuild", 0.0,
+            ("PASS" if rec["speedup"] >= RECOVERY_SPEEDUP else "FAIL")
+            + f";speedup={rec['speedup']:.2f}")
+    csv.add("degraded/validate/recovery_bit_exact", 0.0,
+            "PASS" if rec["bit_exact"] else "FAIL")
+    csv.results = {"sweep": sweep, "recovery": rec}
+    return csv
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json-out", default="BENCH_degraded.json")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    csv = run(quick=not args.full)
+    payload = {
+        "benchmark": "degraded_serving",
+        "backend": jax.default_backend(),
+        "gates": {"recovery_speedup": RECOVERY_SPEEDUP,
+                  "error_within_bound": True},
+        "sweep": csv.results["sweep"],
+        "recovery": csv.results["recovery"],
+        "rows": [{"name": n, "us_per_call": u, "derived": d}
+                 for n, u, d in csv.rows],
+    }
+    with open(args.json_out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.json_out}")
+    failures = [(n, d) for n, _, d in csv.rows
+                if "/validate/" in n and "FAIL" in d]
+    if failures:
+        print(f"# VALIDATION FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

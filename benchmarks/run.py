@@ -22,9 +22,10 @@ import sys
 import time
 
 from . import (allpairs_throughput, common, construction_throughput,
-               fig3_synthetic_ip, fig4_binary, fig5_endbiased, fig6_join_corr,
-               fig7_runtime, fig9_textsim, fig10_joinsize, matrix_product,
-               merge_throughput, table2_realworld)
+               degraded_serving, fig3_synthetic_ip, fig4_binary,
+               fig5_endbiased, fig6_join_corr, fig7_runtime, fig9_textsim,
+               fig10_joinsize, matrix_product, merge_throughput,
+               table2_realworld)
 
 MODULES = [
     ("fig3_synthetic_ip", fig3_synthetic_ip),
@@ -39,6 +40,7 @@ MODULES = [
     ("construction_throughput", construction_throughput),
     ("merge_throughput", merge_throughput),
     ("matrix_product", matrix_product),
+    ("degraded_serving", degraded_serving),
 ]
 
 

@@ -12,6 +12,10 @@ target is *not* an external URL:
   ``-N`` suffixes for duplicates);
 - ``§N`` DESIGN.md sections cited anywhere in the docs must exist.
 
+Python sources under ``src/``, ``benchmarks/`` and ``tests/`` are scanned
+too, for the section-cite check only (docstrings cite ``DESIGN.md §N``;
+the markdown link syntax does not apply to code).
+
     python scripts/check_links.py [files...]
 """
 from __future__ import annotations
@@ -31,6 +35,8 @@ EXTERNAL = ("http://", "https://", "mailto:")
 def default_files() -> list:
     files = [REPO / "README.md", REPO / "DESIGN.md", REPO / "ROADMAP.md"]
     files += sorted((REPO / "docs").glob("*.md"))
+    for tree in ("src", "benchmarks", "tests", "examples", "scripts"):
+        files += sorted((REPO / tree).rglob("*.py"))
     return [f for f in files if f.exists()]
 
 
@@ -76,6 +82,13 @@ def check(files) -> int:
 
     for f in files:
         text = f.read_text()
+        if f.suffix == ".py":
+            # code docstrings only cite sections; [..](..) would be noise
+            for sec in SECTION_CITE.findall(text):
+                if sec not in defined:
+                    errors.append(f"{_rel(f)}: cites DESIGN.md §{sec}, "
+                                  "which is not defined")
+            continue
         for target in LINK.findall(text):
             if target.startswith(EXTERNAL):
                 continue
@@ -95,9 +108,11 @@ def check(files) -> int:
                               "which is not defined")
     for e in errors:
         print(f"ERROR: {e}", file=sys.stderr)
-    checked = ", ".join(_rel(f) for f in files)
-    print(f"checked {len(files)} files ({checked}): "
-          f"{'FAIL' if errors else 'ok'}")
+    md = [f for f in files if f.suffix != ".py"]
+    n_py = len(files) - len(md)
+    checked = ", ".join(_rel(f) for f in md)
+    print(f"checked {len(files)} files ({checked} + {n_py} python "
+          f"sources): {'FAIL' if errors else 'ok'}")
     return 1 if errors else 0
 
 

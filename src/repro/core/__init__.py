@@ -36,9 +36,9 @@ from .baselines import (MinHashSketch, WMHSketch, countsketch,
 from .batched import estimate_all_pairs, estimate_query, sketch_corpus
 from .merge import (PartitionStats, merge_combined_sketches, merge_sketches,
                     merge_sketches_many, merge_stats, partition_stats)
-from .variance import (chebyshev_interval, error_guarantee,
+from .variance import (chebyshev_interval, coverage_fraction, error_guarantee,
                        linear_sketch_error, sketch_size_high_prob,
-                       variance_bound)
+                       surviving_corpus_bound, variance_bound)
 
 __all__ = [
     "fold_seed", "hash_bucket", "hash_sign", "hash_u32", "hash_unit", "mix32",
@@ -56,6 +56,7 @@ __all__ = [
     "estimate_all_pairs", "estimate_query", "sketch_corpus",
     "PartitionStats", "merge_combined_sketches", "merge_sketches",
     "merge_sketches_many", "merge_stats", "partition_stats",
-    "chebyshev_interval", "error_guarantee", "linear_sketch_error",
-    "sketch_size_high_prob", "variance_bound",
+    "chebyshev_interval", "coverage_fraction", "error_guarantee",
+    "linear_sketch_error", "sketch_size_high_prob",
+    "surviving_corpus_bound", "variance_bound",
 ]

@@ -54,3 +54,49 @@ def chebyshev_interval(estimate, a_norm2, b_norm2, m: int, delta: float = 0.05,
     lead = 2.0 / m if method == "threshold" else 2.0 / max(m - 1, 1)
     half = jnp.sqrt(lead * a_norm2 * b_norm2 / delta)
     return estimate - half, estimate + half
+
+
+def surviving_corpus_bound(surv_a2, surv_b2, lost_a2, lost_b2, m: int,
+                           delta: float = 0.05, *,
+                           method: str = "priority"):
+    """Widened error bound for a shard-loss-degraded estimate (DESIGN.md
+    §16): the serving layer partitions coordinates over shards, each shard
+    holding an independently seeded sketch of its slice, and a degraded
+    read sums the surviving shards' estimates.
+
+    Inputs are per-partition *squared* norms along the last axis:
+    ``surv_*2`` over surviving partitions, ``lost_*2`` over lost ones
+    (leading axes broadcast, so a (D, P) block of per-row-per-shard norms
+    yields (D,) bounds).  The total error vs the FULL inner product splits:
+
+    - sampling: each surviving partition's estimator is unbiased for its
+      slice's sub-inner-product with Theorem 1/3 variance
+      ``<= lead * a2_p * b2_p`` (conservative ``||a_I|| <= ||a||`` form);
+      the per-shard seeds are independent, so the variances add and
+      Chebyshev gives half-width ``sqrt(lead * sum_p a2_p b2_p / delta)``;
+    - lost mass: the unseen contribution is ``<a_L, b_L>`` over the lost
+      coordinates, bounded deterministically by Cauchy-Schwarz as
+      ``sqrt(sum_lost a2) * sqrt(sum_lost b2)``.
+
+    Returns ``(sampling_half_width, lost_mass_bound, widened)`` with
+    ``widened = sampling + lost`` — with probability ``1 - delta`` the
+    degraded estimate is within ``widened`` of the full answer.
+    """
+    surv_a2 = jnp.asarray(surv_a2, jnp.float32)
+    surv_b2 = jnp.asarray(surv_b2, jnp.float32)
+    lost_a2 = jnp.asarray(lost_a2, jnp.float32)
+    lost_b2 = jnp.asarray(lost_b2, jnp.float32)
+    lead = 2.0 / m if method == "threshold" else 2.0 / max(m - 1, 1)
+    sampling = jnp.sqrt(lead / delta * jnp.sum(surv_a2 * surv_b2, axis=-1))
+    lost = jnp.sqrt(jnp.sum(lost_a2, axis=-1)) * \
+        jnp.sqrt(jnp.sum(lost_b2, axis=-1))
+    return sampling, lost, sampling + lost
+
+
+def coverage_fraction(surv_mass, lost_mass):
+    """Fraction of (squared-norm) mass served by the surviving shards:
+    ``surv / (surv + lost)``; 1.0 for an empty corpus (nothing to lose)."""
+    surv = jnp.sum(jnp.asarray(surv_mass, jnp.float32), axis=-1)
+    lost = jnp.sum(jnp.asarray(lost_mass, jnp.float32), axis=-1)
+    total = surv + lost
+    return jnp.where(total > 0, surv / jnp.where(total > 0, total, 1.0), 1.0)

@@ -1,6 +1,19 @@
-"""Serving: batched LM engine + sketch index service."""
+"""Serving: batched LM engine + sketch index service + resilience layer."""
 from .engine import Engine, Request
 from .sketch_service import MatrixSketchStore, ShardedSketchIndex, SketchIndex
+from .resilience import (DegradedResult, DegradedServiceError,
+                         DurableSketchIndex, IngestJournal, ResilienceError,
+                         ResilientMatrixStore, ResilientSketchIndex,
+                         RetryPolicy, ShardDownError, ShardHealth,
+                         SnapshotCorruptionError, list_snapshots,
+                         load_latest_snapshot, load_snapshot,
+                         quarantine_snapshot, save_snapshot)
 
 __all__ = ["Engine", "Request", "MatrixSketchStore", "ShardedSketchIndex",
-           "SketchIndex"]
+           "SketchIndex",
+           "DegradedResult", "DegradedServiceError", "DurableSketchIndex",
+           "IngestJournal", "ResilienceError", "ResilientMatrixStore",
+           "ResilientSketchIndex", "RetryPolicy", "ShardDownError",
+           "ShardHealth", "SnapshotCorruptionError", "list_snapshots",
+           "load_latest_snapshot", "load_snapshot", "quarantine_snapshot",
+           "save_snapshot"]

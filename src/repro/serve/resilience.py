@@ -1,0 +1,1021 @@
+"""Fault-tolerant sketch serving: durability, degraded-mode reads with
+quantified coverage, and guarded shard fan-out (DESIGN.md §16).
+
+Coordinated sampling degrades *gracefully*: a sharded corpus is a flat
+union of per-partition samples (DESIGN.md §14), so losing a shard leaves
+an unbiased estimator over the surviving sub-corpus whose Theorem-1/3
+error bound is computable from O(1) per-shard state — unlike linear
+sketches (JL/CountSketch), where a lost shard is a silently missing
+summand in every estimate with no certificate of how wrong the answer is.
+This module turns that observation into a serving layer with four pillars:
+
+1. **Durability** — versioned, checksummed snapshots of the bucketized
+   blocks (:func:`save_snapshot` / :func:`load_snapshot`) plus a WAL-style
+   ingest journal (:class:`IngestJournal`); a crashed index recovers
+   bit-exactly by snapshot-load + journal replay
+   (:meth:`DurableSketchIndex.recover`), replaying partition merges
+   through the §14 merge kernel.  Corrupt snapshots are detected by CRC
+   and quarantined, never loaded (:func:`load_latest_snapshot`).
+2. **Degraded-mode reads** — :class:`ResilientSketchIndex` /
+   :class:`ResilientMatrixStore` partition coordinates (rows) over
+   independently-seeded shards; when shards are down, reads answer from
+   the survivors and return a :class:`DegradedResult` carrying
+   ``(estimates, coverage, widened_bound)`` per
+   :func:`repro.core.variance.surviving_corpus_bound`, or raise
+   :class:`DegradedServiceError` in strict mode.
+3. **Guarded fan-out** — per-shard calls run through an injectable
+   ``call_wrapper`` with retry + exponential backoff + deadline
+   (:class:`RetryPolicy`); timeouts mark the shard unhealthy
+   (:class:`ShardHealth`, riding
+   :class:`repro.train.fault_tolerance.HeartbeatMonitor`) instead of
+   hanging or failing the query.
+4. **Input hardening** — every ingest/read surface validates shapes and
+   rejects-or-sanitizes NaN/Inf (``repro.serve.validation``), so bad
+   input is a clear error at the boundary, not poisoned estimates.
+"""
+from __future__ import annotations
+
+import base64
+import json
+import os
+import shutil
+import time
+import zlib
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+from repro.core import coverage_fraction, fold_seed, surviving_corpus_bound
+from repro.distributed import partition_bounds
+from repro.serve.sketch_service import MatrixSketchStore, SketchIndex
+from repro.serve.validation import check_finite, check_unique_name, check_vector
+from repro.train.fault_tolerance import HeartbeatMonitor
+
+SNAPSHOT_FORMAT_VERSION = 1
+_SNAP_PREFIX = "snapshot-"
+
+
+class ResilienceError(RuntimeError):
+    """Base class for serving-resilience failures."""
+
+
+class SnapshotCorruptionError(ResilienceError):
+    """A snapshot failed its integrity checks (CRC/shape/version)."""
+
+
+class ShardDownError(ResilienceError):
+    """A shard call failed terminally (retries/deadline exhausted)."""
+
+
+class DegradedServiceError(ResilienceError):
+    """Strict-mode refusal: shards are down and degraded answers are not
+    acceptable to this caller."""
+
+
+# ---------------------------------------------------------------------------
+# Durability: versioned checksummed snapshots
+# ---------------------------------------------------------------------------
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _snapshot_arrays(index) -> dict:
+    """The occupied-prefix payload arrays of an index, by kind."""
+    D = len(index)
+    if isinstance(index, SketchIndex):
+        return {"idx": index._idx[:D], "val": index._val[:D],
+                "tau": index._tau[:D], "dropped": index._dropped[:D]}
+    if isinstance(index, MatrixSketchStore):
+        return {"idx": index._idx[:D], "rows": index._rows[:D],
+                "tau": index._tau[:D]}
+    raise TypeError(f"cannot snapshot {type(index).__name__}")
+
+
+def _snapshot_params(index) -> dict:
+    if isinstance(index, SketchIndex):
+        return {"kind": "sketch_index", "m": index.m,
+                "n_buckets": index.n_buckets, "slots": index.slots,
+                "seed": index.seed, "nonfinite": index.nonfinite,
+                "dim": index._dim}
+    return {"kind": "matrix_store", "m": index.m, "dim": index.dim,
+            "seed": index.seed, "nonfinite": index.nonfinite}
+
+
+def save_snapshot(index, directory: str, *, journal_seq: int = 0) -> str:
+    """Write one versioned snapshot of a :class:`SketchIndex` or
+    :class:`MatrixSketchStore` under ``directory`` and return its path.
+
+    Layout (DESIGN.md §16): ``snapshot-<journal_seq>/manifest.json`` plus
+    one ``.npy`` per payload array (``idx``/``val``/``tau``/... over the
+    occupied row prefix), each with a CRC32 recorded in the manifest.  The
+    write is atomic (tmp dir + ``os.replace``): a crash mid-write never
+    leaves a readable-but-wrong snapshot, and a re-snapshot at the same
+    ``journal_seq`` replaces the old one atomically.
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"{_SNAP_PREFIX}{journal_seq:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _snapshot_arrays(index)
+    manifest = {
+        "format_version": SNAPSHOT_FORMAT_VERSION,
+        "journal_seq": int(journal_seq),
+        "params": _snapshot_params(index),
+        "names": list(index._names),
+        "arrays": {},
+    }
+    for key, arr in arrays.items():
+        fname = f"{key}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["arrays"][key] = {"file": fname, "crc32": _crc(arr),
+                                   "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def _rebuild_index(params: dict):
+    if params["kind"] == "sketch_index":
+        index = SketchIndex(params["m"], n_buckets=params["n_buckets"],
+                            slots=params["slots"], seed=params["seed"],
+                            nonfinite=params.get("nonfinite", "raise"))
+        index._dim = params.get("dim")
+        return index
+    return MatrixSketchStore(params["m"], dim=params["dim"],
+                             seed=params["seed"],
+                             nonfinite=params.get("nonfinite", "raise"))
+
+
+def load_snapshot(path: str):
+    """Load one snapshot, verifying version and payload CRCs; returns
+    ``(index, journal_seq)`` or raises :class:`SnapshotCorruptionError`.
+    """
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise SnapshotCorruptionError(f"{path}: unreadable manifest "
+                                      f"({e})") from e
+    version = manifest.get("format_version")
+    if version != SNAPSHOT_FORMAT_VERSION:
+        raise SnapshotCorruptionError(
+            f"{path}: snapshot format version {version!r} not supported "
+            f"(this build reads version {SNAPSHOT_FORMAT_VERSION})")
+    index = _rebuild_index(manifest["params"])
+    names = manifest["names"]
+    arrays = {}
+    for key, meta in manifest["arrays"].items():
+        fpath = os.path.join(path, meta["file"])
+        try:
+            arr = np.load(fpath)
+        except (OSError, ValueError) as e:
+            raise SnapshotCorruptionError(f"{path}: unreadable payload "
+                                          f"{meta['file']} ({e})") from e
+        if list(arr.shape) != meta["shape"] or str(arr.dtype) != meta["dtype"]:
+            raise SnapshotCorruptionError(
+                f"{path}: payload {key} is {arr.dtype}{arr.shape}, "
+                f"manifest says {meta['dtype']}{tuple(meta['shape'])}")
+        if _crc(arr) != meta["crc32"]:
+            raise SnapshotCorruptionError(
+                f"{path}: payload {key} failed its CRC32 integrity check "
+                "(bit rot or tampering); refusing to load")
+        if arr.shape[0] != len(names):
+            raise SnapshotCorruptionError(
+                f"{path}: payload {key} holds {arr.shape[0]} rows for "
+                f"{len(names)} names")
+        arrays[key] = arr
+    # replay the occupied prefix into fresh capacity-doubled blocks
+    D = len(names)
+    while index.capacity < max(D, 1):
+        index._grow()
+    for key, arr in arrays.items():
+        getattr(index, f"_{key}")[:D] = arr
+    index._names = list(names)
+    index._name_set = set(names)
+    return index, int(manifest["journal_seq"])
+
+
+def list_snapshots(directory: str) -> list:
+    """Snapshot paths under ``directory``, oldest first."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in sorted(os.listdir(directory)):
+        if name.startswith(_SNAP_PREFIX) and not name.endswith(".tmp") \
+                and "quarantined" not in name:
+            out.append(os.path.join(directory, name))
+    return out
+
+
+def quarantine_snapshot(path: str, reason: str) -> str:
+    """Move a corrupt snapshot aside (never delete evidence) and return
+    the quarantine path."""
+    dest = path + ".quarantined"
+    k = 0
+    while os.path.exists(dest):
+        k += 1
+        dest = f"{path}.quarantined.{k}"
+    os.replace(path, dest)
+    with open(os.path.join(dest, "QUARANTINE_REASON"), "w") as f:
+        f.write(reason + "\n")
+    return dest
+
+
+def load_latest_snapshot(directory: str):
+    """Load the newest snapshot that passes integrity checks, quarantining
+    any corrupt ones encountered on the way down; returns
+    ``(index, journal_seq)`` or ``(None, 0)`` when no usable snapshot
+    exists."""
+    for path in reversed(list_snapshots(directory)):
+        try:
+            return load_snapshot(path)
+        except SnapshotCorruptionError as e:
+            quarantine_snapshot(path, str(e))
+    return None, 0
+
+
+# ---------------------------------------------------------------------------
+# Durability: WAL-style ingest journal
+# ---------------------------------------------------------------------------
+
+
+def _enc(arr) -> dict:
+    arr = np.ascontiguousarray(arr)
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": base64.b64encode(arr.tobytes()).decode("ascii")}
+
+
+def _dec(meta: dict) -> np.ndarray:
+    return np.frombuffer(base64.b64decode(meta["data"]),
+                         dtype=meta["dtype"]).reshape(meta["shape"])
+
+
+class IngestJournal:
+    """Append-only ingest journal (write-ahead log) with checkpoint
+    rotation.
+
+    One JSON record per line: ``{"seq", "op", "crc", "body"}`` where
+    ``crc`` is the CRC32 of the canonical body encoding and array payloads
+    ride base64.  :meth:`read` replays records in order and *stops at the
+    first corrupt or truncated record* — a crash mid-append loses at most
+    the un-acked tail, never an acknowledged op (DESIGN.md §16).
+
+    On each snapshot the live journal is :meth:`rotate`\\ d: the current
+    file is archived as ``journal-<end_seq>.wal`` and a fresh live file
+    starts with a ``checkpoint`` marker carrying the sequence position.
+    Recovery (:meth:`read_all`) then skips archived segments that end at
+    or before the snapshot's sequence number entirely — recovery cost is
+    O(snapshot) + O(post-snapshot tail), not O(total ingest history) —
+    while the archives keep replay possible when a corrupt newest snapshot
+    forces fallback to an older one.
+    """
+
+    def __init__(self, path: str, *, seq: Optional[int] = None):
+        """``seq``: resume numbering from a known position instead of
+        scanning the existing file (recovery already parsed it)."""
+        self.path = path
+        if seq is not None:
+            self._seq = seq
+        else:
+            self._seq = 0
+            if os.path.exists(path):
+                records, _ = self.read(path)
+                if records:
+                    self._seq = records[-1][0]
+        self._fh = open(path, "a")
+
+    @property
+    def seq(self) -> int:
+        """Sequence number of the last acknowledged record."""
+        return self._seq
+
+    @staticmethod
+    def _line(seq: int, op: str, body: dict) -> str:
+        canon = json.dumps(body, sort_keys=True)
+        record = {"seq": seq, "op": op,
+                  "crc": zlib.crc32(canon.encode()) & 0xFFFFFFFF,
+                  "body": body}
+        return json.dumps(record, sort_keys=True) + "\n"
+
+    def append(self, op: str, body: dict) -> int:
+        """Durably append one op; returns its sequence number."""
+        self._seq += 1
+        self._fh.write(self._line(self._seq, op, body))
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+        return self._seq
+
+    def rotate(self) -> str:
+        """Checkpoint the journal after a snapshot at the current seq:
+        archive the live file as ``journal-<seq>.wal`` and restart it with
+        a ``checkpoint`` marker (same seq — replay filters it).  Each step
+        is atomic; a crash between them only costs recovery speed, never
+        acknowledged records."""
+        self._fh.close()
+        archive = os.path.join(os.path.dirname(self.path) or ".",
+                               f"journal-{self._seq:010d}.wal")
+        os.replace(self.path, archive)
+        with open(self.path, "w") as f:
+            f.write(self._line(self._seq, "checkpoint",
+                               {"snapshot_seq": self._seq}))
+            f.flush()
+            os.fsync(f.fileno())
+        self._fh = open(self.path, "a")
+        return archive
+
+    def close(self) -> None:
+        self._fh.close()
+
+    @staticmethod
+    def read(path: str, *, after_seq: int = 0):
+        """Return ``(records, tail_dropped)``: records as
+        ``(seq, op, body)`` with ``seq > after_seq``, stopping at the
+        first record that fails to parse or verify (``tail_dropped`` lines
+        were discarded as a corrupt/truncated tail)."""
+        records = []
+        dropped = 0
+        try:
+            with open(path) as f:
+                lines = f.readlines()
+        except OSError:
+            return records, dropped
+        for i, line in enumerate(lines):
+            try:
+                rec = json.loads(line)
+                canon = json.dumps(rec["body"], sort_keys=True)
+                if (zlib.crc32(canon.encode()) & 0xFFFFFFFF) != rec["crc"]:
+                    raise ValueError("CRC mismatch")
+                seq, op, body = int(rec["seq"]), rec["op"], rec["body"]
+            except (ValueError, KeyError, TypeError):
+                dropped = len(lines) - i
+                break
+            if seq > after_seq:
+                records.append((seq, op, body))
+        return records, dropped
+
+    @classmethod
+    def read_all(cls, path: str, *, after_seq: int = 0):
+        """Read archived segments + the live journal, skipping whole
+        segments that end at or before ``after_seq`` (their records are
+        already inside the snapshot being recovered from).  Stops at the
+        first corrupt record — later segments may depend on the gap."""
+        directory = os.path.dirname(path) or "."
+        segments = []
+        if os.path.isdir(directory):
+            for name in sorted(os.listdir(directory)):
+                if name.startswith("journal-") and name.endswith(".wal"):
+                    try:
+                        end_seq = int(name[len("journal-"):-len(".wal")])
+                    except ValueError:
+                        continue
+                    if end_seq > after_seq:
+                        segments.append(os.path.join(directory, name))
+        records = []
+        for seg in segments + [path]:
+            recs, dropped = cls.read(seg, after_seq=after_seq)
+            records.extend(recs)
+            if dropped:
+                return records, dropped
+        return records, 0
+
+
+class DurableSketchIndex:
+    """A :class:`SketchIndex` with crash durability: every ingest op is
+    journaled on ack, snapshots cut periodically, and :meth:`recover`
+    rebuilds the exact pre-crash index as snapshot-load + journal replay
+    (DESIGN.md §16).
+
+    Replay re-runs the identical deterministic build pipeline, so recovery
+    is **bit-exact**; replayed ``merge_from`` ops ride the §14 bucketized
+    merge exactly as the original call did.  Recovery cost is
+    O(snapshot size) + O(ops since last snapshot), against O(full corpus
+    re-sketch) for a rebuild — the gap ``benchmarks/degraded_serving.py``
+    gates at >= 3x.
+    """
+
+    def __init__(self, directory: str, *, snapshot_every: Optional[int] = None,
+                 index: Optional[SketchIndex] = None,
+                 _journal_seq: Optional[int] = None, **index_kwargs):
+        os.makedirs(directory, exist_ok=True)
+        self.directory = directory
+        self.index = index if index is not None else SketchIndex(**index_kwargs)
+        self.snapshot_every = snapshot_every
+        self._ops_since_snapshot = 0
+        self.journal = IngestJournal(os.path.join(directory, "journal.wal"),
+                                     seq=_journal_seq)
+
+    # -- ingest (journaled) --------------------------------------------
+    def add(self, name, vector=None, *, indices=None, values=None) -> None:
+        self.index.add(name, vector, indices=indices, values=values)
+        body = {"name": name}
+        if vector is not None:
+            body["vector"] = _enc(np.asarray(vector, np.float32))
+        else:
+            body["indices"] = _enc(np.asarray(indices, np.int32))
+            body["values"] = _enc(np.asarray(values, np.float32))
+        self.journal.append("add", body)
+        self._maybe_snapshot()
+
+    def add_many(self, names: Sequence, matrix) -> None:
+        self.index.add_many(names, matrix)
+        self.journal.append("add_many", {
+            "names": list(names),
+            "matrix": _enc(np.asarray(matrix, np.float32))})
+        self._maybe_snapshot()
+
+    def merge_from(self, other: SketchIndex) -> None:
+        """Journaled partition-peer merge: the peer's occupied blocks ride
+        the journal so replay re-applies the §14 merge verbatim."""
+        self.index.merge_from(other)
+        D = len(other)
+        self.journal.append("merge_from", {
+            "params": _snapshot_params(other), "names": list(other._names),
+            "idx": _enc(other._idx[:D]), "val": _enc(other._val[:D]),
+            "tau": _enc(other._tau[:D]), "dropped": _enc(other._dropped[:D])})
+        self._maybe_snapshot()
+
+    # -- reads (delegated) ---------------------------------------------
+    def query(self, vector, top_k=None):
+        return self.index.query(vector, top_k)
+
+    def all_pairs(self, **kw):
+        return self.index.all_pairs(**kw)
+
+    def __len__(self):
+        return len(self.index)
+
+    # -- snapshots ------------------------------------------------------
+    def snapshot(self) -> str:
+        """Cut a snapshot at the current journal position, then checkpoint
+        the journal (archive + restart) so recovery only replays ops past
+        this snapshot."""
+        path = save_snapshot(self.index, self._snap_dir(),
+                             journal_seq=self.journal.seq)
+        self.journal.rotate()
+        self._ops_since_snapshot = 0
+        return path
+
+    def _snap_dir(self) -> str:
+        return os.path.join(self.directory, "snapshots")
+
+    def _maybe_snapshot(self) -> None:
+        self._ops_since_snapshot += 1
+        if self.snapshot_every and \
+                self._ops_since_snapshot >= self.snapshot_every:
+            self.snapshot()
+
+    # -- recovery -------------------------------------------------------
+    @staticmethod
+    def _apply(index: SketchIndex, op: str, body: dict) -> None:
+        if op == "checkpoint":
+            return
+        if op == "add":
+            if "vector" in body:
+                index.add(body["name"], _dec(body["vector"]))
+            else:
+                index.add(body["name"], indices=_dec(body["indices"]),
+                          values=_dec(body["values"]))
+        elif op == "add_many":
+            index.add_many(body["names"], _dec(body["matrix"]))
+        elif op == "merge_from":
+            peer = _rebuild_index(body["params"])
+            D = len(body["names"])
+            while peer.capacity < max(D, 1):
+                peer._grow()
+            peer._idx[:D] = _dec(body["idx"])
+            peer._val[:D] = _dec(body["val"])
+            peer._tau[:D] = _dec(body["tau"])
+            peer._dropped[:D] = _dec(body["dropped"])
+            peer._names = list(body["names"])
+            peer._name_set = set(peer._names)
+            index.merge_from(peer)
+        else:
+            raise ResilienceError(f"journal contains unknown op {op!r}")
+
+    @classmethod
+    def recover(cls, directory: str, *,
+                snapshot_every: Optional[int] = None, **index_kwargs):
+        """Rebuild the pre-crash index: newest intact snapshot (corrupt
+        ones are quarantined) + replay of the journal tail.  Bit-exact
+        against the crashed instance's acknowledged state."""
+        index, seq = load_latest_snapshot(
+            os.path.join(directory, "snapshots"))
+        if index is None:
+            index = SketchIndex(**index_kwargs)
+        records, dropped = IngestJournal.read_all(
+            os.path.join(directory, "journal.wal"), after_seq=seq)
+        last_seq = records[-1][0] if records else seq
+        records = [r for r in records if r[1] != "checkpoint"]
+        for rec_seq, op, body in records:
+            cls._apply(index, op, body)
+        out = cls(directory, snapshot_every=snapshot_every, index=index,
+                  _journal_seq=last_seq)
+        out.replayed_ops = len(records)
+        out.dropped_tail = dropped
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Guarded fan-out: health tracking + retry/backoff/deadline
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Retry with exponential backoff and a per-call deadline.
+
+    ``attempts`` total tries; backoff sleeps ``base_delay * 2^k`` capped at
+    ``max_delay``; once ``deadline`` seconds have elapsed for this call no
+    further retries are attempted.  A ``TimeoutError`` from the shard call
+    is terminal immediately — a hanging shard should be marked unhealthy,
+    not retried into (DESIGN.md §16).
+    """
+    attempts: int = 3
+    base_delay: float = 0.05
+    max_delay: float = 2.0
+    deadline: Optional[float] = 5.0
+
+
+@dataclass
+class ShardHealth:
+    """Shard liveness = explicit down-marks + missed heartbeats.
+
+    Rides :class:`repro.train.fault_tolerance.HeartbeatMonitor`: shards
+    that stop beating for ``timeout`` seconds are treated as down even if
+    no call has failed yet; a successful call or a fresh heartbeat revives
+    a down-marked shard.
+    """
+    num_shards: int
+    timeout: float = 60.0
+    clock: Callable[[], float] = time.monotonic
+    monitor: HeartbeatMonitor = None
+    down_reasons: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        self.monitor = HeartbeatMonitor(timeout=self.timeout)
+        now = self.clock()
+        for p in range(self.num_shards):
+            self.monitor.beat(p, now=now)
+
+    def beat(self, shard: int) -> None:
+        """A heartbeat (or successful call) proves liveness and revives."""
+        self.down_reasons.pop(shard, None)
+        self.monitor.beat(shard, now=self.clock())
+
+    def mark_down(self, shard: int, reason: str = "marked down") -> None:
+        self.down_reasons[shard] = reason
+
+    def down_shards(self) -> dict:
+        """shard -> reason for every shard currently considered down."""
+        out = dict(self.down_reasons)
+        for shard in self.monitor.dead_workers(self.clock()):
+            out.setdefault(shard, f"no heartbeat for > {self.timeout}s")
+        return out
+
+    def is_up(self, shard: int) -> bool:
+        return shard not in self.down_shards()
+
+
+@dataclass(frozen=True)
+class DegradedResult:
+    """A degraded-mode read: the unbiased surviving-corpus estimate plus a
+    quantified account of what is missing (DESIGN.md §16).
+
+    ``coverage`` is the fraction of relevant squared-norm mass served by
+    the surviving shards (1.0 when fully healthy); ``bound`` is the
+    widened error bound vs the FULL answer — sampling Chebyshev half-width
+    over survivors plus the deterministic Cauchy-Schwarz bound on the lost
+    mass — holding with probability ``1 - delta`` per estimate.
+    """
+    names: tuple
+    estimates: np.ndarray
+    coverage: float
+    bound: np.ndarray
+    sampling_bound: np.ndarray
+    lost_mass_bound: np.ndarray
+    down_shards: tuple
+    delta: float
+
+    @property
+    def degraded(self) -> bool:
+        return len(self.down_shards) > 0
+
+    def top_k(self, k: int) -> list:
+        """(name, estimate, bound) for the k largest estimates — only
+        meaningful for 1-D (query) results."""
+        est = np.asarray(self.estimates)
+        order = np.argsort(-est)[:k]
+        return [(self.names[i], float(est[i]), float(self.bound[i]))
+                for i in order]
+
+
+class _GuardedFanout:
+    """Shared shard-call guard: injectable wrapper -> retry/backoff ->
+    deadline -> health bookkeeping."""
+
+    def __init__(self, num_shards: int, *, strict: bool, delta: float,
+                 retry: Optional[RetryPolicy], call_wrapper, sleep,
+                 heartbeat_timeout: float, clock=time.monotonic):
+        self.strict = strict
+        self.delta = delta
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.health = ShardHealth(num_shards, timeout=heartbeat_timeout,
+                                  clock=clock)
+        self._call_wrapper = call_wrapper
+        self._sleep = sleep
+        self._clock = clock
+
+    def heartbeat(self, shard: int) -> None:
+        """Feed one shard heartbeat (cluster-manager integration point)."""
+        self.health.beat(shard)
+
+    def kill_shard(self, shard: int, reason: str = "killed") -> None:
+        """Administratively mark a shard down (tests, drains, chaos)."""
+        self.health.mark_down(shard, reason)
+
+    def revive_shard(self, shard: int) -> None:
+        self.health.beat(shard)
+
+    def down_shards(self) -> dict:
+        return self.health.down_shards()
+
+    def _shard_call(self, shard: int, fn: Callable):
+        """One guarded call; raises :class:`ShardDownError` (after marking
+        the shard down) when retries/deadline are exhausted."""
+        policy = self.retry
+        t0 = self._clock()
+        delay = policy.base_delay
+        last: Optional[BaseException] = None
+        for attempt in range(max(policy.attempts, 1)):
+            try:
+                if self._call_wrapper is not None:
+                    out = self._call_wrapper(shard, fn)
+                else:
+                    out = fn()
+                self.health.beat(shard)   # success proves liveness
+                return out
+            except Exception as e:  # noqa: BLE001 — fault boundary
+                last = e
+                timed_out = isinstance(e, TimeoutError) or (
+                    policy.deadline is not None
+                    and self._clock() - t0 >= policy.deadline)
+                if timed_out or attempt >= policy.attempts - 1:
+                    break
+                self._sleep(delay)
+                delay = min(delay * 2.0, policy.max_delay)
+        self.health.mark_down(shard, f"{type(last).__name__}: {last}")
+        raise ShardDownError(f"shard {shard} failed after "
+                             f"{attempt + 1} attempt(s): {last}") from last
+
+    def _fan_out(self, shards: Sequence[int], fn_of: Callable):
+        """Call ``fn_of(shard)`` on every currently-up shard; returns
+        ``(results: dict shard -> value, down: dict shard -> reason)``."""
+        results = {}
+        for p in shards:
+            if not self.health.is_up(p):
+                continue
+            try:
+                results[p] = self._shard_call(p, fn_of(p))
+            except ShardDownError:
+                continue
+        return results, self.health.down_shards()
+
+    def _check_strict(self, strict: Optional[bool], down: dict,
+                      n_served: int) -> None:
+        strict = self.strict if strict is None else strict
+        if down and strict:
+            raise DegradedServiceError(
+                f"shards down: { {p: r for p, r in sorted(down.items())} } "
+                "— refusing a degraded answer in strict mode")
+        if n_served == 0:
+            raise ShardDownError(
+                f"no surviving shards (down: {sorted(down)}); nothing to "
+                "answer from")
+
+
+# ---------------------------------------------------------------------------
+# Degraded-mode serving indexes
+# ---------------------------------------------------------------------------
+
+
+class ResilientSketchIndex(_GuardedFanout):
+    """Coordinate-partitioned fault-tolerant serving index.
+
+    The coordinate universe ``[0, n)`` splits into ``num_shards``
+    contiguous slices; each shard is a :class:`SketchIndex` over its slice
+    with an independently folded seed, so per-shard estimates are
+    independent random variables and degraded-mode variances add
+    (DESIGN.md §16).  Every indexed vector lives on *all* shards (its
+    slice of coordinates on each), and a read sums per-shard sub-inner-
+    product estimates:
+
+    - fully healthy: the sum telescopes to the usual unbiased estimate;
+    - shards down: the sum over survivors is an unbiased estimate of the
+      surviving sub-inner-product, returned as a :class:`DegradedResult`
+      with coverage and the widened bound of
+      :func:`repro.core.variance.surviving_corpus_bound` — or raised as
+      :class:`DegradedServiceError` when ``strict``.
+
+    Ingestion requires all shards (a partial write would silently bias
+    later reads), so ``add``/``add_many`` are *not* degraded-tolerant:
+    they raise if any shard rejects.  Reads are where degradation pays.
+    """
+
+    def __init__(self, n: int, num_shards: int = 4, *, m: int = 256,
+                 n_buckets: int = 512, slots: int = 4, seed: int = 11,
+                 initial_capacity: int = 64, nonfinite: str = "raise",
+                 strict: bool = False, delta: float = 0.05,
+                 retry: Optional[RetryPolicy] = None,
+                 call_wrapper: Optional[Callable] = None,
+                 sleep: Callable[[float], None] = time.sleep,
+                 heartbeat_timeout: float = 60.0, clock=time.monotonic):
+        self.n = n
+        self.bounds = partition_bounds(n, num_shards)
+        self.num_shards = len(self.bounds)
+        super().__init__(self.num_shards, strict=strict, delta=delta,
+                         retry=retry, call_wrapper=call_wrapper, sleep=sleep,
+                         heartbeat_timeout=heartbeat_timeout, clock=clock)
+        self.seed = seed
+        self.m = m
+        self.nonfinite = nonfinite
+        self._shards = [
+            SketchIndex(m, n_buckets=n_buckets, slots=slots,
+                        seed=fold_seed(seed, 0x5EED + p),
+                        initial_capacity=initial_capacity,
+                        nonfinite=nonfinite)
+            for p in range(self.num_shards)]
+        self._names: list = []
+        self._norm2: list = []   # per row: (num_shards,) slice squared norms
+
+    def __len__(self):
+        return len(self._names)
+
+    @property
+    def names(self) -> tuple:
+        return tuple(self._names)
+
+    def _slices(self, arr: np.ndarray, axis: int = -1) -> list:
+        return [arr[..., lo:hi] if axis == -1 else arr[lo:hi]
+                for lo, hi in self.bounds]
+
+    # -- ingestion (requires all shards) --------------------------------
+    def add(self, name, vector) -> None:
+        check_unique_name(name, self._names)
+        vector = check_vector(vector, f"vector {name!r}", dim=self.n,
+                              nonfinite=self.nonfinite)
+        slices = self._slices(vector)
+        for p, sl in enumerate(slices):
+            self._shards[p].add(name, sl)
+        self._names.append(name)
+        self._norm2.append(np.array([float(np.sum(sl * sl.astype(np.float64)))
+                                     for sl in slices]))
+
+    def add_many(self, names: Sequence, matrix) -> None:
+        matrix = np.asarray(matrix, np.float32)
+        if matrix.ndim != 2 or matrix.shape[0] != len(names):
+            raise ValueError("matrix must be (len(names), n)")
+        if matrix.shape[1] != self.n:
+            raise ValueError(f"matrix has {matrix.shape[1]} coordinates but "
+                             f"this index was built over {self.n}")
+        for name in names:
+            check_unique_name(name, self._names)
+        matrix = check_finite(matrix, "ingest matrix",
+                              nonfinite=self.nonfinite)
+        for p, sl in enumerate(self._slices(matrix)):
+            self._shards[p].add_many(names, sl)
+        sq = matrix.astype(np.float64) ** 2
+        per_shard = np.stack([sl.sum(axis=1) for sl in self._slices(sq)],
+                             axis=1)
+        self._names.extend(names)
+        self._norm2.extend(list(per_shard))
+
+    # -- degraded-mode reads --------------------------------------------
+    def query(self, vector, *, delta: Optional[float] = None,
+              strict: Optional[bool] = None) -> DegradedResult:
+        """Inner-product estimates of ``vector`` against every indexed
+        vector, answered from the surviving shards.
+
+        Returns a :class:`DegradedResult` whose ``estimates[d]`` is
+        unbiased for the surviving-coordinate sub-inner-product
+        ``<q_S, v_d,S>``, ``coverage`` is the fraction of query energy
+        ``||q||^2`` on surviving shards, and ``bound[d]`` bounds
+        ``|estimates[d] - <q, v_d>|`` (the FULL answer) with probability
+        ``1 - delta``.
+        """
+        if not self._names:
+            raise ValueError("query on an empty index: add vectors before "
+                             "querying")
+        delta = self.delta if delta is None else delta
+        vector = check_vector(vector, "query vector", dim=self.n,
+                              nonfinite=self.nonfinite)
+        slices = self._slices(vector)
+        results, down = self._fan_out(
+            range(self.num_shards),
+            lambda p: (lambda: self._shards[p].query(slices[p])))
+        self._check_strict(strict, down, len(results))
+        D = len(self._names)
+        est = np.zeros(D, np.float64)
+        for p, per in results.items():
+            est += np.array([e for _, e in per])
+        q2 = np.array([float(np.sum(sl.astype(np.float64) ** 2))
+                       for sl in slices])
+        V2 = np.asarray(self._norm2)                    # (D, P)
+        surv = np.array(sorted(results), np.int64)
+        lost = np.array(sorted(set(range(self.num_shards)) - set(results)),
+                        np.int64)
+        sampling, lost_mass, widened = (np.asarray(x) for x in
+                                        surviving_corpus_bound(
+            q2[surv], V2[:, surv], q2[lost], V2[:, lost], self.m,
+            delta, method="priority"))
+        cov = float(coverage_fraction(q2[surv], q2[lost]))
+        return DegradedResult(
+            names=tuple(self._names), estimates=est.astype(np.float32),
+            coverage=cov, bound=widened, sampling_bound=sampling,
+            lost_mass_bound=lost_mass,
+            down_shards=tuple(sorted(down)), delta=delta)
+
+    def all_pairs(self, *, delta: Optional[float] = None,
+                  strict: Optional[bool] = None) -> DegradedResult:
+        """(D, D) estimate matrix summed over surviving shards, with a
+        (D, D) widened bound and corpus-mass coverage."""
+        if not self._names:
+            raise ValueError("all_pairs on an empty index")
+        delta = self.delta if delta is None else delta
+        results, down = self._fan_out(
+            range(self.num_shards),
+            lambda p: (lambda: self._shards[p].all_pairs()))
+        self._check_strict(strict, down, len(results))
+        D = len(self._names)
+        est = np.zeros((D, D), np.float64)
+        for blk in results.values():
+            est += blk
+        V2 = np.asarray(self._norm2)                    # (D, P)
+        surv = np.array(sorted(results), np.int64)
+        lost = np.array(sorted(set(range(self.num_shards)) - set(results)),
+                        np.int64)
+        lead = 2.0 / max(self.m - 1, 1)
+        Vs = V2[:, surv]
+        sampling = np.sqrt(lead / delta * (Vs @ Vs.T))
+        lost_root = np.sqrt(V2[:, lost].sum(axis=1))
+        lost_mass = np.outer(lost_root, lost_root)
+        cov = float(coverage_fraction(Vs.sum(axis=0), V2[:, lost].sum(axis=0)))
+        return DegradedResult(
+            names=tuple(self._names), estimates=est.astype(np.float32),
+            coverage=cov, bound=sampling + lost_mass,
+            sampling_bound=sampling, lost_mass_bound=lost_mass,
+            down_shards=tuple(sorted(down)), delta=delta)
+
+
+class ResilientMatrixStore(_GuardedFanout):
+    """Row-partitioned fault-tolerant :class:`MatrixSketchStore`.
+
+    ``A^T B`` telescopes over row partitions, ``A^T B = sum_p A_p^T B_p``,
+    so each shard holds a :class:`MatrixSketchStore` over its row slice
+    (independently folded seed) and degraded products sum the survivors —
+    unbiased for the surviving row mass, with Frobenius-norm sampling +
+    lost-mass bounds exactly mirroring the vector path (DESIGN.md §16).
+    """
+
+    def __init__(self, n_rows: int, dim: int, num_shards: int = 4, *,
+                 m: int = 128, seed: int = 11, nonfinite: str = "raise",
+                 strict: bool = False, delta: float = 0.05,
+                 retry: Optional[RetryPolicy] = None,
+                 call_wrapper: Optional[Callable] = None,
+                 sleep: Callable[[float], None] = time.sleep,
+                 heartbeat_timeout: float = 60.0, clock=time.monotonic):
+        self.n_rows = n_rows
+        self.dim = dim
+        self.bounds = partition_bounds(n_rows, num_shards)
+        self.num_shards = len(self.bounds)
+        super().__init__(self.num_shards, strict=strict, delta=delta,
+                         retry=retry, call_wrapper=call_wrapper, sleep=sleep,
+                         heartbeat_timeout=heartbeat_timeout, clock=clock)
+        self.m = m
+        self.nonfinite = nonfinite
+        self._shards = [
+            MatrixSketchStore(m, dim=dim, seed=fold_seed(seed, 0x5EED + p),
+                              nonfinite=nonfinite)
+            for p in range(self.num_shards)]
+        self._names: list = []
+        self._fro2: dict = {}    # name -> (num_shards,) slice Frobenius^2
+
+    def __len__(self):
+        return len(self._names)
+
+    def add(self, name, matrix) -> None:
+        check_unique_name(name, self._names, what="store")
+        matrix = np.asarray(matrix, np.float32)
+        if matrix.shape != (self.n_rows, self.dim):
+            raise ValueError(f"expected a ({self.n_rows}, {self.dim}) "
+                             f"matrix, got shape {matrix.shape}")
+        matrix = check_finite(matrix, f"matrix {name!r}",
+                              nonfinite=self.nonfinite)
+        for p, (lo, hi) in enumerate(self.bounds):
+            self._shards[p].add(name, matrix[lo:hi])
+        self._names.append(name)
+        self._fro2[name] = np.array(
+            [float(np.sum(matrix[lo:hi].astype(np.float64) ** 2))
+             for lo, hi in self.bounds])
+
+    def _pair_bounds(self, fa2, fb2, surv, lost, delta):
+        sampling, lost_mass, widened = (np.asarray(x) for x in
+                                        surviving_corpus_bound(
+            fa2[..., surv], fb2[..., surv], fa2[..., lost], fb2[..., lost],
+            self.m, delta, method="priority"))
+        cov = float(coverage_fraction(
+            (fa2[..., surv] + fb2[..., surv]).reshape(-1),
+            (fa2[..., lost] + fb2[..., lost]).reshape(-1)))
+        return sampling, lost_mass, widened, cov
+
+    def product(self, name_a, name_b, *, delta: Optional[float] = None,
+                strict: Optional[bool] = None) -> DegradedResult:
+        """(d, d) estimate of ``A^T B`` summed over surviving row shards,
+        with a scalar widened Frobenius-error bound."""
+        return self._products([(name_a, name_b)], delta=delta,
+                              strict=strict, squeeze=True)
+
+    def products(self, pairs: Sequence, *, delta: Optional[float] = None,
+                 strict: Optional[bool] = None) -> DegradedResult:
+        """(len(pairs), d, d) batched estimates from surviving shards."""
+        return self._products(list(pairs), delta=delta, strict=strict,
+                              squeeze=False)
+
+    def _products(self, pairs, *, delta, strict, squeeze):
+        delta = self.delta if delta is None else delta
+        for a, b in pairs:
+            for name in (a, b):
+                if name not in self._fro2:
+                    raise KeyError(f"unknown matrix {name!r}")
+        results, down = self._fan_out(
+            range(self.num_shards),
+            lambda p: (lambda: np.asarray(self._shards[p].products(pairs))))
+        self._check_strict(strict, down, len(results))
+        est = np.zeros((len(pairs), self.dim, self.dim), np.float64)
+        for blk in results.values():
+            est += blk
+        surv = np.array(sorted(results), np.int64)
+        lost = np.array(sorted(set(range(self.num_shards)) - set(results)),
+                        np.int64)
+        fa2 = np.stack([self._fro2[a] for a, _ in pairs])   # (N, P)
+        fb2 = np.stack([self._fro2[b] for _, b in pairs])
+        sampling, lost_mass, widened, cov = self._pair_bounds(
+            fa2, fb2, surv, lost, delta)
+        if squeeze:
+            est, sampling = est[0], sampling[..., 0]
+            lost_mass, widened = lost_mass[..., 0], widened[..., 0]
+        return DegradedResult(
+            names=tuple(pairs), estimates=est.astype(np.float32),
+            coverage=cov, bound=np.asarray(widened),
+            sampling_bound=np.asarray(sampling),
+            lost_mass_bound=np.asarray(lost_mass),
+            down_shards=tuple(sorted(down)), delta=delta)
+
+    def query(self, matrix, *, delta: Optional[float] = None,
+              strict: Optional[bool] = None) -> DegradedResult:
+        """Estimate ``Q^T A_c`` against every stored matrix from the
+        surviving shards; ``estimates`` is (C, d, d) in insertion order."""
+        if not self._names:
+            raise ValueError("query on an empty store: add matrices before "
+                             "querying")
+        delta = self.delta if delta is None else delta
+        matrix = np.asarray(matrix, np.float32)
+        if matrix.shape != (self.n_rows, self.dim):
+            raise ValueError(f"expected a ({self.n_rows}, {self.dim}) "
+                             f"query matrix, got shape {matrix.shape}")
+        matrix = check_finite(matrix, "query matrix",
+                              nonfinite=self.nonfinite)
+        results, down = self._fan_out(
+            range(self.num_shards),
+            lambda p: (lambda lo=self.bounds[p][0], hi=self.bounds[p][1]:
+                       [est for _, est in
+                        self._shards[p].query(matrix[lo:hi])]))
+        self._check_strict(strict, down, len(results))
+        C = len(self._names)
+        est = np.zeros((C, self.dim, self.dim), np.float64)
+        for per in results.values():
+            est += np.stack([np.asarray(e) for e in per])
+        surv = np.array(sorted(results), np.int64)
+        lost = np.array(sorted(set(range(self.num_shards)) - set(results)),
+                        np.int64)
+        q2 = np.array([float(np.sum(matrix[lo:hi].astype(np.float64) ** 2))
+                       for lo, hi in self.bounds])
+        F2 = np.stack([self._fro2[name] for name in self._names])  # (C, P)
+        sampling, lost_mass, widened = (np.asarray(x) for x in
+                                        surviving_corpus_bound(
+            q2[surv], F2[:, surv], q2[lost], F2[:, lost], self.m,
+            delta, method="priority"))
+        cov = float(coverage_fraction(q2[surv], q2[lost]))
+        return DegradedResult(
+            names=tuple(self._names), estimates=est.astype(np.float32),
+            coverage=cov, bound=widened, sampling_bound=sampling,
+            lost_mass_bound=lost_mass,
+            down_shards=tuple(sorted(down)), delta=delta)

@@ -26,6 +26,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import INVALID_IDX, priority_sketch
+from repro.serve.validation import (check_finite, check_nonfinite_policy,
+                                    check_sparse, check_unique_name,
+                                    check_unique_names, check_vector)
 from repro.kernels import (BucketizedSketch, bucketize, bucketize_corpus,
                            build_priority_corpus,
                            estimate_all_pairs_bucketized,
@@ -42,15 +45,22 @@ class SketchIndex:
     bucketized serving layout (``n_buckets >= 2 m`` keeps overflow drops
     near zero, DESIGN.md §4); ``seed``: the shared coordination seed —
     indexes can only be queried against / merged with same-seed sketches;
-    ``initial_capacity``: starting row allocation (grows by doubling).
+    ``initial_capacity``: starting row allocation (grows by doubling);
+    ``nonfinite``: ``"raise"`` (default) rejects NaN/Inf input with a clear
+    error, ``"sanitize"`` zeroes it (weight-0 entries are never sampled) —
+    the input-hardening contract of DESIGN.md §16.
     """
 
     def __init__(self, m: int = 256, *, n_buckets: int = 512, slots: int = 4,
-                 seed: int = 11, initial_capacity: int = 64):
+                 seed: int = 11, initial_capacity: int = 64,
+                 nonfinite: str = "raise"):
         self.m = m
         self.n_buckets = n_buckets
         self.slots = slots
         self.seed = seed
+        self.nonfinite = check_nonfinite_policy(nonfinite)
+        self._dim: Optional[int] = None  # universe size, fixed on first add
+        self._name_set: set = set()
         self._names: list = []
         self._cap = round_up_pow2(initial_capacity)
         self._idx = np.full((self._cap, n_buckets, slots), INVALID_IDX,
@@ -102,16 +112,17 @@ class SketchIndex:
         """
         if (vector is None) == (indices is None and values is None):
             raise ValueError("pass either a dense vector or (indices, values)")
+        check_unique_name(name, self._name_set)
         if vector is not None:
-            sk = priority_sketch(jnp.asarray(vector, jnp.float32), self.m,
-                                 self.seed)
+            vector = check_vector(vector, f"vector {name!r}", dim=self._dim,
+                                  nonfinite=self.nonfinite)
+            self._dim = vector.shape[0]
+            sk = priority_sketch(jnp.asarray(vector), self.m, self.seed)
         else:
             if indices is None or values is None:
                 raise ValueError("sparse input needs both indices and values")
-            indices = np.asarray(indices, np.int32)
-            values = np.asarray(values, np.float32)
-            if indices.shape != values.shape or indices.ndim != 1:
-                raise ValueError("indices/values must be equal-length 1-D")
+            indices, values = check_sparse(indices, values, dim=self._dim,
+                                           nonfinite=self.nonfinite)
             nnz = indices.shape[0]
             pad = round_up_pow2(max(nnz, 1)) - nnz
             # padding: value 0 -> weight 0 -> rank +inf, never selected
@@ -127,6 +138,7 @@ class SketchIndex:
         self._tau[d] = float(b.tau)
         self._dropped[d] = int(b.dropped)
         self._names.append(name)
+        self._name_set.add(name)
         self._device_corpus = None  # re-upload (not re-bucketize) lazily
 
     def add_many(self, names: Sequence, matrix: np.ndarray) -> None:
@@ -141,9 +153,16 @@ class SketchIndex:
         matrix = np.asarray(matrix, np.float32)
         if matrix.ndim != 2 or matrix.shape[0] != len(names):
             raise ValueError("matrix must be (len(names), n)")
+        check_unique_names(names, self._name_set)
+        if self._dim is not None and matrix.shape[1] != self._dim:
+            raise ValueError(f"matrix has {matrix.shape[1]} coordinates but "
+                             f"this index was built over {self._dim}")
+        matrix = check_finite(matrix, "ingest matrix",
+                              nonfinite=self.nonfinite)
         D = matrix.shape[0]
         if D == 0:
             return
+        self._dim = matrix.shape[1]
         sk = build_priority_corpus(jnp.asarray(matrix), self.m, self.seed)
         bc = bucketize_corpus(sk, n_buckets=self.n_buckets, slots=self.slots)
         while len(self._names) + D > self._cap:
@@ -154,6 +173,7 @@ class SketchIndex:
         self._tau[d0:d0 + D] = np.asarray(bc.tau)
         self._dropped[d0:d0 + D] = np.asarray(bc.dropped)
         self._names.extend(names)
+        self._name_set.update(names)
         self._device_corpus = None
 
     def _corpus(self) -> BucketizedSketch:
@@ -170,8 +190,12 @@ class SketchIndex:
     def query(self, vector: np.ndarray, top_k: Optional[int] = None):
         """Inner-product estimates of ``vector`` against every indexed
         vector; one bucketized kernel launch."""
-        sq = priority_sketch(jnp.asarray(vector, jnp.float32), self.m,
-                             self.seed)
+        if not self._names:
+            raise ValueError("query on an empty index: add vectors before "
+                             "querying")
+        vector = check_vector(vector, "query vector", dim=self._dim,
+                              nonfinite=self.nonfinite)
+        sq = priority_sketch(jnp.asarray(vector), self.m, self.seed)
         q = bucketize(sq, n_buckets=self.n_buckets, slots=self.slots)
         est = np.asarray(query_corpus(q, self._corpus()))[: len(self._names)]
         if top_k is None:
@@ -247,12 +271,14 @@ class MatrixSketchStore:
     """
 
     def __init__(self, m: int = 128, *, dim: int, seed: int = 11,
-                 initial_capacity: int = 8):
+                 initial_capacity: int = 8, nonfinite: str = "raise"):
         if dim < 1:
             raise ValueError("dim must be >= 1")
         self.m = m
         self.dim = dim
         self.seed = seed
+        self.nonfinite = check_nonfinite_policy(nonfinite)
+        self._name_set: set = set()
         self._names: list = []
         self._cap = round_up_pow2(initial_capacity)
         self._idx = np.full((self._cap, m), INVALID_IDX, np.int32)
@@ -286,11 +312,13 @@ class MatrixSketchStore:
         if matrix.ndim != 2 or matrix.shape[1] != self.dim:
             raise ValueError(f"expected an (n, {self.dim}) matrix, got "
                              f"shape {matrix.shape}")
+        matrix = check_finite(matrix, "matrix", nonfinite=self.nonfinite)
         return priority_matrix_sketch(jnp.asarray(matrix), self.m, self.seed)
 
     def add(self, name, matrix: np.ndarray) -> None:
         """Row-sample one (n, d) matrix and append it in place: amortized
         O(m d) storage writes, no re-layout of the existing corpus."""
+        check_unique_name(name, self._name_set, what="store")
         sk = self._sketch(matrix)
         if len(self._names) == self._cap:
             self._grow()
@@ -299,6 +327,7 @@ class MatrixSketchStore:
         self._rows[c] = np.asarray(sk.rows)
         self._tau[c] = float(sk.tau)
         self._names.append(name)
+        self._name_set.add(name)
         self._device = None   # re-upload (not re-sketch) lazily
 
     def _corpus(self) -> MatrixSketch:
@@ -346,6 +375,9 @@ class MatrixSketchStore:
         """Estimate ``Q^T A_c`` against every stored matrix in one launch;
         returns ``[(name, (d, d) ndarray), ...]`` in insertion order."""
         from repro.kernels.sketch_build import resolve_use_pallas
+        if not self._names:
+            raise ValueError("query on an empty store: add matrices before "
+                             "querying")
         sq = self._sketch(matrix)
         corpus = self._corpus()
         if resolve_use_pallas(None):
@@ -398,6 +430,9 @@ class ShardedSketchIndex:
     def add(self, name, vector: Optional[np.ndarray] = None, *,
             indices: Optional[np.ndarray] = None,
             values: Optional[np.ndarray] = None) -> None:
+        # names are global: a per-shard check alone would miss a duplicate
+        # routed to a different shard
+        check_unique_name(name, self._names)
         s = self._route()
         # delegate first: a rejected add must not leave a dangling home
         self._shards[s].add(name, vector, indices=indices, values=values)
@@ -410,6 +445,15 @@ class ShardedSketchIndex:
         matrix = np.asarray(matrix, np.float32)
         if matrix.ndim != 2 or matrix.shape[0] != len(names):
             raise ValueError("matrix must be (len(names), n)")
+        check_unique_names(names, self._names)
+        # validate before touching the global name/home lists: a shard-level
+        # rejection after partial routing would desynchronize reads
+        dim = next((s._dim for s in self._shards if s._dim is not None), None)
+        if dim is not None and matrix.shape[1] != dim:
+            raise ValueError(f"matrix has {matrix.shape[1]} coordinates but "
+                             f"this index was built over {dim}")
+        matrix = check_finite(matrix, "ingest matrix",
+                              nonfinite=self._shards[0].nonfinite)
         rows_of = [[] for _ in range(self.num_shards)]
         for k, name in enumerate(names):
             s = self._route()
@@ -423,6 +467,9 @@ class ShardedSketchIndex:
 
     def query(self, vector: np.ndarray, top_k: Optional[int] = None):
         """Fan out one bucketized launch per shard, reassemble globally."""
+        if not self._names:
+            raise ValueError("query on an empty index: add vectors before "
+                             "querying")
         per = [s.query(vector) if len(s) else [] for s in self._shards]
         est = np.empty(len(self._names), np.float32)
         for g, (s, r) in enumerate(self._homes):

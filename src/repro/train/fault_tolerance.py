@@ -57,14 +57,22 @@ class HeartbeatMonitor:
 
 def run_with_recovery(run_fn: Callable[[int], tuple], *, checkpointer,
                       max_restarts: int = 3,
-                      on_restart: Optional[Callable] = None):
+                      on_restart: Optional[Callable] = None,
+                      backoff_base: float = 1.0, backoff_max: float = 60.0,
+                      sleep: Callable[[float], None] = time.sleep):
     """Crash-recovery driver.
 
     ``run_fn(start_step)`` runs (a segment of) training from ``start_step``
     and returns its result; on an exception the driver resumes from the
-    latest checkpoint, up to ``max_restarts`` times.  This is the
-    single-controller restart loop a real deployment wraps around the
-    training binary.
+    latest checkpoint, up to ``max_restarts`` *consecutive unproductive*
+    times.  The budget counts crashes since the last checkpoint advance: a
+    crash loop that still makes checkpoint progress each time (slow node
+    flapping, preemptions) can run indefinitely, while a crash at a stuck
+    step exhausts the budget and re-raises.  Consecutive restarts back off
+    exponentially (``backoff_base * 2^(k-1)`` seconds, capped at
+    ``backoff_max``) so a hard-crashing binary does not spin; ``sleep`` is
+    injectable for tests.  This is the single-controller restart loop a
+    real deployment wraps around the training binary.
     """
     restarts = 0
     while True:
@@ -72,8 +80,11 @@ def run_with_recovery(run_fn: Callable[[int], tuple], *, checkpointer,
         try:
             return run_fn(start)
         except Exception as e:  # noqa: BLE001 - deliberately broad
+            if (checkpointer.latest_step() or 0) > start:
+                restarts = 0   # progress was made: reset the budget
             restarts += 1
             if restarts > max_restarts:
                 raise
             if on_restart is not None:
                 on_restart(restarts, e)
+            sleep(min(backoff_base * 2.0 ** (restarts - 1), backoff_max))

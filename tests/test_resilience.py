@@ -1,0 +1,482 @@
+"""Chaos suite for the fault-tolerant serving layer (DESIGN.md §16):
+kill-shard, corrupt-snapshot, flaky-shard-call, and NaN-ingest faults, plus
+bit-exact crash recovery via snapshot + journal replay."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.serve import (DegradedServiceError, DurableSketchIndex,
+                         IngestJournal, MatrixSketchStore,
+                         ResilientMatrixStore, ResilientSketchIndex,
+                         RetryPolicy, ShardDownError, ShardHealth,
+                         SketchIndex, SnapshotCorruptionError,
+                         list_snapshots, load_latest_snapshot, load_snapshot,
+                         save_snapshot)
+
+NO_RETRY = RetryPolicy(attempts=1, deadline=None)
+
+
+def _corpus(rng, D, n, nnz=None):
+    out = np.zeros((D, n), np.float32)
+    nnz = nnz or n // 4
+    for d in range(D):
+        ii = rng.choice(n, nnz, replace=False)
+        out[d, ii] = rng.uniform(-1, 1, nnz)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# durability: snapshots
+# ---------------------------------------------------------------------------
+
+
+def test_snapshot_round_trip_sketch_index(tmp_path):
+    rng = np.random.default_rng(0)
+    idx = SketchIndex(m=64, n_buckets=128, slots=4, seed=9)
+    V = _corpus(rng, 5, 1024)
+    idx.add_many([f"v{d}" for d in range(5)], V)
+    path = save_snapshot(idx, str(tmp_path), journal_seq=3)
+    loaded, seq = load_snapshot(path)
+    assert seq == 3
+    assert loaded._names == idx._names and loaded._dim == idx._dim
+    assert (loaded.m, loaded.n_buckets, loaded.slots, loaded.seed) == \
+        (idx.m, idx.n_buckets, idx.slots, idx.seed)
+    q = rng.normal(size=1024).astype(np.float32)
+    assert idx.query(q) == loaded.query(q)   # bit-exact blocks
+
+
+def test_snapshot_round_trip_matrix_store(tmp_path):
+    rng = np.random.default_rng(1)
+    st = MatrixSketchStore(32, dim=8, seed=5)
+    st.add("A", rng.normal(size=(100, 8)).astype(np.float32))
+    st.add("B", rng.normal(size=(100, 8)).astype(np.float32))
+    loaded, _ = load_snapshot(save_snapshot(st, str(tmp_path)))
+    np.testing.assert_array_equal(loaded.product("A", "B"),
+                                  st.product("A", "B"))
+
+
+def test_corrupt_snapshot_detected_and_quarantined(tmp_path):
+    """Bit-flip a payload: the CRC check must refuse the snapshot, and
+    load_latest_snapshot must quarantine it and fall back to the older
+    intact snapshot instead of serving corrupt blocks."""
+    rng = np.random.default_rng(2)
+    idx = SketchIndex(m=32, n_buckets=64, seed=4)
+    idx.add("a", rng.normal(size=256).astype(np.float32))
+    old = save_snapshot(idx, str(tmp_path), journal_seq=1)
+    idx.add("b", rng.normal(size=256).astype(np.float32))
+    new = save_snapshot(idx, str(tmp_path), journal_seq=2)
+
+    val = os.path.join(new, "val.npy")
+    blob = bytearray(open(val, "rb").read())
+    blob[-7] ^= 0xFF
+    open(val, "wb").write(bytes(blob))
+
+    with pytest.raises(SnapshotCorruptionError, match="CRC32"):
+        load_snapshot(new)
+    loaded, seq = load_latest_snapshot(str(tmp_path))
+    assert seq == 1 and loaded._names == ["a"]          # fell back
+    assert not os.path.exists(new)                      # quarantined aside
+    assert os.path.exists(new + ".quarantined")
+    assert list_snapshots(str(tmp_path)) == [old]       # quarantine hidden
+
+
+def test_snapshot_version_and_manifest_checks(tmp_path):
+    rng = np.random.default_rng(3)
+    idx = SketchIndex(m=16, n_buckets=32, seed=2)
+    idx.add("a", rng.normal(size=64).astype(np.float32))
+    path = save_snapshot(idx, str(tmp_path))
+    mpath = os.path.join(path, "manifest.json")
+    manifest = json.load(open(mpath))
+    manifest["format_version"] = 99
+    json.dump(manifest, open(mpath, "w"))
+    with pytest.raises(SnapshotCorruptionError, match="version"):
+        load_snapshot(path)
+    open(mpath, "w").write("{not json")
+    with pytest.raises(SnapshotCorruptionError, match="manifest"):
+        load_snapshot(path)
+
+
+# ---------------------------------------------------------------------------
+# durability: journal + recovery
+# ---------------------------------------------------------------------------
+
+
+def test_journal_replay_stops_at_corrupt_tail(tmp_path):
+    path = str(tmp_path / "j.wal")
+    j = IngestJournal(path)
+    j.append("add", {"name": "a"})
+    j.append("add", {"name": "b"})
+    j.close()
+    with open(path, "a") as f:                 # crash mid-append
+        f.write('{"seq": 3, "op": "add", "crc": 0, "bo')
+    records, dropped = IngestJournal.read(path)
+    assert [r[2]["name"] for r in records] == ["a", "b"]
+    assert dropped == 1
+    # a fresh journal resumes numbering after the last *good* record
+    j2 = IngestJournal(path)
+    assert j2.seq == 2
+    j2.close()
+
+
+def test_journal_crc_rejects_tampered_record(tmp_path):
+    path = str(tmp_path / "j.wal")
+    j = IngestJournal(path)
+    j.append("add", {"name": "a"})
+    j.append("add", {"name": "b"})
+    j.close()
+    lines = open(path).readlines()
+    lines[1] = lines[1].replace('"name": "b"', '"name": "evil"')
+    open(path, "w").writelines(lines)
+    records, dropped = IngestJournal.read(path)
+    assert [r[2]["name"] for r in records] == ["a"]     # stops at tamper
+    assert dropped == 1
+
+
+def test_recover_bit_exact_after_crash(tmp_path):
+    """Snapshot + journal replay must rebuild the exact pre-crash index:
+    dense adds, sparse adds, batch adds, and a §14 partition merge all ride
+    the journal."""
+    rng = np.random.default_rng(4)
+    n = 1024
+    dur = DurableSketchIndex(str(tmp_path), m=64, n_buckets=128, seed=7)
+    V = _corpus(rng, 4, n)
+    dur.add("v0", V[0])
+    dur.add_many(["v1", "v2"], V[1:3])
+    dur.snapshot()
+    nz = np.nonzero(V[3])[0]
+    dur.add("v3", indices=nz, values=V[3][nz])
+
+    # partition merge: peer sketches the other coordinate half of new rows
+    W = _corpus(rng, 4, n)
+    half = n // 2
+    left, right = W.copy(), W.copy()
+    left[:, half:] = 0.0
+    right[:, :half] = 0.0
+    dur.add_many([f"w{d}" for d in range(4)], left)     # left halves
+    peer = SketchIndex(m=64, n_buckets=128, seed=7)
+    peer.add_many([f"v{d}" for d in range(4)], np.zeros((4, n), np.float32))
+    peer.add_many([f"w{d}" for d in range(4)], right)
+    dur.merge_from(peer)
+
+    q = rng.normal(size=n).astype(np.float32)
+    before = dur.query(q)
+    dur.journal.close()                                  # "crash"
+
+    rec = DurableSketchIndex.recover(str(tmp_path))
+    assert rec.replayed_ops == 3                         # post-snapshot tail
+    assert rec.query(q) == before                        # bit-exact
+    np.testing.assert_array_equal(rec.index._idx[:len(rec)],
+                                  dur.index._idx[:len(dur)])
+    np.testing.assert_array_equal(rec.index._val[:len(rec)],
+                                  dur.index._val[:len(dur)])
+
+
+def test_recover_falls_back_past_corrupt_snapshot(tmp_path):
+    rng = np.random.default_rng(5)
+    dur = DurableSketchIndex(str(tmp_path), m=32, n_buckets=64, seed=3)
+    dur.add("a", rng.normal(size=256).astype(np.float32))
+    dur.snapshot()
+    dur.add("b", rng.normal(size=256).astype(np.float32))
+    newest = dur.snapshot()
+    q = rng.normal(size=256).astype(np.float32)
+    before = dur.query(q)
+    dur.journal.close()
+
+    idxfile = os.path.join(newest, "idx.npy")
+    blob = bytearray(open(idxfile, "rb").read())
+    blob[-3] ^= 0x55
+    open(idxfile, "wb").write(bytes(blob))
+
+    rec = DurableSketchIndex.recover(str(tmp_path))
+    # fell back to snapshot 1 and replayed the 'b' add from the journal
+    assert rec.replayed_ops == 1
+    assert rec.query(q) == before
+    assert os.path.exists(newest + ".quarantined")
+
+
+def test_recover_from_journal_only(tmp_path):
+    """No snapshot at all: recovery replays the whole journal into a fresh
+    index built from the given params."""
+    rng = np.random.default_rng(6)
+    dur = DurableSketchIndex(str(tmp_path), m=32, n_buckets=64, seed=8)
+    V = _corpus(rng, 3, 512)
+    dur.add_many(["a", "b", "c"], V)
+    q = rng.normal(size=512).astype(np.float32)
+    before = dur.query(q)
+    dur.journal.close()
+    rec = DurableSketchIndex.recover(str(tmp_path), m=32, n_buckets=64,
+                                     seed=8)
+    assert rec.replayed_ops == 1 and rec.query(q) == before
+
+
+def test_periodic_snapshot_every(tmp_path):
+    rng = np.random.default_rng(7)
+    dur = DurableSketchIndex(str(tmp_path), snapshot_every=2, m=16,
+                             n_buckets=32, seed=1)
+    for d in range(5):
+        dur.add(f"v{d}", rng.normal(size=128).astype(np.float32))
+    assert len(list_snapshots(os.path.join(str(tmp_path), "snapshots"))) == 2
+
+
+# ---------------------------------------------------------------------------
+# degraded-mode reads
+# ---------------------------------------------------------------------------
+
+
+def _resilient_index(rng, *, num_shards=4, D=6, n=2048, strict=False,
+                     **kw):
+    idx = ResilientSketchIndex(n, num_shards=num_shards, m=128,
+                               n_buckets=256, seed=11, strict=strict,
+                               retry=kw.pop("retry", NO_RETRY),
+                               sleep=kw.pop("sleep", lambda s: None), **kw)
+    V = _corpus(rng, D, n, nnz=n // 2)
+    idx.add_many([f"v{d}" for d in range(D)], V)
+    return idx, V
+
+
+def test_kill_shard_degraded_query_within_widened_bound():
+    rng = np.random.default_rng(8)
+    idx, V = _resilient_index(rng)
+    q = rng.normal(size=2048).astype(np.float32)
+    true = V.astype(np.float64) @ q
+
+    healthy = idx.query(q)
+    assert healthy.coverage == 1.0 and not healthy.degraded
+    assert np.all(np.abs(healthy.estimates - true) <= healthy.bound)
+
+    idx.kill_shard(1)
+    idx.kill_shard(3)
+    res = idx.query(q)
+    assert res.degraded and res.down_shards == (1, 3)
+    assert 0.0 < res.coverage < 1.0
+    # the widened bound quantifies error vs the FULL answer
+    assert np.all(np.abs(res.estimates - true) <= res.bound)
+    # and it is genuinely widened: lost mass contributes
+    assert np.all(res.lost_mass_bound > 0)
+    np.testing.assert_allclose(res.bound,
+                               res.sampling_bound + res.lost_mass_bound)
+
+
+def test_kill_shard_degraded_all_pairs():
+    rng = np.random.default_rng(9)
+    idx, V = _resilient_index(rng, D=5)
+    true = V.astype(np.float64) @ V.astype(np.float64).T
+    idx.kill_shard(0)
+    res = idx.all_pairs()
+    assert res.estimates.shape == (5, 5) and res.degraded
+    assert np.all(np.abs(res.estimates - true) <= res.bound)
+    assert 0.0 < res.coverage < 1.0
+
+
+def test_strict_mode_refuses_degraded_answers():
+    rng = np.random.default_rng(10)
+    idx, _ = _resilient_index(rng, strict=True)
+    q = np.ones(2048, np.float32)
+    idx.query(q)                         # healthy: fine even in strict mode
+    idx.kill_shard(2)
+    with pytest.raises(DegradedServiceError, match="strict"):
+        idx.query(q)
+    # per-call override still allows a degraded read
+    res = idx.query(q, strict=False)
+    assert res.degraded and 2 in res.down_shards
+
+
+def test_all_shards_down_raises():
+    rng = np.random.default_rng(11)
+    idx, _ = _resilient_index(rng, num_shards=2)
+    idx.kill_shard(0)
+    idx.kill_shard(1)
+    with pytest.raises(ShardDownError, match="no surviving shards"):
+        idx.query(np.ones(2048, np.float32))
+
+
+def test_revived_shard_restores_full_coverage():
+    rng = np.random.default_rng(12)
+    idx, _ = _resilient_index(rng)
+    idx.kill_shard(0)
+    assert idx.query(np.ones(2048, np.float32)).coverage < 1.0
+    idx.revive_shard(0)
+    assert idx.query(np.ones(2048, np.float32)).coverage == 1.0
+
+
+# ---------------------------------------------------------------------------
+# guarded fan-out: retries, backoff, timeouts, heartbeats
+# ---------------------------------------------------------------------------
+
+
+def test_flaky_shard_call_retries_with_exponential_backoff():
+    rng = np.random.default_rng(13)
+    fails = {0: 2}                      # shard 0 fails its first 2 attempts
+    def flaky(shard, fn):
+        if fails.get(shard, 0) > 0:
+            fails[shard] -= 1
+            raise ConnectionError("injected flake")
+        return fn()
+    sleeps = []
+    idx, V = _resilient_index(
+        rng, call_wrapper=flaky, sleep=sleeps.append,
+        retry=RetryPolicy(attempts=3, base_delay=0.1, max_delay=10.0,
+                          deadline=None))
+    res = idx.query(np.ones(2048, np.float32))
+    assert not res.degraded             # retries absorbed the flakes
+    assert sleeps == [0.1, 0.2]         # exponential backoff between tries
+
+
+def test_exhausted_retries_mark_shard_down_but_serve_survivors():
+    rng = np.random.default_rng(14)
+    def dead(shard, fn):
+        if shard == 2:
+            raise ConnectionError("shard 2 is gone")
+        return fn()
+    sleeps = []
+    idx, V = _resilient_index(
+        rng, call_wrapper=dead, sleep=sleeps.append,
+        retry=RetryPolicy(attempts=3, base_delay=0.5, max_delay=0.5,
+                          deadline=None))
+    q = rng.normal(size=2048).astype(np.float32)
+    res = idx.query(q)
+    assert res.down_shards == (2,) and res.degraded
+    assert sleeps == [0.5, 0.5]         # capped at max_delay
+    assert 2 in idx.down_shards()       # health remembers the failure
+    true = V.astype(np.float64) @ q
+    assert np.all(np.abs(res.estimates - true) <= res.bound)
+    # next query skips the dead shard without burning retries again
+    sleeps.clear()
+    idx.query(q)
+    assert sleeps == []
+
+
+def test_timeout_marks_shard_down_without_retry():
+    """A hanging shard (TimeoutError from the call wrapper) must be marked
+    unhealthy immediately — retrying into a hang would stall the query."""
+    rng = np.random.default_rng(15)
+    def hang(shard, fn):
+        if shard == 1:
+            raise TimeoutError("deadline exceeded")
+        return fn()
+    sleeps = []
+    idx, _ = _resilient_index(
+        rng, call_wrapper=hang, sleep=sleeps.append,
+        retry=RetryPolicy(attempts=5, base_delay=0.1, deadline=None))
+    res = idx.query(np.ones(2048, np.float32))
+    assert res.down_shards == (1,)
+    assert sleeps == []                 # no backoff into a hanging shard
+    assert "TimeoutError" in idx.down_shards()[1]
+
+
+def test_deadline_stops_retry_loop():
+    rng = np.random.default_rng(16)
+    clock = {"t": 0.0}
+    def tick(shard, fn):
+        clock["t"] += 3.0               # each attempt burns 3s of clock
+        raise ConnectionError("slow failure")
+    idx, _ = _resilient_index(
+        rng, call_wrapper=tick, sleep=lambda s: None,
+        retry=RetryPolicy(attempts=10, base_delay=0.01, deadline=5.0),
+        clock=lambda: clock["t"])
+    with pytest.raises(ShardDownError):
+        idx._shard_call(0, lambda: None)
+    assert clock["t"] == 6.0            # 2 attempts, then deadline tripped
+
+
+def test_heartbeat_eviction_and_revival():
+    clock = {"t": 0.0}
+    health = ShardHealth(3, timeout=10.0, clock=lambda: clock["t"])
+    assert health.down_shards() == {}
+    clock["t"] = 5.0
+    health.beat(0)
+    health.beat(1)
+    clock["t"] = 12.0                   # shard 2 never beat after t=0
+    down = health.down_shards()
+    assert list(down) == [2] and "heartbeat" in down[2]
+    health.beat(2)                      # a beat revives
+    assert health.down_shards() == {}
+    health.mark_down(1, "admin drain")
+    assert list(health.down_shards()) == [1]
+    health.beat(1)
+    assert health.down_shards() == {}
+
+
+# ---------------------------------------------------------------------------
+# input hardening
+# ---------------------------------------------------------------------------
+
+
+def test_nan_ingest_rejected_by_default():
+    idx = ResilientSketchIndex(256, num_shards=2, m=32, n_buckets=64,
+                               retry=NO_RETRY)
+    v = np.ones(256, np.float32)
+    v[3] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        idx.add("bad", v)
+    assert len(idx) == 0                # nothing partially ingested
+    v[3] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        idx.add_many(["bad"], v[None, :])
+    ms = ResilientMatrixStore(64, 4, num_shards=2, m=16, retry=NO_RETRY)
+    with pytest.raises(ValueError, match="non-finite"):
+        ms.add("bad", np.full((64, 4), np.nan, np.float32))
+
+
+def test_nan_ingest_sanitize_policy_zeroes():
+    rng = np.random.default_rng(17)
+    idx = ResilientSketchIndex(256, num_shards=2, m=64, n_buckets=128,
+                               nonfinite="sanitize", retry=NO_RETRY)
+    v = rng.normal(size=256).astype(np.float32)
+    v[7] = np.nan
+    idx.add("a", v)
+    res = idx.query(np.ones(256, np.float32))
+    assert np.all(np.isfinite(res.estimates))
+    clean = v.copy()
+    clean[7] = 0.0
+    ref = ResilientSketchIndex(256, num_shards=2, m=64, n_buckets=128,
+                               retry=NO_RETRY)
+    ref.add("a", clean)
+    np.testing.assert_array_equal(
+        res.estimates, ref.query(np.ones(256, np.float32)).estimates)
+
+
+def test_resilient_index_input_errors():
+    rng = np.random.default_rng(18)
+    idx = ResilientSketchIndex(256, num_shards=2, m=32, n_buckets=64,
+                               retry=NO_RETRY)
+    with pytest.raises(ValueError, match="empty"):
+        idx.query(np.ones(256, np.float32))
+    idx.add("a", rng.normal(size=256).astype(np.float32))
+    with pytest.raises(ValueError, match="duplicate"):
+        idx.add("a", rng.normal(size=256).astype(np.float32))
+    with pytest.raises(ValueError, match="coordinates"):
+        idx.query(np.ones(100, np.float32))
+    with pytest.raises(ValueError, match="coordinates"):
+        idx.add("b", np.ones(100, np.float32))
+
+
+def test_resilient_matrix_store_errors_and_degraded_product():
+    rng = np.random.default_rng(19)
+    ms = ResilientMatrixStore(200, 8, num_shards=4, m=64, seed=5,
+                              retry=NO_RETRY)
+    with pytest.raises(ValueError, match="empty"):
+        ms.query(np.ones((200, 8), np.float32))
+    A = rng.normal(size=(200, 8)).astype(np.float32)
+    B = rng.normal(size=(200, 8)).astype(np.float32)
+    ms.add("A", A)
+    ms.add("B", B)
+    with pytest.raises(ValueError, match="duplicate"):
+        ms.add("A", A)
+    with pytest.raises(ValueError, match="expected"):
+        ms.add("C", rng.normal(size=(10, 8)).astype(np.float32))
+    with pytest.raises(KeyError):
+        ms.product("A", "nope")
+
+    true = A.astype(np.float64).T @ B.astype(np.float64)
+    ms.kill_shard(0)
+    res = ms.product("A", "B")
+    assert res.degraded and 0.0 < res.coverage < 1.0
+    assert np.linalg.norm(res.estimates - true) <= float(res.bound)
+    qres = ms.query(A)
+    assert qres.estimates.shape == (2, 8, 8)
+    assert np.linalg.norm(qres.estimates[1] - true) <= float(qres.bound[1])
+    with pytest.raises(DegradedServiceError):
+        ms.product("A", "B", strict=True)

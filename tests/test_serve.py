@@ -162,3 +162,91 @@ def test_sketch_index_add_rejects_ambiguous_input():
         idx.add("neither")
     with pytest.raises(ValueError):
         idx.add("half", indices=np.arange(3))
+
+
+def test_sketch_index_rejects_duplicate_names():
+    rng = np.random.default_rng(8)
+    idx = SketchIndex(m=16, n_buckets=64, slots=2)
+    idx.add("a", rng.normal(size=64).astype(np.float32))
+    with pytest.raises(ValueError, match="duplicate name 'a'"):
+        idx.add("a", rng.normal(size=64).astype(np.float32))
+    with pytest.raises(ValueError, match="duplicate"):
+        idx.add_many(["b", "a"], rng.normal(size=(2, 64)).astype(np.float32))
+    with pytest.raises(ValueError, match="within the batch"):
+        idx.add_many(["c", "c"], rng.normal(size=(2, 64)).astype(np.float32))
+    assert len(idx) == 1                # failed batches ingested nothing
+
+    from repro.serve import MatrixSketchStore
+    st = MatrixSketchStore(16, dim=4)
+    st.add("A", rng.normal(size=(32, 4)).astype(np.float32))
+    with pytest.raises(ValueError, match="duplicate name 'A'"):
+        st.add("A", rng.normal(size=(32, 4)).astype(np.float32))
+
+    from repro.serve import ShardedSketchIndex
+    sh = ShardedSketchIndex(num_shards=2, m=16, n_buckets=64, slots=2)
+    sh.add("x", rng.normal(size=64).astype(np.float32))
+    # the duplicate routes to the *other* shard: only a global check sees it
+    with pytest.raises(ValueError, match="duplicate"):
+        sh.add("x", rng.normal(size=64).astype(np.float32))
+
+
+def test_sketch_index_query_error_paths():
+    rng = np.random.default_rng(9)
+    idx = SketchIndex(m=16, n_buckets=64, slots=2)
+    with pytest.raises(ValueError, match="empty index"):
+        idx.query(np.ones(64, np.float32))
+    idx.add("a", rng.normal(size=64).astype(np.float32))
+    with pytest.raises(ValueError, match="coordinates"):
+        idx.query(np.ones(32, np.float32))
+    with pytest.raises(ValueError, match="1-D"):
+        idx.query(np.ones((2, 64), np.float32))
+
+    from repro.serve import MatrixSketchStore, ShardedSketchIndex
+    st = MatrixSketchStore(16, dim=4)
+    with pytest.raises(ValueError, match="empty store"):
+        st.query(np.ones((8, 4), np.float32))
+    sh = ShardedSketchIndex(num_shards=2, m=16, n_buckets=64, slots=2)
+    with pytest.raises(ValueError, match="empty index"):
+        sh.query(np.ones(64, np.float32))
+
+
+def test_sketch_index_rejects_nonfinite_input():
+    rng = np.random.default_rng(10)
+    idx = SketchIndex(m=16, n_buckets=64, slots=2)
+    v = rng.normal(size=64).astype(np.float32)
+    v[5] = np.nan
+    with pytest.raises(ValueError, match="non-finite"):
+        idx.add("bad", v)
+    assert len(idx) == 0
+    clean = v.copy()
+    clean[5] = 0.0
+    lax = SketchIndex(m=16, n_buckets=64, slots=2, nonfinite="sanitize")
+    lax.add("ok", v)                    # sanitized: NaN -> weight-0 entry
+    ref = SketchIndex(m=16, n_buckets=64, slots=2)
+    ref.add("ok", clean)
+    np.testing.assert_array_equal(lax._idx[:1], ref._idx[:1])
+    idx.add("good", clean)
+    q = clean.copy()
+    q[3] = np.inf
+    with pytest.raises(ValueError, match="non-finite"):
+        idx.query(q)
+    with pytest.raises(ValueError):
+        SketchIndex(nonfinite="ignore")
+
+
+def test_sketch_index_merge_from_mismatch_raises():
+    rng = np.random.default_rng(11)
+    base = SketchIndex(m=16, n_buckets=64, slots=2, seed=3)
+    base.add("a", rng.normal(size=64).astype(np.float32))
+
+    for kw in ({"m": 32}, {"n_buckets": 128}, {"slots": 4}, {"seed": 4}):
+        peer = SketchIndex(**{"m": 16, "n_buckets": 64, "slots": 2,
+                              "seed": 3, **kw})
+        peer.add("a", rng.normal(size=64).astype(np.float32))
+        with pytest.raises(ValueError, match="merge"):
+            base.merge_from(peer)
+
+    misnamed = SketchIndex(m=16, n_buckets=64, slots=2, seed=3)
+    misnamed.add("b", rng.normal(size=64).astype(np.float32))
+    with pytest.raises(ValueError, match="names must align"):
+        base.merge_from(misnamed)

@@ -119,6 +119,45 @@ def test_run_with_recovery(tiny, tmp_path):
     assert len(restarts) == 1 and "simulated" in restarts[0]
 
 
+def test_run_with_recovery_resets_budget_on_progress(tmp_path):
+    """Crashes that still advance the checkpoint reset the restart budget:
+    5 productive crashes survive max_restarts=2."""
+    ck = Checkpointer(str(tmp_path / "ck3"), async_save=False)
+    calls = {"n": 0}
+    sleeps = []
+
+    def run_fn(start_step):
+        calls["n"] += 1
+        step = (ck.latest_step() or 0) + 1
+        if step <= 5:
+            ck.save(step, {"x": np.zeros(1)})
+            raise RuntimeError(f"preempted after step {step}")
+        return step
+
+    out = run_with_recovery(run_fn, checkpointer=ck, max_restarts=2,
+                            sleep=sleeps.append)
+    assert out == 6
+    assert calls["n"] == 6           # 5 productive crashes + final success
+    # every restart was the first since progress -> backoff stays at base
+    assert sleeps == [1.0] * 5
+
+
+def test_run_with_recovery_backoff_and_exhaustion(tmp_path):
+    """A stuck step backs off exponentially (capped) and re-raises once the
+    unproductive-restart budget is exhausted."""
+    ck = Checkpointer(str(tmp_path / "ck4"), async_save=False)
+    sleeps = []
+
+    def run_fn(start_step):
+        raise RuntimeError("stuck step")
+
+    with pytest.raises(RuntimeError, match="stuck step"):
+        run_with_recovery(run_fn, checkpointer=ck, max_restarts=3,
+                          backoff_base=0.5, backoff_max=1.5,
+                          sleep=sleeps.append)
+    assert sleeps == [0.5, 1.0, 1.5]  # 0.5 * 2^k, capped at backoff_max
+
+
 def test_warmup_cosine_schedule():
     lr = warmup_cosine(1.0, warmup=10, total=110)
     assert float(lr(jnp.asarray(0))) == 0.0
