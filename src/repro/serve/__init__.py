@@ -5,8 +5,8 @@ from .resilience import (DegradedResult, DegradedServiceError,
                          DurableSketchIndex, IngestJournal, ResilienceError,
                          ResilientMatrixStore, ResilientSketchIndex,
                          RetryPolicy, ShardDownError, ShardHealth,
-                         SnapshotCorruptionError, list_snapshots,
-                         load_latest_snapshot, load_snapshot,
+                         SnapshotCorruptionError, SnapshotReadError,
+                         list_snapshots, load_latest_snapshot, load_snapshot,
                          quarantine_snapshot, save_snapshot)
 
 __all__ = ["Engine", "Request", "MatrixSketchStore", "ShardedSketchIndex",
@@ -14,6 +14,6 @@ __all__ = ["Engine", "Request", "MatrixSketchStore", "ShardedSketchIndex",
            "DegradedResult", "DegradedServiceError", "DurableSketchIndex",
            "IngestJournal", "ResilienceError", "ResilientMatrixStore",
            "ResilientSketchIndex", "RetryPolicy", "ShardDownError",
-           "ShardHealth", "SnapshotCorruptionError", "list_snapshots",
-           "load_latest_snapshot", "load_snapshot", "quarantine_snapshot",
-           "save_snapshot"]
+           "ShardHealth", "SnapshotCorruptionError", "SnapshotReadError",
+           "list_snapshots", "load_latest_snapshot", "load_snapshot",
+           "quarantine_snapshot", "save_snapshot"]

@@ -61,7 +61,14 @@ class ResilienceError(RuntimeError):
 
 
 class SnapshotCorruptionError(ResilienceError):
-    """A snapshot failed its integrity checks (CRC/shape/version)."""
+    """A snapshot failed its integrity checks (CRC/shape/version/missing
+    pieces) — evidence of bad bytes, grounds for quarantine."""
+
+
+class SnapshotReadError(ResilienceError):
+    """A snapshot could not be read for *environmental* reasons
+    (permissions, fd exhaustion, transient I/O) — the bytes themselves are
+    not implicated, so the snapshot must NOT be quarantined."""
 
 
 class ShardDownError(ResilienceError):
@@ -80,6 +87,15 @@ class DegradedServiceError(ResilienceError):
 
 def _crc(arr: np.ndarray) -> int:
     return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so its entries (new files / renames) are durable."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
 
 
 def _snapshot_arrays(index) -> dict:
@@ -111,8 +127,12 @@ def save_snapshot(index, directory: str, *, journal_seq: int = 0) -> str:
     Layout (DESIGN.md §16): ``snapshot-<journal_seq>/manifest.json`` plus
     one ``.npy`` per payload array (``idx``/``val``/``tau``/... over the
     occupied row prefix), each with a CRC32 recorded in the manifest.  The
-    write is atomic (tmp dir + ``os.replace``): a crash mid-write never
-    leaves a readable-but-wrong snapshot, and a re-snapshot at the same
+    write is atomic AND durable: every payload and the manifest are
+    fsync'd, the tmp dir is fsync'd, then ``os.replace`` publishes it and
+    the parent directory is fsync'd — a crash or power loss mid-write
+    never leaves a readable-but-wrong snapshot, and a snapshot that
+    returned is guaranteed on stable storage (so the journal rotation that
+    follows it cannot orphan acknowledged ops).  A re-snapshot at the same
     ``journal_seq`` replaces the old one atomically.
     """
     os.makedirs(directory, exist_ok=True)
@@ -131,15 +151,22 @@ def save_snapshot(index, directory: str, *, journal_seq: int = 0) -> str:
     }
     for key, arr in arrays.items():
         fname = f"{key}.npy"
-        np.save(os.path.join(tmp, fname), arr)
+        with open(os.path.join(tmp, fname), "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
         manifest["arrays"][key] = {"file": fname, "crc32": _crc(arr),
                                    "shape": list(arr.shape),
                                    "dtype": str(arr.dtype)}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)
+    _fsync_dir(directory)
     return final
 
 
@@ -157,14 +184,25 @@ def _rebuild_index(params: dict):
 
 def load_snapshot(path: str):
     """Load one snapshot, verifying version and payload CRCs; returns
-    ``(index, journal_seq)`` or raises :class:`SnapshotCorruptionError`.
+    ``(index, journal_seq)``.  Raises :class:`SnapshotCorruptionError` for
+    bad bytes (CRC/shape/version mismatch, unparseable or missing pieces)
+    and :class:`SnapshotReadError` for transient I/O failures (permissions,
+    EMFILE, ...) that say nothing about the snapshot's integrity.
     """
     try:
         with open(os.path.join(path, "manifest.json")) as f:
             manifest = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
+    except FileNotFoundError as e:
+        # the atomic tmp+replace protocol never publishes a snapshot dir
+        # without its manifest: absence is structural damage
+        raise SnapshotCorruptionError(f"{path}: missing manifest "
+                                      f"({e})") from e
+    except json.JSONDecodeError as e:
         raise SnapshotCorruptionError(f"{path}: unreadable manifest "
                                       f"({e})") from e
+    except OSError as e:
+        raise SnapshotReadError(f"{path}: transient manifest read failure "
+                                f"({e})") from e
     version = manifest.get("format_version")
     if version != SNAPSHOT_FORMAT_VERSION:
         raise SnapshotCorruptionError(
@@ -177,9 +215,12 @@ def load_snapshot(path: str):
         fpath = os.path.join(path, meta["file"])
         try:
             arr = np.load(fpath)
-        except (OSError, ValueError) as e:
+        except (FileNotFoundError, ValueError) as e:
             raise SnapshotCorruptionError(f"{path}: unreadable payload "
                                           f"{meta['file']} ({e})") from e
+        except OSError as e:
+            raise SnapshotReadError(f"{path}: transient read failure on "
+                                    f"payload {meta['file']} ({e})") from e
         if list(arr.shape) != meta["shape"] or str(arr.dtype) != meta["dtype"]:
             raise SnapshotCorruptionError(
                 f"{path}: payload {key} is {arr.dtype}{arr.shape}, "
@@ -234,12 +275,21 @@ def load_latest_snapshot(directory: str):
     """Load the newest snapshot that passes integrity checks, quarantining
     any corrupt ones encountered on the way down; returns
     ``(index, journal_seq)`` or ``(None, 0)`` when no usable snapshot
-    exists."""
+    exists.
+
+    Only *integrity* failures (:class:`SnapshotCorruptionError`) quarantine
+    — a transient read failure (:class:`SnapshotReadError`: permissions,
+    EMFILE, ...) skips the snapshot without renaming it, falling back to an
+    older one; the archived WAL segments cover the gap, so recovery stays
+    correct and the healthy snapshot is still there once the hiccup
+    clears."""
     for path in reversed(list_snapshots(directory)):
         try:
             return load_snapshot(path)
         except SnapshotCorruptionError as e:
             quarantine_snapshot(path, str(e))
+        except SnapshotReadError:
+            continue
     return None, 0
 
 
@@ -267,7 +317,11 @@ class IngestJournal:
     ``crc`` is the CRC32 of the canonical body encoding and array payloads
     ride base64.  :meth:`read` replays records in order and *stops at the
     first corrupt or truncated record* — a crash mid-append loses at most
-    the un-acked tail, never an acknowledged op (DESIGN.md §16).
+    the un-acked tail, never an acknowledged op (DESIGN.md §16).  Opening
+    the journal **truncates** any such corrupt tail at the byte offset of
+    the last valid record before appending resumes, so a post-recovery
+    append can never land after garbage (where the next recovery's replay
+    would stop short of it and silently drop acknowledged ops).
 
     On each snapshot the live journal is :meth:`rotate`\\ d: the current
     file is archived as ``journal-<end_seq>.wal`` and a fresh live file
@@ -281,16 +335,19 @@ class IngestJournal:
 
     def __init__(self, path: str, *, seq: Optional[int] = None):
         """``seq``: resume numbering from a known position instead of
-        scanning the existing file (recovery already parsed it)."""
+        taking it from the existing file (recovery already parsed it).
+        Either way the file is scanned once so a corrupt/truncated tail is
+        cut off *before* the file reopens for append."""
         self.path = path
-        if seq is not None:
-            self._seq = seq
-        else:
-            self._seq = 0
-            if os.path.exists(path):
-                records, _ = self.read(path)
-                if records:
-                    self._seq = records[-1][0]
+        self._seq = seq if seq is not None else 0
+        if os.path.exists(path):
+            records, dropped, valid_end = self._scan(path)
+            if dropped:
+                # drop the corrupt tail now: appending after it would put
+                # acknowledged records where no replay ever reaches
+                os.truncate(path, valid_end)
+            if seq is None and records:
+                self._seq = records[-1][0]
         self._fh = open(path, "a")
 
     @property
@@ -336,30 +393,46 @@ class IngestJournal:
         self._fh.close()
 
     @staticmethod
-    def read(path: str, *, after_seq: int = 0):
-        """Return ``(records, tail_dropped)``: records as
-        ``(seq, op, body)`` with ``seq > after_seq``, stopping at the
-        first record that fails to parse or verify (``tail_dropped`` lines
-        were discarded as a corrupt/truncated tail)."""
+    def _scan(path: str, after_seq: int = 0):
+        """Parse the journal, tracking byte offsets: returns
+        ``(records, tail_dropped, valid_end)`` where ``valid_end`` is the
+        byte offset just past the last valid, newline-terminated record —
+        the truncation point that makes the file safe to append to.  A
+        final record missing its newline counts as tail: :meth:`append`
+        fsyncs the full line before acking, so an acked record always has
+        its terminator."""
         records = []
         dropped = 0
+        valid_end = 0
         try:
-            with open(path) as f:
-                lines = f.readlines()
+            with open(path, "rb") as f:
+                lines = f.read().splitlines(keepends=True)
         except OSError:
-            return records, dropped
-        for i, line in enumerate(lines):
+            return records, dropped, valid_end
+        for i, raw in enumerate(lines):
             try:
-                rec = json.loads(line)
+                if not raw.endswith(b"\n"):
+                    raise ValueError("truncated record (no terminator)")
+                rec = json.loads(raw.decode())
                 canon = json.dumps(rec["body"], sort_keys=True)
                 if (zlib.crc32(canon.encode()) & 0xFFFFFFFF) != rec["crc"]:
                     raise ValueError("CRC mismatch")
                 seq, op, body = int(rec["seq"]), rec["op"], rec["body"]
-            except (ValueError, KeyError, TypeError):
+            except (ValueError, KeyError, TypeError, UnicodeDecodeError):
                 dropped = len(lines) - i
                 break
+            valid_end += len(raw)
             if seq > after_seq:
                 records.append((seq, op, body))
+        return records, dropped, valid_end
+
+    @classmethod
+    def read(cls, path: str, *, after_seq: int = 0):
+        """Return ``(records, tail_dropped)``: records as
+        ``(seq, op, body)`` with ``seq > after_seq``, stopping at the
+        first record that fails to parse or verify (``tail_dropped`` lines
+        were discarded as a corrupt/truncated tail)."""
+        records, dropped, _ = cls._scan(path, after_seq)
         return records, dropped
 
     @classmethod
@@ -552,19 +625,26 @@ class ShardHealth:
     Rides :class:`repro.train.fault_tolerance.HeartbeatMonitor`: shards
     that stop beating for ``timeout`` seconds are treated as down even if
     no call has failed yet; a successful call or a fresh heartbeat revives
-    a down-marked shard.
+    a down-marked shard.  Pass ``monitor`` to share one with the cluster
+    manager — its ``timeout`` then wins, and beats it already recorded are
+    preserved (only shards it has never seen are registered live at
+    construction time).
     """
     num_shards: int
     timeout: float = 60.0
     clock: Callable[[], float] = time.monotonic
-    monitor: HeartbeatMonitor = None
+    monitor: Optional[HeartbeatMonitor] = None
     down_reasons: dict = field(default_factory=dict)
 
     def __post_init__(self):
-        self.monitor = HeartbeatMonitor(timeout=self.timeout)
+        if self.monitor is None:
+            self.monitor = HeartbeatMonitor(timeout=self.timeout)
+        else:
+            self.timeout = self.monitor.timeout
         now = self.clock()
         for p in range(self.num_shards):
-            self.monitor.beat(p, now=now)
+            if p not in self.monitor.last_seen:
+                self.monitor.beat(p, now=now)
 
     def beat(self, shard: int) -> None:
         """A heartbeat (or successful call) proves liveness and revives."""
@@ -707,6 +787,24 @@ class _GuardedFanout:
 # ---------------------------------------------------------------------------
 
 
+def _all_or_none(shards, writes, *, rows_each: int) -> None:
+    """Run per-shard ``writes`` (thunks aligned with ``shards``), rolling
+    back the shards already written if a later one fails (e.g. MemoryError
+    growing its blocks).  Without the unwind, shards ``0..p-1`` would keep
+    the rows while the wrapper's ``_names``/norm bookkeeping does not, and
+    every later read would crash on mismatched per-shard corpus sizes —
+    a permanently wedged index (DESIGN.md §16)."""
+    done = 0
+    try:
+        for write in writes:
+            write()
+            done += 1
+    except BaseException:
+        for shard in shards[:done]:
+            shard._rollback_last(rows_each)
+        raise
+
+
 class ResilientSketchIndex(_GuardedFanout):
     """Coordinate-partitioned fault-tolerant serving index.
 
@@ -773,8 +871,9 @@ class ResilientSketchIndex(_GuardedFanout):
         vector = check_vector(vector, f"vector {name!r}", dim=self.n,
                               nonfinite=self.nonfinite)
         slices = self._slices(vector)
-        for p, sl in enumerate(slices):
-            self._shards[p].add(name, sl)
+        _all_or_none(self._shards,
+                     [lambda p=p, sl=sl: self._shards[p].add(name, sl)
+                      for p, sl in enumerate(slices)], rows_each=1)
         self._names.append(name)
         self._norm2.append(np.array([float(np.sum(sl * sl.astype(np.float64)))
                                      for sl in slices]))
@@ -790,8 +889,10 @@ class ResilientSketchIndex(_GuardedFanout):
             check_unique_name(name, self._names)
         matrix = check_finite(matrix, "ingest matrix",
                               nonfinite=self.nonfinite)
-        for p, sl in enumerate(self._slices(matrix)):
-            self._shards[p].add_many(names, sl)
+        _all_or_none(self._shards,
+                     [lambda p=p, sl=sl: self._shards[p].add_many(names, sl)
+                      for p, sl in enumerate(self._slices(matrix))],
+                     rows_each=len(names))
         sq = matrix.astype(np.float64) ** 2
         per_shard = np.stack([sl.sum(axis=1) for sl in self._slices(sq)],
                              axis=1)
@@ -919,8 +1020,11 @@ class ResilientMatrixStore(_GuardedFanout):
                              f"matrix, got shape {matrix.shape}")
         matrix = check_finite(matrix, f"matrix {name!r}",
                               nonfinite=self.nonfinite)
-        for p, (lo, hi) in enumerate(self.bounds):
-            self._shards[p].add(name, matrix[lo:hi])
+        _all_or_none(self._shards,
+                     [lambda p=p, lo=lo, hi=hi:
+                      self._shards[p].add(name, matrix[lo:hi])
+                      for p, (lo, hi) in enumerate(self.bounds)],
+                     rows_each=1)
         self._names.append(name)
         self._fro2[name] = np.array(
             [float(np.sum(matrix[lo:hi].astype(np.float64) ** 2))

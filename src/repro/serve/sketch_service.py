@@ -176,6 +176,21 @@ class SketchIndex:
         self._name_set.update(names)
         self._device_corpus = None
 
+    def _rollback_last(self, k: int) -> None:
+        """Undo the last ``k`` appended rows, restoring padding state
+        (INVALID ids, tau=1) so the blocks stay inert.  Used by multi-shard
+        ingest paths to unwind a partially-applied write — an all-or-nothing
+        contract a caller cannot restore from outside (DESIGN.md §16)."""
+        for _ in range(k):
+            name = self._names.pop()
+            self._name_set.discard(name)
+            d = len(self._names)
+            self._idx[d] = INVALID_IDX
+            self._val[d] = 0
+            self._tau[d] = 1
+            self._dropped[d] = 0
+        self._device_corpus = None
+
     def _corpus(self) -> BucketizedSketch:
         """Occupied corpus prefix on device, rounded up to a power of two so
         the kernels see at most 2x the live rows.  Shape still only changes
@@ -329,6 +344,18 @@ class MatrixSketchStore:
         self._names.append(name)
         self._name_set.add(name)
         self._device = None   # re-upload (not re-sketch) lazily
+
+    def _rollback_last(self, k: int) -> None:
+        """Undo the last ``k`` appended sketches (multi-shard ingest
+        rollback; see :meth:`SketchIndex._rollback_last`)."""
+        for _ in range(k):
+            name = self._names.pop()
+            self._name_set.discard(name)
+            c = len(self._names)
+            self._idx[c] = INVALID_IDX
+            self._rows[c] = 0
+            self._tau[c] = 1
+        self._device = None
 
     def _corpus(self) -> MatrixSketch:
         """Occupied corpus prefix on device, rounded to a power of two so

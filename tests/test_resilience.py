@@ -12,8 +12,9 @@ from repro.serve import (DegradedServiceError, DurableSketchIndex,
                          ResilientMatrixStore, ResilientSketchIndex,
                          RetryPolicy, ShardDownError, ShardHealth,
                          SketchIndex, SnapshotCorruptionError,
-                         list_snapshots, load_latest_snapshot, load_snapshot,
-                         save_snapshot)
+                         SnapshotReadError, list_snapshots,
+                         load_latest_snapshot, load_snapshot, save_snapshot)
+from repro.train.fault_tolerance import HeartbeatMonitor
 
 NO_RETRY = RetryPolicy(attempts=1, deadline=None)
 
@@ -82,6 +83,38 @@ def test_corrupt_snapshot_detected_and_quarantined(tmp_path):
     assert list_snapshots(str(tmp_path)) == [old]       # quarantine hidden
 
 
+def test_transient_read_failure_skips_without_quarantine(tmp_path,
+                                                         monkeypatch):
+    """A transient I/O failure (permissions, EMFILE, ...) on the newest
+    snapshot must NOT quarantine it: integrity is not implicated, so
+    recovery skips to an older snapshot and the healthy snapshot is still
+    there once the hiccup clears."""
+    rng = np.random.default_rng(42)
+    idx = SketchIndex(m=32, n_buckets=64, seed=4)
+    idx.add("a", rng.normal(size=256).astype(np.float32))
+    old = save_snapshot(idx, str(tmp_path), journal_seq=1)
+    idx.add("b", rng.normal(size=256).astype(np.float32))
+    new = save_snapshot(idx, str(tmp_path), journal_seq=2)
+
+    real_load = np.load
+    def denied(path, *a, **k):
+        if str(path).startswith(new):
+            raise PermissionError(f"injected EACCES on {path}")
+        return real_load(path, *a, **k)
+    monkeypatch.setattr(np, "load", denied)
+
+    with pytest.raises(SnapshotReadError, match="transient"):
+        load_snapshot(new)
+    loaded, seq = load_latest_snapshot(str(tmp_path))
+    assert seq == 1 and loaded._names == ["a"]      # fell back past it
+    assert os.path.exists(new)                      # NOT renamed aside
+    assert not os.path.exists(new + ".quarantined")
+    monkeypatch.undo()
+    loaded, seq = load_latest_snapshot(str(tmp_path))
+    assert seq == 2 and loaded._names == ["a", "b"]  # healthy again
+    assert list_snapshots(str(tmp_path)) == [old, new]
+
+
 def test_snapshot_version_and_manifest_checks(tmp_path):
     rng = np.random.default_rng(3)
     idx = SketchIndex(m=16, n_buckets=32, seed=2)
@@ -118,6 +151,50 @@ def test_journal_replay_stops_at_corrupt_tail(tmp_path):
     j2 = IngestJournal(path)
     assert j2.seq == 2
     j2.close()
+
+
+def test_journal_truncates_corrupt_tail_before_reappending(tmp_path):
+    """Reopening the live WAL must cut off a corrupt/truncated tail before
+    appending: otherwise acked ops written after the garbage are silently
+    dropped by the NEXT recovery (replay stops at the first bad record)."""
+    path = str(tmp_path / "j.wal")
+    j = IngestJournal(path)
+    j.append("add", {"name": "a"})
+    j.append("add", {"name": "b"})
+    j.close()
+    with open(path, "a") as f:                 # crash mid-append
+        f.write('{"seq": 3, "op": "add", "crc": 0, "bo')
+    j2 = IngestJournal(path)                   # reopen truncates the tail
+    assert j2.seq == 2
+    j2.append("add", {"name": "c"})            # acked post-recovery
+    j2.close()
+    records, dropped = IngestJournal.read(path)
+    assert dropped == 0                        # nothing left to stop at
+    assert [r[2]["name"] for r in records] == ["a", "b", "c"]
+
+
+def test_recover_twice_never_loses_acked_ops(tmp_path):
+    """Two-crash chaos scenario: crash mid-append -> recover -> ack more
+    ops -> crash -> recover.  Every op acked by either incarnation must
+    survive; only the un-acked torn tail may be lost."""
+    rng = np.random.default_rng(43)
+    va, vb = (rng.normal(size=256).astype(np.float32) for _ in range(2))
+    dur = DurableSketchIndex(str(tmp_path), m=32, n_buckets=64, seed=3)
+    dur.add("a", va)
+    dur.journal.close()
+    with open(os.path.join(str(tmp_path), "journal.wal"), "a") as f:
+        f.write('{"torn mid-append')           # first crash: torn tail
+    rec1 = DurableSketchIndex.recover(str(tmp_path), m=32, n_buckets=64,
+                                      seed=3)
+    assert rec1.dropped_tail == 1 and rec1.index._names == ["a"]
+    rec1.add("b", vb)                          # acked AFTER the torn tail
+    rec1.journal.close()                       # second crash
+    rec2 = DurableSketchIndex.recover(str(tmp_path), m=32, n_buckets=64,
+                                      seed=3)
+    assert rec2.dropped_tail == 0
+    assert rec2.index._names == ["a", "b"]     # no acked op lost
+    q = rng.normal(size=256).astype(np.float32)
+    assert rec2.query(q) == rec1.query(q)      # and bit-exact
 
 
 def test_journal_crc_rejects_tampered_record(tmp_path):
@@ -397,6 +474,86 @@ def test_heartbeat_eviction_and_revival():
     assert list(health.down_shards()) == [1]
     health.beat(1)
     assert health.down_shards() == {}
+
+
+def test_shard_health_accepts_injected_monitor():
+    """A caller-supplied HeartbeatMonitor (e.g. shared with the cluster
+    manager) must be used as-is: its recorded beats and timeout win, and
+    only shards it has never seen get registered live at construction."""
+    clock = {"t": 100.0}
+    mon = HeartbeatMonitor(timeout=7.0)
+    mon.beat(0, now=50.0)                # stale beat from the cluster manager
+    health = ShardHealth(2, timeout=60.0, clock=lambda: clock["t"],
+                         monitor=mon)
+    assert health.monitor is mon         # not silently replaced
+    assert health.timeout == 7.0         # the shared monitor's timeout wins
+    down = health.down_shards()
+    assert 0 in down and 1 not in down   # stale beat preserved, not reset
+    health.beat(0)
+    assert health.down_shards() == {}
+
+
+# ---------------------------------------------------------------------------
+# ingest atomicity: a failed multi-shard write must not wedge the index
+# ---------------------------------------------------------------------------
+
+
+def test_partial_shard_add_rolls_back():
+    """If shard p>0 fails mid-ingest (e.g. MemoryError growing its blocks),
+    shards 0..p-1 must not keep the row: reads would crash forever on
+    mismatched per-shard corpus sizes."""
+    rng = np.random.default_rng(21)
+    idx, V = _resilient_index(rng, D=3)
+    orig = idx._shards[2].add
+    def exploding(name, sl, **kw):
+        raise MemoryError("injected allocation failure")
+    idx._shards[2].add = exploding
+    v = rng.normal(size=2048).astype(np.float32)
+    with pytest.raises(MemoryError):
+        idx.add("new", v)
+    assert len(idx) == 3
+    assert [len(s) for s in idx._shards] == [3] * 4   # no shard kept it
+    res = idx.query(np.ones(2048, np.float32))        # reads still work
+    assert res.estimates.shape == (3,)
+    idx._shards[2].add = orig
+    idx.add("new", v)                  # the name stays usable after unwind
+    assert len(idx) == 4 and idx.query(v).estimates.shape == (4,)
+
+
+def test_partial_shard_add_many_rolls_back():
+    rng = np.random.default_rng(22)
+    idx, V = _resilient_index(rng, D=2)
+    def exploding(names, sl):
+        raise MemoryError("injected allocation failure")
+    orig = idx._shards[3].add_many
+    idx._shards[3].add_many = exploding
+    W = rng.normal(size=(3, 2048)).astype(np.float32)
+    with pytest.raises(MemoryError):
+        idx.add_many(["x", "y", "z"], W)
+    assert len(idx) == 2
+    assert [len(s) for s in idx._shards] == [2] * 4
+    idx._shards[3].add_many = orig
+    idx.add_many(["x", "y", "z"], W)
+    assert len(idx) == 5
+    assert idx.query(np.ones(2048, np.float32)).estimates.shape == (5,)
+
+
+def test_partial_matrix_store_add_rolls_back():
+    rng = np.random.default_rng(23)
+    ms = ResilientMatrixStore(200, 8, num_shards=4, m=32, retry=NO_RETRY)
+    A = rng.normal(size=(200, 8)).astype(np.float32)
+    ms.add("A", A)
+    def exploding(name, sl):
+        raise MemoryError("injected allocation failure")
+    orig = ms._shards[1].add
+    ms._shards[1].add = exploding
+    with pytest.raises(MemoryError):
+        ms.add("B", A)
+    assert len(ms) == 1
+    assert [len(s) for s in ms._shards] == [1] * 4
+    ms._shards[1].add = orig
+    ms.add("B", A)                     # name reusable, store consistent
+    assert ms.product("A", "B").estimates.shape == (8, 8)
 
 
 # ---------------------------------------------------------------------------
