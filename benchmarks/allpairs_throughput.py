@@ -28,7 +28,7 @@ from repro.core import sketch_corpus
 from repro.core.batched import estimate_all_pairs
 from repro.kernels import bucketize_corpus, estimate_all_pairs_bucketized
 
-from .common import Csv, time_callable
+from .common import Csv, roofline_stats, set_roofline, time_callable
 
 # (D, m, n_buckets, slots); the (512, 2) layout is the throughput
 # configuration (S^2 = 4 slot-pair passes), (512, 4) the accuracy
@@ -47,6 +47,13 @@ FULL_POINTS = QUICK_POINTS + [
 HEADLINE = (256, 256)
 HEADLINE_SPEEDUP = 3.0
 
+# corpus-chunk candidates for the XLA reference path (None = unchunked).
+# The unchunked path materializes (D1, D2, B) bucket intermediates — 134 MB
+# at D=256, B=512 — which falls out of cache and is what flattened the S=4
+# point at ~1x; chunking via lax.map keeps the peak at (D1, ct, B) and the
+# sweep picks the best-performing ct per layout (DESIGN.md §17).
+CHUNK_CANDIDATES = (None, 32, 64, 128)
+
 
 def _synthetic_corpus(rng, D: int, n: int = 8192, nnz: int = 1024):
     A = np.zeros((D, n), np.float32)
@@ -64,22 +71,37 @@ def _bench_point(D: int, m: int, B: int, S: int, *, n_rep: int = 5) -> dict:
     jax.block_until_ready(BA.idx)
 
     reference = jax.jit(lambda S1, S2: estimate_all_pairs(S1, S2))
-    bucketized = jax.jit(
-        lambda C1, C2: estimate_all_pairs_bucketized(C1, C2, use_pallas=False))
+
+    def contender(chunk):
+        return jax.jit(lambda C1, C2: estimate_all_pairs_bucketized(
+            C1, C2, ref_chunk=chunk, use_pallas=False))
 
     us_ref = time_callable(reference, SA, SA, n_rep=n_rep, warmup=1)
-    us_bkt = time_callable(bucketized, BA, BA, n_rep=n_rep, warmup=1)
+    # sweep the reference-path corpus chunk and keep the fastest layout;
+    # each candidate is its own jit cache entry (ref_chunk is static)
+    sweep = {}
+    for chunk in CHUNK_CANDIDATES:
+        if chunk is not None and chunk >= D:
+            continue
+        sweep[chunk] = time_callable(contender(chunk), BA, BA,
+                                     n_rep=n_rep, warmup=1)
+    best_chunk = min(sweep, key=lambda c: float(sweep[c]))
+    us_bkt = sweep[best_chunk]
+    bucketized = contender(best_chunk)
 
     est_ref = np.asarray(reference(SA, SA))
     est_bkt = np.asarray(bucketized(BA, BA))
     norms = np.linalg.norm(A, axis=1)
     scale = np.maximum(np.outer(norms, norms), 1e-12)
     pairs = D * D
-    return {
+    out = {
         "D": D, "m": m, "n_buckets": B, "slots": S,
         "pairs": pairs,
         "us_reference": us_ref,
         "us_bucketized": us_bkt,
+        "us_bucketized_unchunked": float(sweep.get(None, us_bkt)),
+        "ref_chunk": best_chunk,
+        "chunk_sweep_us": {str(c): float(u) for c, u in sweep.items()},
         "pairs_per_sec_reference": pairs / (us_ref * 1e-6),
         "pairs_per_sec_bucketized": pairs / (us_bkt * 1e-6),
         "speedup": us_ref / us_bkt,
@@ -87,6 +109,10 @@ def _bench_point(D: int, m: int, B: int, S: int, *, n_rep: int = 5) -> dict:
         "mean_scaled_divergence": float(
             np.mean(np.abs(est_bkt - est_ref) / scale)),
     }
+    roof = roofline_stats(bucketized, BA, BA, measured=us_bkt)
+    if roof is not None:
+        out["roofline"] = roof
+    return out
 
 
 def run(quick: bool = True) -> Csv:
@@ -99,10 +125,15 @@ def run(quick: bool = True) -> Csv:
         tag = f"allpairs/D{D}_m{m}_B{B}_S{S}"
         csv.add(f"{tag}/reference", r["us_reference"],
                 f"pairs_per_sec={r['pairs_per_sec_reference']:.0f}")
-        csv.add(f"{tag}/bucketized", r["us_bucketized"],
-                f"pairs_per_sec={r['pairs_per_sec_bucketized']:.0f}"
-                f";speedup={r['speedup']:.2f}"
-                f";dropped_mean={r['dropped_mean']:.1f}")
+        derived = (f"pairs_per_sec={r['pairs_per_sec_bucketized']:.0f}"
+                   f";speedup={r['speedup']:.2f}"
+                   f";ref_chunk={r['ref_chunk']}"
+                   f";dropped_mean={r['dropped_mean']:.1f}")
+        roof = r.get("roofline")
+        if roof and "bw_peak_fraction" in roof:
+            derived += (f";bw_peak_frac={roof['bw_peak_fraction']:.4f}"
+                        f";bound={roof['bound']}")
+        csv.add(f"{tag}/bucketized", r["us_bucketized"], derived)
     head = [r for r in results
             if (r["D"], r["m"]) == HEADLINE and r["speedup"] >= HEADLINE_SPEEDUP]
     csv.add("allpairs/validate/speedup_3x_at_D256_m256", 0.0,
@@ -119,7 +150,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json-out", default="BENCH_allpairs.json")
+    ap.add_argument("--roofline", action="store_true",
+                    help="attach HLO FLOPs/bytes + achieved-vs-peak "
+                         "fractions to each point (DESIGN.md §9)")
     args = ap.parse_args()
+    set_roofline(args.roofline)
     print("name,us_per_call,derived")
     csv = run(quick=not args.full)
     payload = {

@@ -78,6 +78,65 @@ def mean_scaled_error(method, pairs, m_budget: int, n_trials: int = 1) -> float:
     return float(np.mean(errs))
 
 
+# Opt-in roofline accounting, set by ``run.py --roofline`` (or a module's
+# standalone ``--roofline`` flag).  Off by default: AOT-compiling each
+# contender a second time is pure overhead when nobody reads the numbers.
+_ROOFLINE = False
+
+
+def set_roofline(on: bool) -> None:
+    """Enable/disable :func:`roofline_stats` globally (``--roofline``)."""
+    global _ROOFLINE
+    _ROOFLINE = bool(on)
+
+
+def roofline_enabled() -> bool:
+    return _ROOFLINE
+
+
+def roofline_stats(fn, *args, measured: "Timing | float | None" = None):
+    """HLO-level roofline accounting for one jitted callable on ``args``.
+
+    AOT-compiles ``fn`` and reads the compiled executable's
+    ``cost_analysis()`` (FLOPs + HBM bytes accessed — the counters
+    ``repro.roofline.analysis`` builds its model on), then derives
+    arithmetic intensity and, given a measured wall time, the achieved
+    bandwidth/compute as fractions of the chip peaks.  The peak constants
+    are the TPU-v5e roofline of DESIGN.md §9; off-TPU the achieved
+    fractions are still comparable run-over-run, they just don't describe
+    this host's silicon.  Returns ``None`` when roofline mode is off, and
+    an ``{"error": ...}`` stub when the backend can't cost-analyze.
+    """
+    if not _ROOFLINE:
+        return None
+    from repro.roofline.analysis import HBM_BW, PEAK_FLOPS
+    try:
+        compiled = jax.jit(fn).lower(*args).compile()
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
+        flops = float(ca.get("flops", 0.0) or 0.0)
+        nbytes = float(ca.get("bytes accessed", 0.0) or 0.0)
+    except Exception as e:  # noqa: BLE001 — backend-dependent surface
+        return {"error": f"{type(e).__name__}: {e}"}
+    out = {
+        "hlo_flops": flops,
+        "hlo_bytes": nbytes,
+        "arithmetic_intensity": flops / nbytes if nbytes else 0.0,
+        "peak_flops": PEAK_FLOPS,
+        "peak_bw": HBM_BW,
+    }
+    if measured is not None and float(measured) > 0:
+        sec = float(measured) * 1e-6
+        out["achieved_gflops"] = flops / sec / 1e9
+        out["achieved_gbps"] = nbytes / sec / 1e9
+        out["flops_peak_fraction"] = flops / sec / PEAK_FLOPS
+        out["bw_peak_fraction"] = nbytes / sec / HBM_BW
+        out["bound"] = ("compute" if flops / PEAK_FLOPS > nbytes / HBM_BW
+                        else "memory")
+    return out
+
+
 # Global repetition override, set by ``run.py --repeats N`` (PR 1 measured
 # ~2x wall-clock noise on this box; medians over more repeats tighten every
 # gate the same way, so one flag governs all suites).

@@ -25,7 +25,7 @@ from . import (allpairs_throughput, common, construction_throughput,
                degraded_serving, fig3_synthetic_ip, fig4_binary,
                fig5_endbiased, fig6_join_corr, fig7_runtime, fig9_textsim,
                fig10_joinsize, matrix_product, merge_throughput,
-               table2_realworld)
+               table2_realworld, topk_discovery)
 
 MODULES = [
     ("fig3_synthetic_ip", fig3_synthetic_ip),
@@ -37,6 +37,7 @@ MODULES = [
     ("fig9_textsim", fig9_textsim),
     ("fig10_joinsize", fig10_joinsize),
     ("allpairs_throughput", allpairs_throughput),
+    ("topk_discovery", topk_discovery),
     ("construction_throughput", construction_throughput),
     ("merge_throughput", merge_throughput),
     ("matrix_product", matrix_product),
@@ -97,8 +98,13 @@ def main() -> None:
     ap.add_argument("--json-out", default=None,
                     help="also write all rows to this JSON file (merging "
                          "into an existing artifact)")
+    ap.add_argument("--roofline", action="store_true",
+                    help="opt-in HLO-level roofline accounting: modules "
+                         "that support it attach FLOPs/bytes + achieved-"
+                         "vs-peak fractions to their rows (DESIGN.md §9)")
     args = ap.parse_args()
     common.set_repeats(args.repeats)
+    common.set_roofline(args.roofline)
     print("name,us_per_call,derived")
     failures = []
     all_rows = []

@@ -1,0 +1,252 @@
+"""Streaming top-k discovery benchmark + acceptance gate (DESIGN.md §17).
+
+The discovery workload of Section 1 — "which pairs of columns across
+unjoined tables are most correlated" — at a corpus size where the dense
+all-pairs route stops being a sane baseline: D=4096 (quick) needs a 67 MB
+(D, D) estimate matrix and ~1.7e13 bucket compares, while the pruned
+engine touches a handful of 64x64 tiles and O(D m) bytes.
+
+Ground truth is computed EXACTLY (same estimator algebra as the kernels:
+``sum v_a v_b max(1/p_a, 1/p_b)`` over shared coordinates of the same
+bucketized arrays) but host-side by coordinate grouping — cost
+``sum_i l_i^2`` over coordinate occurrence lists instead of D^2 B S^2 —
+because the dense reference formulation at this scale would need
+(D, D, B) intermediates.  The baseline deliberately holds the full (D, D)
+matrix: that contrast (67 MB vs the engine's O(D m) working set) is the
+point of the gate.
+
+Gates (ISSUE PR 7 acceptance):
+  - top-10 recall >= 0.95 vs the exhaustive estimates (the admissible
+    ceiling makes pruning lossless, so this lands at exactly 1.0)
+  - >= 5x fewer tile-kernel launches than an unpruned full tile scan
+  - peak scan working set O(D m), asserted in-run against both a fixed
+    bytes-per-sample budget and the dense matrix it must stay under
+
+Standalone:
+    PYTHONPATH=src python -m benchmarks.topk_discovery --json-out BENCH_topk.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketches import INVALID_IDX
+from repro.kernels import estimate_tile_rows, slot_inclusion_probs
+from repro.serve import DiscoveryEngine, SketchIndex
+
+from .common import Csv, roofline_stats, set_roofline, time_callable
+
+# D, universe n, budget m, bucket layout, scan tile, k
+QUICK = dict(D=4096, n=16384, m=256, n_buckets=256, slots=2, tile=64, k=10)
+FULL = dict(D=8192, n=16384, m=256, n_buckets=256, slots=2, tile=64, k=10)
+
+MIN_RECALL = 0.95
+MIN_LAUNCH_REDUCTION = 5.0
+# peak working set must stay under this many bytes per stored sample
+# (corpus blocks are 3 f32 arrays over B*S = 2m slots -> 24 B/sample, plus
+# summaries/ceiling-table/tile-buffer headroom) AND under the dense (D, D)
+# f32 matrix the engine exists to avoid
+MAX_BYTES_PER_SAMPLE = 40
+
+ZIPF_EXPONENT = 1.5   # heavy-tailed column norms (the discovery regime)
+N_PLANTED = 12        # correlated pairs planted among the top columns
+
+
+def _corpus(rng, D: int, n: int) -> np.ndarray:
+    scales = (np.arange(1, D + 1, dtype=np.float32) ** -ZIPF_EXPONENT) * 8.0
+    X = rng.standard_normal((D, n), dtype=np.float32) * scales[:, None]
+    for i in range(N_PLANTED):
+        a, b = 2 * i, 2 * i + 1
+        X[b] = 0.9 * X[a] + \
+            0.3 * scales[b] * rng.standard_normal(n).astype(np.float32)
+    return X
+
+
+def _exhaustive_host(index: SketchIndex) -> np.ndarray:
+    """All (D, D) estimates of the index's bucketized corpus, exactly, by
+    grouping kept entries per coordinate (each pair's shared coordinates
+    meet in one group; ``est += v_a v_b max(1/p_a, 1/p_b)``)."""
+    c = index._corpus()
+    idx = np.asarray(c.idx)
+    val = np.asarray(c.val)
+    p = np.asarray(slot_inclusion_probs(c))
+    D = len(index)
+    idx, val, p = idx[:D], val[:D], p[:D]
+    flat = idx.reshape(D, -1)
+    cols, slot = np.nonzero(flat != INVALID_IDX)
+    coord = flat[cols, slot]
+    v = val.reshape(D, -1)[cols, slot]
+    r = 1.0 / p.reshape(D, -1)[cols, slot]
+    order = np.argsort(coord, kind="stable")
+    coord, cols, v, r = coord[order], cols[order], v[order], r[order]
+    starts = np.flatnonzero(np.r_[True, coord[1:] != coord[:-1]])
+    ends = np.r_[starts[1:], coord.size]
+    est = np.zeros((D, D), np.float32)
+    for s, e in zip(starts, ends):
+        if e - s < 2:
+            continue
+        cs, vs, rs = cols[s:e], v[s:e], r[s:e]
+        contrib = np.outer(vs, vs) * np.maximum(rs[:, None], rs[None, :])
+        est[np.ix_(cs, cs)] += contrib.astype(np.float32)
+    np.fill_diagonal(est, 0.0)
+    return est
+
+
+def _true_top_k(est: np.ndarray, k: int):
+    iu, ju = np.triu_indices(est.shape[0], k=1)
+    vals = est[iu, ju]
+    order = np.lexsort((ju, iu, -vals))[:k]
+    return [(int(iu[o]), int(ju[o]), float(vals[o])) for o in order]
+
+
+def _bench_point(cfg: dict) -> dict:
+    D, n, m, k = cfg["D"], cfg["n"], cfg["m"], cfg["k"]
+    rng = np.random.default_rng(D)
+    X = _corpus(rng, D, n)
+    index = SketchIndex(m=m, n_buckets=cfg["n_buckets"], slots=cfg["slots"],
+                        initial_capacity=D)
+    t0 = time.perf_counter()
+    index.add_many([f"c{i}" for i in range(D)], X)
+    build_s = time.perf_counter() - t0
+    del X
+
+    t0 = time.perf_counter()
+    est = _exhaustive_host(index)
+    exhaustive_s = time.perf_counter() - t0
+    truth = _true_top_k(est, k)
+    dense_bytes = est.nbytes
+    del est
+
+    engine = DiscoveryEngine(index, tile=cfg["tile"])
+    t0 = time.perf_counter()
+    res = engine.top_pairs(k=k)
+    scan_s = time.perf_counter() - t0
+    stats = res.stats
+
+    name_id = lambda nm: int(nm[1:])
+    got = {(name_id(a), name_id(b)) for a, b, _ in res.items}
+    want = {(a, b) for a, b, _ in truth}
+    recall = len(got & want) / k
+
+    full_launches = stats.tiles_total     # unpruned scan = every tile pair
+    reduction = full_launches / max(stats.kernel_launches, 1)
+
+    # O(D m) memory contract, asserted in-run: the scan's peak working set
+    # stays under a fixed per-sample byte budget (independent of D) and
+    # strictly under the dense matrix the baseline had to hold
+    budget = MAX_BYTES_PER_SAMPLE * D * m
+    assert stats.peak_bytes <= budget, \
+        f"scan peak {stats.peak_bytes} B exceeds O(D m) budget {budget} B"
+    assert stats.peak_bytes < dense_bytes, \
+        f"scan peak {stats.peak_bytes} B not under dense {dense_bytes} B"
+
+    # query-path point (cheap: T corpus tiles, one query)
+    qres = engine.top_k_for_query(np.asarray(
+        rng.standard_normal(n), np.float32), k=k)
+
+    out = {
+        "D": D, "n": n, "m": m, "n_buckets": cfg["n_buckets"],
+        "slots": cfg["slots"], "tile": cfg["tile"], "k": k,
+        "build_s": build_s,
+        "exhaustive_s": exhaustive_s,
+        "scan_s": scan_s,
+        "recall": recall,
+        "tiles_total": stats.tiles_total,
+        "tiles_launched": stats.tiles_launched,
+        "kernel_launches": stats.kernel_launches,
+        "launch_reduction": reduction,
+        "threshold": stats.threshold,
+        "peak_bytes": stats.peak_bytes,
+        "dense_bytes": dense_bytes,
+        "peak_budget_bytes": budget,
+        "query_tiles_pruned": qres.stats.tiles_pruned,
+        "query_tiles_total": qres.stats.tiles_total,
+        "top_pairs": [(a, b, e) for a, b, e in res.items],
+    }
+    # roofline of one tile-kernel launch (the scan's inner loop)
+    c = index._corpus()
+    probs = slot_inclusion_probs(c)
+    rows = jnp.arange(cfg["tile"], dtype=jnp.int32)
+    tile_fn = lambda *a: estimate_tile_rows(*a, use_pallas=engine._use_pallas)
+    tile_args = (c.idx, c.val, probs, c.idx, c.val, probs, rows, rows)
+    roof = roofline_stats(tile_fn, *tile_args,
+                          measured=time_callable(tile_fn, *tile_args,
+                                                 n_rep=3, warmup=1))
+    if roof is not None:
+        out["roofline"] = roof
+    return out
+
+
+def run(quick: bool = True) -> Csv:
+    csv = Csv()
+    cfg = QUICK if quick else FULL
+    r = _bench_point(cfg)
+    tag = f"topk/D{r['D']}_m{r['m']}_t{r['tile']}"
+    derived = (f"recall={r['recall']:.3f}"
+               f";launches={r['kernel_launches']}/{r['tiles_total']}"
+               f";reduction={r['launch_reduction']:.1f}x"
+               f";peak_mb={r['peak_bytes'] / 1e6:.1f}"
+               f";dense_mb={r['dense_bytes'] / 1e6:.1f}")
+    roof = r.get("roofline")
+    if roof and "bw_peak_fraction" in roof:
+        derived += (f";bw_peak_frac={roof['bw_peak_fraction']:.4f}"
+                    f";bound={roof['bound']}")
+    csv.add(f"{tag}/scan", r["scan_s"] * 1e6, derived)
+    csv.add(f"{tag}/exhaustive_baseline", r["exhaustive_s"] * 1e6,
+            f"pairs={r['D'] * (r['D'] - 1) // 2}")
+    csv.add("topk/validate/recall_ge_095", 0.0,
+            f"{'PASS' if r['recall'] >= MIN_RECALL else 'FAIL'}"
+            f";recall={r['recall']:.3f}")
+    csv.add("topk/validate/launch_reduction_ge_5x", 0.0,
+            f"{'PASS' if r['launch_reduction'] >= MIN_LAUNCH_REDUCTION else 'FAIL'}"
+            f";reduction={r['launch_reduction']:.1f}x")
+    ok_mem = (r["peak_bytes"] <= r["peak_budget_bytes"]
+              and r["peak_bytes"] < r["dense_bytes"])
+    csv.add("topk/validate/memory_O_Dm", 0.0,
+            f"{'PASS' if ok_mem else 'FAIL'}"
+            f";peak={r['peak_bytes']};budget={r['peak_budget_bytes']}"
+            f";dense={r['dense_bytes']}")
+    csv.results = [r]
+    return csv
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--json-out", default="BENCH_topk.json")
+    ap.add_argument("--roofline", action="store_true",
+                    help="attach HLO FLOPs/bytes + achieved-vs-peak "
+                         "fractions for the tile kernel (DESIGN.md §9)")
+    args = ap.parse_args()
+    set_roofline(args.roofline)
+    print("name,us_per_call,derived")
+    csv = run(quick=not args.full)
+    payload = {
+        "benchmark": "topk_discovery",
+        "backend": jax.default_backend(),
+        "gates": {"min_recall": MIN_RECALL,
+                  "min_launch_reduction": MIN_LAUNCH_REDUCTION,
+                  "max_bytes_per_sample": MAX_BYTES_PER_SAMPLE},
+        "points": csv.results,
+        "rows": [{"name": n, "us_per_call": float(u), "derived": d}
+                 for n, u, d in csv.rows],
+    }
+    with open(args.json_out, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {args.json_out}")
+    failures = [(n, d) for n, _, d in csv.rows
+                if "/validate/" in n and "FAIL" in d]
+    if failures:
+        print(f"# VALIDATION FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

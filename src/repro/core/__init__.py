@@ -36,8 +36,10 @@ from .baselines import (MinHashSketch, WMHSketch, countsketch,
 from .batched import estimate_all_pairs, estimate_query, sketch_corpus
 from .merge import (PartitionStats, merge_combined_sketches, merge_sketches,
                     merge_sketches_many, merge_stats, partition_stats)
-from .variance import (chebyshev_interval, coverage_fraction, error_guarantee,
-                       linear_sketch_error, sketch_size_high_prob,
+from .variance import (chebyshev_estimate_ceiling, chebyshev_interval,
+                       coverage_fraction, error_guarantee,
+                       linear_sketch_error, pair_estimate_ceiling,
+                       rescaled_kept_norms, sketch_size_high_prob,
                        surviving_corpus_bound, variance_bound)
 
 __all__ = [
@@ -56,7 +58,8 @@ __all__ = [
     "estimate_all_pairs", "estimate_query", "sketch_corpus",
     "PartitionStats", "merge_combined_sketches", "merge_sketches",
     "merge_sketches_many", "merge_stats", "partition_stats",
-    "chebyshev_interval", "coverage_fraction", "error_guarantee",
-    "linear_sketch_error", "sketch_size_high_prob",
+    "chebyshev_estimate_ceiling", "chebyshev_interval", "coverage_fraction",
+    "error_guarantee", "linear_sketch_error", "pair_estimate_ceiling",
+    "rescaled_kept_norms", "sketch_size_high_prob",
     "surviving_corpus_bound", "variance_bound",
 ]

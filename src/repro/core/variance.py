@@ -93,6 +93,74 @@ def surviving_corpus_bound(surv_a2, surv_b2, lost_a2, lost_b2, m: int,
     return sampling, lost, sampling + lost
 
 
+def rescaled_kept_norms(val, tau, *, sample_ndim: int = 2):
+    """Per-sketch summary scalars for the discovery tile-ceiling bound
+    (DESIGN.md §17): given kept values ``val`` whose trailing
+    ``sample_ndim`` axes enumerate samples (2 for the bucketized ``(B, S)``
+    layout, 1 for a flat ``(cap,)`` sketch; leading axes batch) and the
+    sketch's ``tau`` (scalar or matching leading dims), returns
+
+    - ``G = sqrt(sum_i a_i^2 / p_i^2)`` with ``p_i = min(1, tau a_i^2)``,
+      the *rescaled* kept norm — the l2 norm of the worst-case per-entry
+      estimator contributions ``|a_i| / p_i``;
+    - ``N = sqrt(sum_i a_i^2)``, the plain kept norm (``N <= G``).
+
+    Padding slots (``val == 0``) contribute nothing to either.  These two
+    scalars are all :func:`pair_estimate_ceiling` needs, so an index can
+    maintain them incrementally per ingested row.
+    """
+    val = jnp.asarray(val, jnp.float32)
+    w = val * val
+    axes = tuple(range(val.ndim - sample_ndim, val.ndim))
+    tau = jnp.reshape(jnp.asarray(tau, jnp.float32),
+                      jnp.shape(tau) + (1,) * sample_ndim)
+    p = jnp.where(w > 0, jnp.minimum(1.0, tau * w), 1.0)
+    G = jnp.sqrt(jnp.sum(w / (p * p), axis=axes))
+    N = jnp.sqrt(jnp.sum(w, axis=axes))
+    return G, N
+
+
+def pair_estimate_ceiling(g_a, n_a, g_b, n_b):
+    """Deterministic (admissible) ceiling on the sampling estimator for any
+    pair drawn from sketches with rescaled/plain kept norms ``(g_a, n_a)``
+    and ``(g_b, n_b)`` (DESIGN.md §17).
+
+    The estimate is ``sum_{i in match} a_i b_i / min(p_a(i), p_b(i))`` and
+    ``1/min(p_a, p_b) = max(1/p_a, 1/p_b)``, so two Cauchy-Schwarz splits
+    give two simultaneous bounds on its absolute value:
+
+    - ``max(x, y) <= x * y`` for ``x, y >= 1``:  ``|est| <= G_a G_b``;
+    - ``max(x, y) <= x + y``:                    ``|est| <= G_a N_b + N_a G_b``.
+
+    Both hold for every realization of the sketch (not just in
+    expectation), so ``min`` of the two is a lossless pruning certificate:
+    no pair can ever produce an estimate above it.  Inputs broadcast — feed
+    per-tile maxima to get per-tile ceilings.
+    """
+    g_a, n_a = jnp.asarray(g_a), jnp.asarray(n_a)
+    g_b, n_b = jnp.asarray(g_b), jnp.asarray(n_b)
+    return jnp.minimum(g_a * g_b, g_a * n_b + n_a * g_b)
+
+
+def chebyshev_estimate_ceiling(n_a, n_b, m: int, delta: float = 0.05, *,
+                               method: str = "priority"):
+    """Theorem-3-style *probabilistic* ceiling on an estimate: with
+    probability ``>= 1 - delta`` (per pair),
+
+        ``|est| <= |<a, b>| + dev <= N_a N_b (1 + sqrt(lead / delta))``
+
+    using Cauchy-Schwarz on the true inner product and the Chebyshev
+    deviation from the Theorem 1/3 variance bound (conservative
+    ``||a_I|| <= ||a||`` form).  Tighter than
+    :func:`pair_estimate_ceiling` when ``G >> N``, but NOT admissible — a
+    true top-k pair is pruned with probability up to ``delta``; the
+    discovery engine uses it only when the caller opts out of lossless
+    pruning (DESIGN.md §17).
+    """
+    lead = 2.0 / m if method == "threshold" else 2.0 / max(m - 1, 1)
+    return jnp.asarray(n_a) * jnp.asarray(n_b) * (1.0 + (lead / delta) ** 0.5)
+
+
 def coverage_fraction(surv_mass, lost_mass):
     """Fraction of (squared-norm) mass served by the surviving shards:
     ``surv / (surv + lost)``; 1.0 for an empty corpus (nothing to lose)."""

@@ -40,6 +40,7 @@ from .intersect_estimate import (MOMENT_CHANNELS, BucketizedSketch,
                                  bucketize, bucketize_corpus,
                                  bucketize_payloads,
                                  estimate_all_pairs_bucketized,
+                                 estimate_tile_rows,
                                  intersect_estimate_ref, query_corpus,
                                  round_up_pow2, slot_inclusion_probs)
 
@@ -57,6 +58,7 @@ __all__ = [
     "jl_project", "jl_ref",
     "BucketizedSketch", "bucketize", "bucketize_corpus", "bucketize_payloads",
     "intersect_estimate_ref", "query_corpus", "allpairs_estimate_ref",
-    "estimate_all_pairs_bucketized", "allpairs_moments",
+    "estimate_all_pairs_bucketized", "estimate_tile_rows",
+    "allpairs_moments",
     "slot_inclusion_probs", "round_up_pow2", "MOMENT_CHANNELS",
 ]

@@ -141,13 +141,18 @@ def _pad_rows(idx, val, p, tile: int):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("moments", "qt", "ct", "use_pallas"))
+                   static_argnames=("moments", "qt", "ct", "use_pallas",
+                                    "ref_chunk"))
 def _allpairs_dispatch(a_idx, a_val, a_p, b_idx, b_val, b_p, *,
-                       moments: bool, qt: int, ct: int, use_pallas: bool):
+                       moments: bool, qt: int, ct: int, use_pallas: bool,
+                       ref_chunk: int | None = None):
     D1, D2 = a_idx.shape[0], b_idx.shape[0]
     if not use_pallas:
-        return allpairs_estimate_ref(a_idx, a_val, a_p, b_idx, b_val, b_p,
-                                     moments=moments)
+        if ref_chunk:
+            b_idx, b_val, b_p = _pad_rows(b_idx, b_val, b_p, ref_chunk)
+        out = allpairs_estimate_ref(a_idx, a_val, a_p, b_idx, b_val, b_p,
+                                    moments=moments, ct=ref_chunk)
+        return out[:D1, :D2]
     ai, av, ap = _pad_rows(a_idx, a_val, a_p, qt)
     bi, bv, bp = _pad_rows(b_idx, b_val, b_p, ct)
     out = allpairs_estimate_pallas(ai, av, ap, bi, bv, bp, qt=qt, ct=ct,
@@ -158,18 +163,47 @@ def _allpairs_dispatch(a_idx, a_val, a_p, b_idx, b_val, b_p, *,
 
 def estimate_all_pairs_bucketized(A: BucketizedSketch, B: BucketizedSketch, *,
                                   variant: str = "l2", qt: int = QT,
-                                  ct: int = CT,
+                                  ct: int = CT, ref_chunk: int | None = None,
                                   use_pallas: bool = True) -> jnp.ndarray:
     """(D1, B, S) x (D2, B, S) bucketized corpora -> (D1, D2) estimates.
 
     One tiled kernel launch (or the fused XLA reference when
-    ``use_pallas=False``) instead of D1*D2 searchsorted joins.
+    ``use_pallas=False``) instead of D1*D2 searchsorted joins.  ``qt``/``ct``
+    tile the Pallas grid; ``ref_chunk`` chunks the reference path's corpus
+    dimension the same way (peak intermediates (D1, ref_chunk, B) instead of
+    (D1, D2, B) — the knob the allpairs benchmark tunes per layout,
+    DESIGN.md §17).
     """
     a_p = slot_inclusion_probs(A, variant=variant)
     b_p = slot_inclusion_probs(B, variant=variant)
     return _allpairs_dispatch(A.idx, A.val, a_p, B.idx, B.val, b_p,
                               moments=False, qt=qt, ct=ct,
-                              use_pallas=use_pallas)
+                              ref_chunk=ref_chunk, use_pallas=use_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def estimate_tile_rows(a_idx, a_val, a_p, b_idx, b_val, b_p,
+                       rows_a, rows_b, *, use_pallas: bool = True):
+    """Estimate one (tq, tc) tile of the all-pairs matrix from *gathered*
+    row subsets of two bucketized corpora — the discovery engine's
+    tile-subset launch path (DESIGN.md §17).
+
+    ``rows_a`` (tq,) / ``rows_b`` (tc,) are row ids into the (D, B, S)
+    corpus arrays; out-of-range ids clamp (callers pad short tiles with any
+    id and mask host-side).  The tile shapes are static, so every tile of a
+    scan reuses one compiled launch regardless of *which* rows it gathers —
+    that is what lets the engine visit an arbitrary, bound-ordered subset
+    of tiles without recompiling or materializing the (D1, D2) matrix.
+    """
+    gather = lambda arr, rows: jnp.take(arr, rows, axis=0, mode="clip")
+    ai, av, ap = (gather(x, rows_a) for x in (a_idx, a_val, a_p))
+    bi, bv, bp = (gather(x, rows_b) for x in (b_idx, b_val, b_p))
+    tq, tc = rows_a.shape[0], rows_b.shape[0]
+    if not use_pallas:
+        return allpairs_estimate_ref(ai, av, ap, bi, bv, bp)
+    return allpairs_estimate_pallas(ai, av, ap, bi, bv, bp,
+                                    qt=min(QT, tq), ct=min(CT, tc),
+                                    interpret=_use_interpret())
 
 
 def allpairs_moments(a_idx, a_val, a_p, b_idx, b_val, b_p, *, qt: int = QT,

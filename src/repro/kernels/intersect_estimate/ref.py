@@ -3,10 +3,14 @@
 ``allpairs_estimate_ref`` doubles as the fast XLA-compiled CPU path for the
 all-pairs workload: the static S x S slot loop over dense (D1, D2, B)
 compares fuses into elementwise/reduce ops, with no per-pair searchsorted
-gathers (DESIGN.md §12).
+gathers (DESIGN.md §12).  ``ct`` chunks the corpus dimension so peak
+intermediates shrink from (D1, D2, B) to (D1, ct, B) — the CPU analogue of
+the Pallas kernel's corpus tile, and the knob the allpairs benchmark sweeps
+per (B, S) point (DESIGN.md §17).
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -31,7 +35,8 @@ def intersect_estimate_ref(q_idx, q_val, q_tau, c_idx, c_val, c_tau) -> jnp.ndar
 
 
 def allpairs_estimate_ref(a_idx, a_val, a_p, b_idx, b_val, b_p, *,
-                          moments: bool = False) -> jnp.ndarray:
+                          moments: bool = False,
+                          ct: int | None = None) -> jnp.ndarray:
     """Same math as ``allpairs_estimate_pallas``: (D1,B,S) x (D2,B,S) corpora
     with precomputed per-slot inclusion probs -> (D1, D2) estimates, or
     (D1, D2, 6) co-moment channels when ``moments=True``.
@@ -42,7 +47,24 @@ def allpairs_estimate_ref(a_idx, a_val, a_p, b_idx, b_val, b_p, *,
     hoisted out of the loop (1/min(pa, pb) == max(1/pa, 1/pb)) and padding
     remapped to distinct negative sentinels (real indices are >= 0) so the
     loop needs no validity mask (DESIGN.md §12).
+
+    ``ct`` (must divide D2) additionally chunks the corpus side with a
+    sequential ``lax.map``: peak intermediates drop to (D1, ct, B), which is
+    what keeps the B * S^2 working set cache-resident for the wide layouts
+    (S=4) where the one-shot formulation goes memory-bound (DESIGN.md §17).
     """
+    if ct is not None and ct < b_idx.shape[0]:
+        if b_idx.shape[0] % ct:
+            raise ValueError(f"ct={ct} must divide D2={b_idx.shape[0]}")
+        nc = b_idx.shape[0] // ct
+        chunked = lambda arr: arr.reshape((nc, ct) + arr.shape[1:])
+        out = jax.lax.map(
+            lambda b: allpairs_estimate_ref(a_idx, a_val, a_p, *b,
+                                            moments=moments),
+            (chunked(b_idx), chunked(b_val), chunked(b_p)))
+        # (nc, D1, ct[, 6]) -> (D1, nc * ct[, 6])
+        out = jnp.moveaxis(out, 0, 1)
+        return out.reshape((out.shape[0], nc * ct) + out.shape[3:])
     av = a_val.astype(jnp.float32)
     bv = b_val.astype(jnp.float32)
     ar = 1.0 / a_p

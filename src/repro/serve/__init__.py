@@ -1,6 +1,9 @@
-"""Serving: batched LM engine + sketch index service + resilience layer."""
+"""Serving: batched LM engine + sketch index service + resilience layer +
+bound-pruned streaming top-k discovery."""
 from .engine import Engine, Request
 from .sketch_service import MatrixSketchStore, ShardedSketchIndex, SketchIndex
+from .discovery import (DiscoveryEngine, DiscoveryResult, ScanStats,
+                        ShardedDiscoveryEngine, TileSummaries)
 from .resilience import (DegradedResult, DegradedServiceError,
                          DurableSketchIndex, IngestJournal, ResilienceError,
                          ResilientMatrixStore, ResilientSketchIndex,
@@ -11,6 +14,8 @@ from .resilience import (DegradedResult, DegradedServiceError,
 
 __all__ = ["Engine", "Request", "MatrixSketchStore", "ShardedSketchIndex",
            "SketchIndex",
+           "DiscoveryEngine", "DiscoveryResult", "ScanStats",
+           "ShardedDiscoveryEngine", "TileSummaries",
            "DegradedResult", "DegradedServiceError", "DurableSketchIndex",
            "IngestJournal", "ResilienceError", "ResilientMatrixStore",
            "ResilientSketchIndex", "RetryPolicy", "ShardDownError",

@@ -38,6 +38,44 @@ from repro.matrix import (MatrixSketch, estimate_matrix_product,
                           estimate_matrix_products, priority_matrix_sketch)
 
 
+def _row_summaries(val: np.ndarray, tau: np.ndarray):
+    """Numpy twin of :func:`repro.core.variance.rescaled_kept_norms` for the
+    ingest path: (R, B, S) values + (R,) taus -> per-row (G, N) ceiling
+    summaries (DESIGN.md §17) without a device round-trip per add."""
+    w = np.asarray(val, np.float32) ** 2
+    tw = np.multiply(np.asarray(tau, np.float32)[:, None, None], w,
+                     where=w > 0, out=np.ones_like(w))  # inf tau * 0 pad
+    p = np.where(w > 0, np.minimum(1.0, tw), 1.0)
+    g = np.sqrt(np.sum(w / (p * p), axis=(1, 2)))
+    n = np.sqrt(np.sum(w, axis=(1, 2)))
+    return g.astype(np.float32), n.astype(np.float32)
+
+
+def _top_k_desc(est: np.ndarray, k: int) -> np.ndarray:
+    """Indices of the ``k`` largest entries, descending, via partial
+    selection (``np.argpartition``) — O(D + k log k), not a full O(D log D)
+    sort of every estimate.  Deterministic tie contract: equal scores rank
+    by ascending index, including ties that straddle the selection
+    boundary (DESIGN.md §17)."""
+    D = est.shape[0]
+    k = min(int(k), D)
+    if k <= 0:
+        return np.empty((0,), np.int64)
+    if k < D:
+        part = np.argpartition(-est, k - 1)[:k]
+        kth = est[part].min()
+        # argpartition breaks boundary ties arbitrarily: rebuild the
+        # selection as (everything strictly above the kth value) + (ties at
+        # the kth value, lowest index first)
+        above = np.flatnonzero(est > kth)
+        tied = np.flatnonzero(est == kth)
+        sel = np.concatenate([above, tied[: k - above.size]])
+    else:
+        sel = np.arange(D)
+    # lexsort: primary descending score, secondary ascending index
+    return sel[np.lexsort((sel, -est[sel]))]
+
+
 class SketchIndex:
     """Incremental priority-sketch index.
 
@@ -70,6 +108,13 @@ class SketchIndex:
         self._tau = np.ones((self._cap,), np.float32)
         self._dropped = np.zeros((self._cap,), np.int32)
         self._device_corpus: Optional[BucketizedSketch] = None
+        # discovery ceiling summaries (DESIGN.md §17): per-row rescaled /
+        # plain kept norms, maintained incrementally per touched row
+        self._g = np.zeros((self._cap,), np.float32)
+        self._kn = np.zeros((self._cap,), np.float32)
+        self._stats_epoch = 0
+        self._stats_rows_computed = 0  # introspection: dirty-row accounting
+        self._discovery = None         # lazy DiscoveryEngine (tile caches)
 
     def __len__(self):
         return len(self._names)
@@ -95,7 +140,32 @@ class SketchIndex:
         self._val = extend(self._val, 0)
         self._tau = extend(self._tau, 1)
         self._dropped = extend(self._dropped, 0)
+        self._g = extend(self._g, 0)
+        self._kn = extend(self._kn, 0)
         self._cap = new_cap
+
+    def _refresh_row_stats(self, lo: int, hi: int) -> None:
+        """Recompute the ceiling summaries for rows [lo, hi) only — the
+        dirty-row half of DESIGN.md §17's invalidation contract (tile maxima
+        refresh lazily in :class:`repro.serve.discovery.TileSummaries`)."""
+        if hi <= lo:
+            return
+        self._g[lo:hi], self._kn[lo:hi] = _row_summaries(
+            self._val[lo:hi], self._tau[lo:hi])
+        self._stats_rows_computed += hi - lo
+        self._stats_epoch += 1
+
+    def row_summaries(self):
+        """Current per-row (G, N) ceiling summaries over the occupied
+        prefix (read-only views; see DESIGN.md §17)."""
+        D = len(self._names)
+        return self._g[:D], self._kn[:D]
+
+    @property
+    def summary_epoch(self) -> int:
+        """Bumps on every mutation that touches row summaries; consumers
+        (tile-maxima caches) skip refresh entirely when unchanged."""
+        return self._stats_epoch
 
     def add(self, name, vector: Optional[np.ndarray] = None, *,
             indices: Optional[np.ndarray] = None,
@@ -139,6 +209,7 @@ class SketchIndex:
         self._dropped[d] = int(b.dropped)
         self._names.append(name)
         self._name_set.add(name)
+        self._refresh_row_stats(d, d + 1)
         self._device_corpus = None  # re-upload (not re-bucketize) lazily
 
     def add_many(self, names: Sequence, matrix: np.ndarray) -> None:
@@ -174,6 +245,7 @@ class SketchIndex:
         self._dropped[d0:d0 + D] = np.asarray(bc.dropped)
         self._names.extend(names)
         self._name_set.update(names)
+        self._refresh_row_stats(d0, d0 + D)
         self._device_corpus = None
 
     def _rollback_last(self, k: int) -> None:
@@ -189,6 +261,9 @@ class SketchIndex:
             self._val[d] = 0
             self._tau[d] = 1
             self._dropped[d] = 0
+            self._g[d] = 0
+            self._kn[d] = 0
+        self._stats_epoch += 1
         self._device_corpus = None
 
     def _corpus(self) -> BucketizedSketch:
@@ -215,7 +290,7 @@ class SketchIndex:
         est = np.asarray(query_corpus(q, self._corpus()))[: len(self._names)]
         if top_k is None:
             return list(zip(self._names, est.tolist()))
-        order = np.argsort(-est)[:top_k]
+        order = _top_k_desc(est, top_k)
         return [(self._names[i], float(est[i])) for i in order]
 
     def all_pairs(self, *, use_pallas: bool = True) -> np.ndarray:
@@ -226,6 +301,24 @@ class SketchIndex:
             c, c, use_pallas=use_pallas))
         D = len(self._names)
         return est[:D, :D]
+
+    def top_pairs(self, k: int = 10, **kw):
+        """Streaming top-k most-similar pairs via the bound-pruned tile
+        scan — O(D m) working set, never the (D, D) matrix (DESIGN.md §17).
+        Returns a :class:`repro.serve.discovery.DiscoveryResult`."""
+        from repro.serve.discovery import DiscoveryEngine
+        if self._discovery is None:
+            self._discovery = DiscoveryEngine(self)
+        return self._discovery.top_pairs(k, **kw)
+
+    def top_k_for_query(self, vector: np.ndarray, k: int = 10, **kw):
+        """Bound-pruned top-k scan of one query against the corpus: corpus
+        tiles whose ceiling falls below the running k-th score are never
+        launched (DESIGN.md §17)."""
+        from repro.serve.discovery import DiscoveryEngine
+        if self._discovery is None:
+            self._discovery = DiscoveryEngine(self)
+        return self._discovery.top_k_for_query(vector, k, **kw)
 
     def merge_from(self, other: "SketchIndex") -> None:
         """Merge a partition-peer index into this one, row by row, without
@@ -260,6 +353,8 @@ class SketchIndex:
         self._val[:D] = np.asarray(merged.val)
         self._tau[:D] = np.asarray(merged.tau)
         self._dropped[:D] = np.asarray(merged.dropped)
+        # every row's kept set / tau changed: all D rows are dirty
+        self._refresh_row_stats(0, D)
         self._device_corpus = None
 
 
@@ -443,6 +538,7 @@ class ShardedSketchIndex:
                         for _ in range(num_shards)]
         self._names: list = []
         self._homes: list = []   # global row -> (shard, row-in-shard)
+        self._discovery = None   # lazy ShardedDiscoveryEngine
 
     def __len__(self):
         return len(self._names)
@@ -503,7 +599,7 @@ class ShardedSketchIndex:
             est[g] = per[s][r][1]
         if top_k is None:
             return list(zip(self._names, est.tolist()))
-        order = np.argsort(-est)[:top_k]
+        order = _top_k_desc(est, top_k)
         return [(self._names[i], float(est[i])) for i in order]
 
     def all_pairs(self, *, use_pallas: bool = True) -> np.ndarray:
@@ -526,3 +622,21 @@ class ShardedSketchIndex:
                 out[np.ix_(gids[i], gids[j])] = \
                     blk[: len(gids[i]), : len(gids[j])]
         return out
+
+    def top_pairs(self, k: int = 10, **kw):
+        """Global top-k pairs via guarded async fan-out of bound-pruned
+        scans over shard pairs, partial heaps merged at the coordinator; a
+        shard that fails its retries degrades the answer instead of
+        stalling it (DESIGN.md §16, §17)."""
+        from repro.serve.discovery import ShardedDiscoveryEngine
+        if self._discovery is None:
+            self._discovery = ShardedDiscoveryEngine(self)
+        return self._discovery.top_pairs(k, **kw)
+
+    def top_k_for_query(self, vector: np.ndarray, k: int = 10, **kw):
+        """Top-k estimates for one query via per-shard pruned scans merged
+        at the coordinator (DESIGN.md §17)."""
+        from repro.serve.discovery import ShardedDiscoveryEngine
+        if self._discovery is None:
+            self._discovery = ShardedDiscoveryEngine(self)
+        return self._discovery.top_k_for_query(vector, k, **kw)
