@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Regenerate the golden regression fixtures under tests/golden/.
+
+Each fixture freezes the *bits* of a public-API result (builds, merges,
+estimates, bucketized products) for a fixed seed and dataset, so any
+refactor that changes output bits — intentionally or not — fails
+``tests/test_golden.py`` until the fixtures are regenerated and the change
+is acknowledged in review (DESIGN.md §18: bit-exact vs distribution-equal).
+
+Run on CPU so the fixtures match the CI tier-1 environment:
+
+    JAX_PLATFORMS=cpu PYTHONPATH=src python scripts/make_golden.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "tests", "golden")
+
+
+def _data():
+    import jax.numpy as jnp
+    rng = np.random.default_rng(20260808)
+    n, d = 400, 3
+    a = np.where(rng.random(n) < 0.4, rng.standard_normal(n), 0.0) \
+        .astype(np.float32)
+    b = np.where(rng.random(n) < 0.4,
+                 0.5 * a + rng.standard_normal(n) * 0.2, 0.0) \
+        .astype(np.float32)
+    A = rng.standard_normal((n, d)).astype(np.float32)
+    B = rng.standard_normal((n, d)).astype(np.float32)
+    A[rng.random(n) < 0.5] = 0.0
+    B[rng.random(n) < 0.5] = 0.0
+    return jnp.asarray(a), jnp.asarray(b), jnp.asarray(A), jnp.asarray(B)
+
+
+def build_fixtures():
+    import jax.numpy as jnp
+    from repro.core import (estimate_inner_product, merge_sketches,
+                            partition_stats, priority_sketch,
+                            threshold_sketch)
+    from repro.kernels.intersect_estimate import (bucketize,
+                                                  estimate_all_pairs_bucketized)
+    from repro.matrix import (estimate_matrix_product, priority_matrix_sketch,
+                              threshold_matrix_sketch)
+
+    a, b, A, B = _data()
+    m, seed = 32, 13
+    out = {}
+
+    for method, fn in (("priority", priority_sketch),
+                       ("threshold", threshold_sketch)):
+        for backend in ("reference", "pallas"):
+            s = fn(a, m, seed, backend=backend)
+            key = f"vec_{method}_{backend}"
+            out[f"{key}_idx"] = np.asarray(s.idx)
+            out[f"{key}_val"] = np.asarray(s.val)
+            out[f"{key}_tau"] = np.asarray(s.tau)
+
+    sa = priority_sketch(a, m, seed)
+    sb = priority_sketch(b, m, seed)
+    out["vec_priority_estimate"] = np.asarray(estimate_inner_product(sa, sb))
+
+    ta = threshold_sketch(a, m, seed)
+    tb = threshold_sketch(b, m, seed)
+    out["vec_threshold_estimate"] = np.asarray(estimate_inner_product(ta, tb))
+
+    # merge of two interleaved halves (priority: bit-exact contract)
+    n = a.shape[0]
+    mask = np.arange(n) % 2 == 0
+    lo = jnp.asarray(np.where(mask, np.asarray(a), 0.0).astype(np.float32))
+    hi = jnp.asarray(np.where(mask, 0.0, np.asarray(a)).astype(np.float32))
+    mg = merge_sketches(priority_sketch(lo, m, seed),
+                        priority_sketch(hi, m, seed), seed, m=m)
+    out["vec_merge_idx"] = np.asarray(mg.idx)
+    out["vec_merge_val"] = np.asarray(mg.val)
+    out["vec_merge_tau"] = np.asarray(mg.tau)
+    tm = merge_sketches(threshold_sketch(lo, m, seed),
+                        threshold_sketch(hi, m, seed), seed, m=m,
+                        method="threshold",
+                        stats_a=partition_stats(lo), stats_b=partition_stats(hi))
+    out["vec_tmerge_idx"] = np.asarray(tm.idx)
+    out["vec_tmerge_val"] = np.asarray(tm.val)
+    out["vec_tmerge_tau"] = np.asarray(tm.tau)
+
+    for method, fn in (("priority", priority_matrix_sketch),
+                       ("threshold", threshold_matrix_sketch)):
+        s = fn(A, m, seed)
+        out[f"mat_{method}_idx"] = np.asarray(s.row_idx)
+        out[f"mat_{method}_rows"] = np.asarray(s.rows)
+        out[f"mat_{method}_tau"] = np.asarray(s.tau)
+    out["mat_priority_estimate"] = np.asarray(estimate_matrix_product(
+        priority_matrix_sketch(A, m, seed), priority_matrix_sketch(B, m, seed)))
+
+    # bucketized all-pairs (d=1 serving layout, XLA oracle backend)
+    ba = bucketize(sa, n_buckets=64)
+    bb = bucketize(sb, n_buckets=64)
+    out["bucketized_allpairs"] = np.asarray(estimate_all_pairs_bucketized(
+        _stack(ba), _stack(bb), use_pallas=False))
+    return out
+
+
+def _stack(bc):
+    """Lift one bucketized sketch to a (1, B, S) corpus."""
+    import jax.numpy as jnp
+    from repro.kernels.intersect_estimate import BucketizedSketch
+    return BucketizedSketch(bc.idx[None], bc.val[None],
+                            jnp.reshape(bc.tau, (1,)),
+                            jnp.reshape(bc.dropped, (1,)))
+
+
+def main():
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    out = build_fixtures()
+    path = os.path.join(GOLDEN_DIR, "sketches_v1.npz")
+    np.savez_compressed(path, **out)
+    print(f"wrote {path}: {len(out)} arrays")
+    for k in sorted(out):
+        print(f"  {k}: {out[k].shape} {out[k].dtype}")
+
+
+if __name__ == "__main__":
+    main()

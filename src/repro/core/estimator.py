@@ -26,17 +26,17 @@ def _match(sa_idx: jnp.ndarray, sb_idx: jnp.ndarray):
 
 
 def estimate_inner_product(sa: Sketch, sb: Sketch, *, variant: str = "l2") -> jnp.ndarray:
-    """Unbiased estimate of <a, b> from two same-seed sketches."""
-    match, pos = _match(sa.idx, sb.idx)
-    bval = jnp.take(sb.val, pos)
-    wa = weight(sa.val, variant)
-    wb = weight(bval, variant)
-    # min(1, tau_a w_a, tau_b w_b); taus may be +inf (keep-everything case):
-    # inf * w>0 = inf -> min() = 1, correct. Padding lanes are masked below.
-    p = jnp.minimum(1.0, jnp.minimum(_safe_mul(sa.tau, wa), _safe_mul(sb.tau, wb)))
-    p = jnp.where(match, p, 1.0)  # avoid 0/0 on padding
-    terms = jnp.where(match, sa.val * bval / p, 0.0)
-    return jnp.sum(terms, axis=-1)
+    """Unbiased estimate of <a, b> from two same-seed sketches.
+
+    d=1 shim over the payload-generic ``repro.engine.estimate_product``
+    with the ``reduction="sum"`` pin — the vector summation order, bit-for-
+    bit the historical formulation (DESIGN.md §18, ``tests/parity``).
+    """
+    from repro.engine.containers import PayloadSketch
+    from repro.engine.estimate import estimate_product
+    return estimate_product(PayloadSketch(sa.idx, sa.val[..., None], sa.tau),
+                            PayloadSketch(sb.idx, sb.val[..., None], sb.tau),
+                            variant=variant, reduction="sum")
 
 
 def _safe_mul(tau: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:

@@ -33,6 +33,12 @@ Partitions must have **disjoint supports** (row partitioning); coordinates
 present in both parts must carry identical values (replicated rows) and are
 deduplicated by rank coordination — same seed, same index, same value means
 the same rank, so either copy stands for the entry.
+
+Since the engine unification (DESIGN.md §18) the priority/threshold union
+math lives once in ``repro.engine.merge`` and this module is the d=1 shim
+(bit-exact, ``tests/parity/test_merge_parity.py``); the stats plumbing,
+the combined (join-correlation) merge, and the shared helpers
+(``_adaptive_tau_union``, ``_dup_earlier``) remain here.
 """
 from __future__ import annotations
 
@@ -45,7 +51,7 @@ import numpy as np
 
 from .hashing import hash_unit
 from .join_correlation import CombinedSketch
-from .sketches import (INVALID_IDX, Sketch, default_capacity, sampling_ranks,
+from .sketches import (INVALID_IDX, Sketch, default_capacity,
                        select_and_pack, weight)
 
 
@@ -128,58 +134,29 @@ def _dup_earlier(parts_idx: jnp.ndarray) -> jnp.ndarray:
     return jnp.stack(dup)
 
 
-def _union_many(parts: Sketch, seed, variant: str, dedupe: bool):
-    """Flatten (P, D, cap) parts into (D, P*cap) union lanes with recomputed
-    sampling ranks; duplicates (unless ``dedupe=False``) and padding carry
-    rank +inf (padding has val 0 -> weight 0).  Ranks are recomputed from
-    the stored (idx, val) — the hash is stateless, which is what makes
-    sketches mergeable without any side channel.
-    """
-    n_parts, D, cap = parts.idx.shape
-    idx_u = jnp.transpose(parts.idx, (1, 0, 2)).reshape(D, n_parts * cap)
-    val_u = jnp.transpose(parts.val, (1, 0, 2)).reshape(D, n_parts * cap)
-    w = weight(val_u, variant)
-    ranks = sampling_ranks(w, hash_unit(seed, idx_u))
-    if dedupe:
-        dup = _dup_earlier(parts.idx)
-        keep_lane = ~jnp.transpose(dup, (1, 0, 2)).reshape(D, n_parts * cap)
-        ranks = jnp.where(keep_lane, ranks, jnp.inf)
-    return idx_u, val_u, ranks
-
-
-def _pack(ranks, include, idx_u, val_u, cap: int, tau) -> Sketch:
-    kidx, kval = jax.vmap(
-        lambda s, i, ix, v: select_and_pack(s, i, ix, v, cap))(
-            ranks, include, idx_u, val_u)
-    return Sketch(idx=kidx, val=kval, tau=tau.astype(jnp.float32))
-
-
 def _kth_smallest(keys: jnp.ndarray, k: int) -> jnp.ndarray:
     # local import: repro.kernels imports from repro.core at module scope
     from repro.kernels.sketch_build import kth_smallest_ranks
     return kth_smallest_ranks(keys, k)
 
 
-# ---------------------------------------------------------------------------
-# Priority merge (bit-exact)
-# ---------------------------------------------------------------------------
-
-
-@functools.partial(jax.jit, static_argnames=("m", "variant", "dedupe"))
-def _merge_priority(parts: Sketch, seed, *, m: int, variant: str,
-                    dedupe: bool) -> Sketch:
-    idx_u, val_u, ranks = _union_many(parts, seed, variant, dedupe)
-    # The (m+1)-st smallest merged rank is either kept in some part or equals
-    # that part's tau (DESIGN.md §14), so the candidate multiset
-    # {kept ranks} ∪ {part taus} contains it exactly.
-    cand = jnp.concatenate([ranks, parts.tau.T], axis=-1)
-    tau = _kth_smallest(cand, m + 1)
-    include = ranks < tau[:, None]
-    return _pack(ranks, include, idx_u, val_u, m, tau)
+def _via_engine(parts: Sketch, seed, *, method, m, variant, cap, adaptive,
+                stats, dedupe) -> Sketch:
+    """Run the payload-generic engine merge on (P, D, cap) vector parts —
+    the d=1 shim (bit-exact per ``tests/parity``; the priority/threshold
+    union math lives in ``repro.engine.merge`` since DESIGN.md §18)."""
+    from repro.engine.containers import PayloadSketch
+    from repro.engine.merge import merge_payload_sketches
+    lifted = PayloadSketch(idx=parts.idx, payload=parts.val[..., None],
+                          tau=parts.tau)
+    out = merge_payload_sketches(lifted, seed, m=m, method=method,
+                                 variant=variant, cap=cap, adaptive=adaptive,
+                                 stats=stats, dedupe=dedupe)
+    return Sketch(idx=out.idx, val=out.payload[..., 0], tau=out.tau)
 
 
 # ---------------------------------------------------------------------------
-# Threshold merge (exact up to summation order, needs PartitionStats)
+# Threshold merge closed form (shared with the engine)
 # ---------------------------------------------------------------------------
 
 
@@ -222,31 +199,6 @@ def _adaptive_tau_union(w_u: jnp.ndarray, W: jnp.ndarray, nnz: jnp.ndarray,
     w_min_nz = jnp.min(jnp.where(w_u > 0, w_u, jnp.inf), axis=1)
     tau_all = jnp.where(jnp.isfinite(w_min_nz), 1.0 / w_min_nz, jnp.inf)
     return jnp.where(nnz <= m, tau_all, tau)
-
-
-@functools.partial(jax.jit,
-                   static_argnames=("m", "variant", "cap", "adaptive",
-                                    "dedupe"))
-def _merge_threshold(parts: Sketch, seed, stats, *, m: int,
-                     variant: str, cap: int, adaptive: bool,
-                     dedupe: bool) -> Sketch:
-    idx_u, val_u, ranks = _union_many(parts, seed, variant, dedupe)
-    w_u = jnp.where(jnp.isfinite(ranks), weight(val_u, variant), 0.0)
-    if adaptive:
-        W, nnz = stats
-        tau = _adaptive_tau_union(w_u, W, nnz, m)
-    elif stats is not None:
-        W, _ = stats
-        tau = jnp.where(W > 0, m / W, 0.0)
-    else:
-        # non-adaptive tau = m / W_part, so each part's W is recoverable
-        W = jnp.sum(jnp.where(parts.tau > 0, m / parts.tau, 0.0), axis=0)
-        tau = jnp.where(W > 0, m / W, 0.0)
-    h_u = hash_unit(seed, idx_u)
-    include = jnp.isfinite(ranks) & (w_u > 0) & (h_u <= tau[:, None] * w_u)
-    # overflow beyond cap evicts largest ranks first, exactly as the builders
-    # do (select_and_pack keeps the smallest-rank cap entries)
-    return _pack(ranks, include, idx_u, val_u, cap, tau)
 
 
 # ---------------------------------------------------------------------------
@@ -322,13 +274,15 @@ def merge_sketches_many(parts, seed, *, m: int, method: str = "priority",
     """
     parts, squeeze = _stack_for_merge(parts)
     if method == "priority":
-        out = _merge_priority(parts, seed, m=m, variant=variant,
-                              dedupe=dedupe)
+        out = _via_engine(parts, seed, method="priority", m=m,
+                          variant=variant, cap=None, adaptive=True,
+                          stats=None, dedupe=dedupe)
     elif method == "threshold":
         folded = _fold_stats(stats, adaptive, method)
-        out = _merge_threshold(parts, seed, folded, m=m, variant=variant,
-                               cap=default_capacity(m) if cap is None else cap,
-                               adaptive=adaptive, dedupe=dedupe)
+        out = _via_engine(parts, seed, method="threshold", m=m,
+                          variant=variant,
+                          cap=default_capacity(m) if cap is None else cap,
+                          adaptive=adaptive, stats=folded, dedupe=dedupe)
     else:
         raise ValueError(f"unknown method {method!r}; "
                          "expected 'priority' or 'threshold'")

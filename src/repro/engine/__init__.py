@@ -1,0 +1,49 @@
+"""Payload-generic coordinated-sampling engine (DESIGN.md §18).
+
+The single implementation behind the vector (``repro.core`` +
+``kernels/{sketch_build,sketch_merge,intersect_estimate}``) and matrix
+(``repro.matrix`` + ``kernels/matrix_sketch``) surfaces: one sketch
+container with payload shape (cap, d) — d=1 recovers vectors — one
+builder family over per-entry weights, one (P, B, S, d) bucketized
+layout, one §14 tau-union merge, and one estimator/merge kernel family
+with shared jnp oracles.  The legacy modules are thin shims over this
+package; ``tests/parity`` drives it against both legacy paths bit for
+bit, and DESIGN.md §18 records which surfaces are bit-exact vs
+distribution-equal.
+"""
+from .containers import (PAYLOAD_VARIANTS, BucketizedPayloads, PayloadSketch,
+                         from_matrix, from_vector, payload_capacity,
+                         payload_weight, to_matrix, to_vector)
+from .build import (SELECTORS, build_payload_corpus, pack_payloads,
+                    resolve_selector)
+from .merge import merge_payload_sketches
+from .estimate import (REDUCTIONS, estimate_product,
+                       payload_intersection_size)
+from .bucketized import (bucketize_payload_sketches, bucketized_products,
+                         merge_bucketized_payloads,
+                         merged_tau_bucketized_payloads, payload_slot_probs)
+
+__all__ = [
+    "PAYLOAD_VARIANTS",
+    "SELECTORS",
+    "REDUCTIONS",
+    "PayloadSketch",
+    "BucketizedPayloads",
+    "payload_weight",
+    "payload_capacity",
+    "from_vector",
+    "to_vector",
+    "from_matrix",
+    "to_matrix",
+    "build_payload_corpus",
+    "pack_payloads",
+    "resolve_selector",
+    "merge_payload_sketches",
+    "estimate_product",
+    "payload_intersection_size",
+    "bucketize_payload_sketches",
+    "bucketized_products",
+    "merge_bucketized_payloads",
+    "merged_tau_bucketized_payloads",
+    "payload_slot_probs",
+]

@@ -1,0 +1,119 @@
+"""Payload-generic sketch container (DESIGN.md §18).
+
+A coordinated weighted sample does not care what it sampled: the paper's
+vector sketches keep scalars, the matrix reduction of arXiv 2501.17836
+keeps whole rows, and both publish the same contract — sorted coordinate
+ids, a fixed-capacity payload block, and a scalar inclusion scale ``tau``
+such that entry ``i`` survives with probability ``min(1, tau * w_i)``.
+This module is the single container behind both:
+
+- ``idx``:     int32[..., cap], **sorted ascending**, ``INVALID_IDX`` pad;
+- ``payload``: float32[..., cap, d], zero rows at padding — ``d = 1``
+  *is* a vector sketch (``payload[..., 0] == val``), ``d > 1`` a matrix
+  sketch's sampled rows;
+- ``tau``:     f32 scalar (or batch) inclusion scale.
+
+``payload_weight`` is the payload-generic sampling weight: for ``d = 1``
+it reduces bit-exactly to ``core.sketches.weight`` (a sum over one lane is
+the identity), for ``d > 1`` the ``l2`` variant is the squared row norm of
+``matrix.containers.row_weight``.  The ``core.Sketch`` / ``matrix
+.MatrixSketch`` containers are zero-copy views of this one
+(``from_vector``/``to_vector``, ``from_matrix``/``to_matrix``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core.sketches import INVALID_IDX, Sketch, default_capacity
+from repro.matrix.containers import MatrixSketch
+
+PAYLOAD_VARIANTS = ("l2", "l1", "uniform")
+
+
+class PayloadSketch(NamedTuple):
+    """Coordinated sample with an arbitrary per-entry payload (DESIGN.md §18).
+
+    Shapes carry an optional leading batch: ``idx`` (..., cap), ``payload``
+    (..., cap, d), ``tau`` (...).  ``d = 1`` specializes to the vector
+    ``Sketch``, ``d > 1`` to the matrix ``MatrixSketch``.
+    """
+
+    idx: jnp.ndarray      # int32[..., cap], sorted ascending, INVALID pad
+    payload: jnp.ndarray  # float32[..., cap, d], zero at padding
+    tau: jnp.ndarray      # f32[...] inclusion scale
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[-1]
+
+    @property
+    def dim(self) -> int:
+        return self.payload.shape[-1]
+
+    def size(self) -> jnp.ndarray:
+        """Number of valid (non-padding) entries."""
+        return jnp.sum(self.idx != INVALID_IDX, axis=-1)
+
+
+class BucketizedPayloads(NamedTuple):
+    """Bucketized batch of payload sketches: the single (P, B, S, d) layout
+    every estimation/merge kernel consumes (DESIGN.md §18).  ``d = 1`` is
+    the ``kernels.intersect_estimate.BucketizedSketch`` layout with a
+    trailing payload axis; ``d > 1`` the ``BucketizedMatrixSketch`` one."""
+
+    idx: jnp.ndarray      # int32 (P, B, S), INVALID_IDX padding
+    payload: jnp.ndarray  # f32 (P, B, S, d), 0 at padding
+    tau: jnp.ndarray      # f32 (P,)
+    dropped: jnp.ndarray  # int32 (P,): entries lost to bucket overflow
+
+
+def payload_weight(payload: jnp.ndarray, variant: str) -> jnp.ndarray:
+    """Sampling weight of each payload row: (..., d) -> (...).
+
+    ``l2`` -> squared l2 norm (the paper's ``a_i^2`` at d=1, the matrix
+    reduction's ``||A_i||^2`` beyond), ``l1`` -> l1 norm (End-Biased at
+    d=1), ``uniform`` -> 1 on nonzero rows.  At d=1 every variant agrees
+    bit for bit with ``core.sketches.weight``.
+    """
+    if variant == "l2":
+        return jnp.sum(payload * payload, axis=-1)
+    if variant == "l1":
+        return jnp.sum(jnp.abs(payload), axis=-1)
+    if variant == "uniform":
+        return jnp.any(payload != 0, axis=-1).astype(payload.dtype)
+    raise ValueError(f"unknown variant {variant!r}; "
+                     f"expected one of {PAYLOAD_VARIANTS}")
+
+
+def payload_capacity(m: int) -> int:
+    """Lemma-4 threshold capacity, shared with both legacy containers."""
+    return default_capacity(m)
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy adapters: the legacy containers are views of PayloadSketch
+# ---------------------------------------------------------------------------
+
+
+def from_vector(s: Sketch) -> PayloadSketch:
+    """Vector sketch -> d=1 payload sketch (no copy: payload = val[..., None])."""
+    return PayloadSketch(idx=s.idx, payload=s.val[..., None], tau=s.tau)
+
+
+def to_vector(s: PayloadSketch) -> Sketch:
+    """d=1 payload sketch -> vector sketch (no copy)."""
+    if s.payload.shape[-1] != 1:
+        raise ValueError(f"not a vector sketch: payload dim {s.payload.shape[-1]}")
+    return Sketch(idx=s.idx, val=s.payload[..., 0], tau=s.tau)
+
+
+def from_matrix(s: MatrixSketch) -> PayloadSketch:
+    """Matrix sketch -> payload sketch (no copy: payload = rows)."""
+    return PayloadSketch(idx=s.row_idx, payload=s.rows, tau=s.tau)
+
+
+def to_matrix(s: PayloadSketch) -> MatrixSketch:
+    """Payload sketch -> matrix sketch (no copy)."""
+    return MatrixSketch(row_idx=s.idx, rows=s.payload, tau=s.tau)

@@ -1,0 +1,91 @@
+"""Payload-generic unbiased product estimation (Algorithm 2; DESIGN.md §18).
+
+``est = sum_{i in K_a ∩ K_b} a_i b_i^T / min(1, tau_a w^a_i, tau_b w^b_i)``
+
+The inclusion-probability algebra is payload-free: both sketch kinds
+publish ``tau`` such that entry ``i`` survives in *both* sketches iff
+``h(i) <= min(tau_a w^a_i, tau_b w^b_i)`` (the hash is shared), so the
+joint inclusion probability is the same ``min(1, ...)`` for scalars and
+rows alike — only the per-match payload changes from a scalar product
+(d=1, the paper's inner product) to a rank-one outer product (A^T B).
+
+``reduction`` pins the floating-point summation order, because the two
+legacy formulations round differently and both are golden-tested:
+
+- ``"sum"``    — the vector formulation ``sum(a*b/p)``; d must be 1;
+  returns a scalar (per batch row).  Bit-exact vs
+  ``core.estimator.estimate_inner_product``.
+- ``"matmul"`` — the matrix formulation ``(a * 1/p).T @ b``; returns
+  (d_a, d_b).  Bit-exact vs ``matrix.estimator.estimate_matrix_product``
+  (at d=1 it returns the same estimate as ``"sum"`` up to rounding, as a
+  (1, 1) matrix).
+- ``"auto"``   — ``"sum"`` when both payloads are d=1, else ``"matmul"``.
+
+Single sketches only (no leading batch) — batch via ``jax.vmap`` as the
+legacy callers do; the bucketized kernel family (``engine.bucketized``)
+is the batched serving path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sketches import INVALID_IDX
+
+from .containers import PayloadSketch, payload_weight
+
+REDUCTIONS = ("auto", "sum", "matmul")
+
+
+def _match(a_idx: jnp.ndarray, b_idx: jnp.ndarray):
+    """Join two sorted id arrays; returns (match_mask, positions_in_b)."""
+    cap_b = b_idx.shape[-1]
+    pos = jnp.searchsorted(b_idx, a_idx)
+    pos = jnp.clip(pos, 0, cap_b - 1)
+    match = (jnp.take(b_idx, pos) == a_idx) & (a_idx != INVALID_IDX)
+    return match, pos
+
+
+def _safe_mul(tau: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """tau * w with inf * 0 -> inf (zero-weight lanes are 'certain')."""
+    return jnp.where(w > 0, tau * w, jnp.inf)
+
+
+def estimate_product(sa: PayloadSketch, sb: PayloadSketch, *,
+                     variant: str = "l2",
+                     reduction: str = "auto") -> jnp.ndarray:
+    """Unbiased estimate of the payload product from two same-seed sketches.
+
+    ``variant`` must match construction (weights are recomputed from the
+    stored payloads).  Returns a scalar under ``reduction="sum"`` (d=1), a
+    (d_a, d_b) matrix under ``"matmul"``.
+    """
+    if reduction not in REDUCTIONS:
+        raise ValueError(f"unknown reduction {reduction!r}; "
+                         f"expected one of {REDUCTIONS}")
+    if reduction == "auto":
+        reduction = "sum" if (sa.dim == 1 and sb.dim == 1) else "matmul"
+    match, pos = _match(sa.idx, sb.idx)
+    b_pay = jnp.take(sb.payload, pos, axis=0)         # (cap_a, d_b) aligned
+    wa = payload_weight(sa.payload, variant)
+    wb = payload_weight(b_pay, variant)
+    # min(1, tau_a w_a, tau_b w_b); taus may be +inf (keep-everything case):
+    # inf * w>0 = inf -> min() = 1, correct. Padding lanes are masked below.
+    p = jnp.minimum(1.0, jnp.minimum(_safe_mul(sa.tau, wa),
+                                     _safe_mul(sb.tau, wb)))
+    if reduction == "sum":
+        if sa.dim != 1 or sb.dim != 1:
+            raise ValueError(
+                "reduction='sum' is the d=1 (vector) formulation; got "
+                f"payload dims {sa.dim} x {sb.dim} — use 'matmul'")
+        p = jnp.where(match, p, 1.0)  # avoid 0/0 on padding
+        terms = jnp.where(match, sa.payload[..., 0] * b_pay[..., 0] / p, 0.0)
+        return jnp.sum(terms, axis=-1)
+    coeff = jnp.where(match, 1.0 / jnp.where(match, p, 1.0), 0.0)
+    return jnp.matmul((sa.payload * coeff[:, None]).T, b_pay)
+
+
+def payload_intersection_size(sa: PayloadSketch,
+                              sb: PayloadSketch) -> jnp.ndarray:
+    """Number of ids present in both sketches (diagnostic)."""
+    match, _ = _match(sa.idx, sb.idx)
+    return jnp.sum(match, axis=-1)

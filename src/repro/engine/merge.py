@@ -1,0 +1,149 @@
+"""Payload-generic §14 tau-union merge (DESIGN.md §14, §18).
+
+One merge for every payload dimension.  The §14 argument never touches the
+payload: ranks are recomputed from the stored coordinates and *weights*
+(``payload_weight`` of the stored payload rows), the merged priority tau is
+the (m+1)-st smallest rank of {kept ranks} ∪ {part taus}, and the merged
+threshold tau is Algorithm 4's closed form over the union weights plus
+additive ``PartitionStats``.  The payload only rides through the final
+compaction — ``select_and_pack`` on an f32 *position* payload followed by
+one row gather (exact below 2^24 lanes), the technique of
+``repro.matrix.merge`` generalized.
+
+d=1 reproduces ``core.merge._merge_priority``/``_merge_threshold`` bit for
+bit (same union lane order, same candidate concatenation, same selection,
+and the position-gather pack emits the identical idx/val);  a (P, cap, d)
+stack at D=1 reproduces ``matrix.merge._merge`` (the parity contract of
+``tests/parity/test_merge_parity.py``).  One guard is strictly wider than
+the legacy vector path: fewer than m+1 union candidates yields tau = +inf
+(keep everything), which the matrix path already had.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import hash_unit
+from repro.core.merge import _adaptive_tau_union, _dup_earlier
+from repro.core.sketches import INVALID_IDX, sampling_ranks, select_and_pack
+
+from .containers import PayloadSketch, payload_weight
+
+
+def _union_payloads(parts: PayloadSketch, seed, variant: str, dedupe: bool):
+    """Flatten (P, D, cap, d) parts into (D, P*cap) union lanes with
+    recomputed sampling ranks; duplicates (unless ``dedupe=False``) and
+    padding carry rank +inf (padding payload rows are 0 -> weight 0)."""
+    n_parts, D, cap, d = parts.payload.shape
+    idx_u = jnp.transpose(parts.idx, (1, 0, 2)).reshape(D, n_parts * cap)
+    pay_u = jnp.transpose(parts.payload, (1, 0, 2, 3)) \
+        .reshape(D, n_parts * cap, d)
+    w = payload_weight(pay_u, variant)
+    ranks = sampling_ranks(w, hash_unit(seed, idx_u))
+    if dedupe:
+        dup = _dup_earlier(parts.idx)
+        keep_lane = ~jnp.transpose(dup, (1, 0, 2)).reshape(D, n_parts * cap)
+        ranks = jnp.where(keep_lane, ranks, jnp.inf)
+    return idx_u, pay_u, ranks
+
+
+def _pack_union(ranks, include, idx_u, pay_u, cap: int, tau) -> PayloadSketch:
+    """Keep smallest-rank included lanes up to ``cap``, re-sorted by id;
+    positions ride through ``select_and_pack`` as an f32 payload and the
+    payload rows follow with one gather (identical idx/val to packing the
+    values directly — a gather is elementwise and the roundtrip is exact
+    for < 2^24 lanes)."""
+    n_lanes = idx_u.shape[-1]
+    pos_f = jnp.broadcast_to(jnp.arange(n_lanes, dtype=jnp.float32),
+                             idx_u.shape)
+    kidx, kpos = jax.vmap(
+        lambda s, i, ix, p: select_and_pack(s, i, ix, p, cap))(
+            ranks, include, idx_u, pos_f)
+    valid = kidx != INVALID_IDX
+    kpay = jnp.take_along_axis(pay_u, kpos.astype(jnp.int32)[:, :, None],
+                               axis=1)
+    kpay = jnp.where(valid[:, :, None], kpay, 0.0)
+    return PayloadSketch(idx=kidx, payload=kpay, tau=tau.astype(jnp.float32))
+
+
+def _kth_smallest(keys: jnp.ndarray, k: int) -> jnp.ndarray:
+    # local import: repro.kernels imports from repro.core at module scope
+    from repro.kernels.sketch_build import kth_smallest_ranks
+    return kth_smallest_ranks(keys, k)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "variant", "dedupe"))
+def _merge_priority_payload(parts: PayloadSketch, seed, *, m: int,
+                            variant: str, dedupe: bool) -> PayloadSketch:
+    idx_u, pay_u, ranks = _union_payloads(parts, seed, variant, dedupe)
+    # The (m+1)-st smallest merged rank is either kept in some part or equals
+    # that part's tau (DESIGN.md §14), so the candidate multiset
+    # {kept ranks} ∪ {part taus} contains it exactly.
+    cand = jnp.concatenate([ranks, parts.tau.T], axis=-1)
+    if cand.shape[-1] < m + 1:
+        tau = jnp.full(cand.shape[:1], jnp.inf, jnp.float32)
+    else:
+        tau = _kth_smallest(cand, m + 1)
+    include = ranks < tau[:, None]
+    return _pack_union(ranks, include, idx_u, pay_u, m, tau)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "variant", "cap", "adaptive",
+                                    "dedupe"))
+def _merge_threshold_payload(parts: PayloadSketch, seed, stats, *, m: int,
+                             variant: str, cap: int, adaptive: bool,
+                             dedupe: bool) -> PayloadSketch:
+    idx_u, pay_u, ranks = _union_payloads(parts, seed, variant, dedupe)
+    w_u = jnp.where(jnp.isfinite(ranks), payload_weight(pay_u, variant), 0.0)
+    if adaptive:
+        W, nnz = stats
+        tau = _adaptive_tau_union(w_u, W, nnz, m)
+    elif stats is not None:
+        W, _ = stats
+        tau = jnp.where(W > 0, m / W, 0.0)
+    else:
+        # non-adaptive tau = m / W_part, so each part's W is recoverable
+        W = jnp.sum(jnp.where(parts.tau > 0, m / parts.tau, 0.0), axis=0)
+        tau = jnp.where(W > 0, m / W, 0.0)
+    h_u = hash_unit(seed, idx_u)
+    include = jnp.isfinite(ranks) & (w_u > 0) & (h_u <= tau[:, None] * w_u)
+    # overflow beyond cap evicts largest ranks first, exactly as the builders
+    # do (select_and_pack keeps the smallest-rank cap entries)
+    return _pack_union(ranks, include, idx_u, pay_u, cap, tau)
+
+
+def merge_payload_sketches(parts: PayloadSketch, seed, *, m: int,
+                           method: str = "priority", variant: str = "l2",
+                           cap: int | None = None, adaptive: bool = True,
+                           stats=None, dedupe: bool = True) -> PayloadSketch:
+    """Payload sketch of the union of P disjoint partitions.
+
+    ``parts``: a stacked (P, D, cap, d) ``PayloadSketch`` with tau (P, D)
+    (the shims in ``core.merge``/``matrix.merge`` handle list stacking, cap
+    padding and rank lifting).  ``stats``: pre-folded ``(W (D,), nnz (D,))``
+    — required when ``method="threshold"`` and ``adaptive=True``.  The
+    merge is associative and runs as ONE flat P-way union: one
+    rank-selection pass for tau and one compaction (DESIGN.md §14).
+    """
+    if parts.idx.ndim != 3 or parts.payload.ndim != 4:
+        raise ValueError("expected stacked (P, D, cap[, d]) parts, got idx "
+                         f"{parts.idx.shape}, payload {parts.payload.shape}")
+    if method == "priority":
+        return _merge_priority_payload(parts, seed, m=m, variant=variant,
+                                       dedupe=dedupe)
+    if method == "threshold":
+        if stats is None and adaptive:
+            raise ValueError(
+                "merging adaptive threshold sketches needs PartitionStats "
+                "for every part (tau = m'/W does not expose W); collect "
+                "them with partition_stats() at build time")
+        from .containers import payload_capacity
+        return _merge_threshold_payload(
+            parts, seed, stats, m=m, variant=variant,
+            cap=payload_capacity(m) if cap is None else cap,
+            adaptive=adaptive, dedupe=dedupe)
+    raise ValueError(f"unknown method {method!r}; "
+                     "expected 'priority' or 'threshold'")

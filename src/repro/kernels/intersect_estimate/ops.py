@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hashing import hash_bucket
-from repro.core.sketches import INVALID_IDX, Sketch, weight
+from repro.core.sketches import INVALID_IDX, Sketch
 
 from .intersect_estimate import (CT, QT, allpairs_estimate_pallas,
                                  intersect_estimate_pallas)
@@ -103,10 +103,13 @@ def _use_interpret() -> bool:
 def slot_inclusion_probs(bc: BucketizedSketch, *, variant: str = "l2") -> jnp.ndarray:
     """Per-slot inclusion probability min(1, tau * w(val)) for a (C, B, S)
     bucketized corpus; 1.0 at padding slots (w == 0) so inf taus from the
-    keep-everything case never produce NaN."""
-    w = weight(bc.val, variant)
-    tau = jnp.reshape(bc.tau, (-1, 1, 1))
-    return jnp.where(w > 0, jnp.minimum(1.0, tau * w), 1.0)
+    keep-everything case never produce NaN.  d=1 shim over the payload-
+    generic ``repro.engine.bucketized.payload_slot_probs`` (DESIGN.md §18)."""
+    from repro.engine.bucketized import payload_slot_probs
+    from repro.engine.containers import BucketizedPayloads
+    return payload_slot_probs(
+        BucketizedPayloads(bc.idx, bc.val[..., None], bc.tau, bc.dropped),
+        variant=variant)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

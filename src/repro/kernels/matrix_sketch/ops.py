@@ -1,37 +1,26 @@
 """Jit'd public wrappers for the fused batched matrix-product estimator.
 
-Split mirrors the other kernel packages (DESIGN.md §15):
-
-1. **Bucketize** — each matrix sketch's sorted row ids re-lay into the
-   (B, S) bucket format of ``kernels/intersect_estimate`` (shared bucket
-   seed, so coordinated sketches agree on buckets); the d-dim rows ride
-   along via a position payload + one gather.
-2. **Fused estimate** — ``matrix_products_bucketized`` computes per-slot
-   inclusion probabilities on the host (O(P B S), variant-agnostic kernel)
-   and dispatches the batch to the Pallas kernel (TPU / interpret) or the
-   ``lax.map`` oracle (the fast fused XLA path off-TPU) — one launch for
-   all P pairs either way.
+Since the engine unification (DESIGN.md §18) this package is the d>1 face
+of ``repro.engine.bucketized``: the (P, B, S, d) layout, the position-
+payload bucketize scatter, the per-slot probability map and the Pallas /
+``lax.map``-oracle product dispatch all live there once (shared with the
+d=1 vector surface), and these wrappers only translate between the legacy
+``BucketizedMatrixSketch`` container and the engine's
+``BucketizedPayloads``.  The Pallas kernel itself (``pair_product_body``,
+``matrix_products_pallas``) stays in this package — it was payload-generic
+from the start and is what the engine dispatches to.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.sketches import INVALID_IDX
-from repro.matrix.containers import (MatrixSketch, row_weight,
-                                     stack_matrix_sketches)
+from repro.matrix.containers import MatrixSketch, stack_matrix_sketches
 
-from ..intersect_estimate.ops import DEFAULT_BUCKET_SEED, bucketize_payloads
-from ..sketch_build.ops import resolve_use_pallas
-from .matrix_sketch import matrix_products_pallas
-from .ref import matrix_products_ref
-
-
-def _use_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+__all__ = ["BucketizedMatrixSketch", "bucketize_matrix_sketches",
+           "matrix_products_bucketized", "matrix_slot_probs",
+           "stack_matrix_sketches"]
 
 
 class BucketizedMatrixSketch(NamedTuple):
@@ -43,53 +32,27 @@ class BucketizedMatrixSketch(NamedTuple):
     dropped: jnp.ndarray  # int32 (P,): rows lost to bucket overflow
 
 
-@functools.partial(jax.jit, static_argnames=("n_buckets", "slots"))
-def _bucketize_one(row_idx, rows, *, n_buckets, slots):
-    cap = row_idx.shape[0]
-    # positions ride through the scatter as a payload; the d-dim rows
-    # follow with one gather (cap < 2^24, so the f32 payload is exact)
-    pos = jnp.arange(cap, dtype=jnp.float32)
-    out_idx, (out_pos,), dropped = bucketize_payloads(
-        row_idx, (pos,), n_buckets=n_buckets, slots=slots,
-        bucket_seed=DEFAULT_BUCKET_SEED)
-    valid = out_idx != INVALID_IDX
-    out_rows = jnp.where(valid[..., None],
-                         rows[out_pos.astype(jnp.int32)], 0.0)
-    return out_idx, out_rows, dropped
-
-
 def bucketize_matrix_sketches(sk: MatrixSketch, *, n_buckets: int = 512,
                               slots: int = 4) -> BucketizedMatrixSketch:
     """Re-lay a (P, cap, d) matrix-sketch batch (or one (cap, d) sketch —
     lifted to P=1) into the bucketized kernel format.  ``n_buckets >= 2 m``
     keeps overflow drops near zero, as for vector sketches (DESIGN.md §4)."""
-    if sk.row_idx.ndim == 1:
-        sk = MatrixSketch(sk.row_idx[None], sk.rows[None],
-                          jnp.reshape(jnp.asarray(sk.tau, jnp.float32), (1,)))
-    out_idx, out_rows, dropped = jax.vmap(
-        lambda i, r: _bucketize_one(i, r, n_buckets=n_buckets,
-                                    slots=slots))(sk.row_idx, sk.rows)
-    return BucketizedMatrixSketch(out_idx, out_rows,
-                                  jnp.reshape(sk.tau, (-1,)).astype(jnp.float32),
-                                  dropped.astype(jnp.int32))
+    from repro.engine.bucketized import bucketize_payload_sketches
+    from repro.engine.containers import from_matrix
+    out = bucketize_payload_sketches(from_matrix(sk), n_buckets=n_buckets,
+                                     slots=slots)
+    return BucketizedMatrixSketch(out.idx, out.payload, out.tau, out.dropped)
 
 
 def matrix_slot_probs(bc: BucketizedMatrixSketch, *,
                       variant: str = "l2") -> jnp.ndarray:
     """Per-slot inclusion probability min(1, tau * w(row)) for a bucketized
     batch; 1.0 at padding slots so reciprocals stay finite."""
-    w = row_weight(bc.rows, variant)                      # (P, B, S)
-    tau = jnp.reshape(bc.tau, (-1, 1, 1))
-    return jnp.where(w > 0, jnp.minimum(1.0, tau * w), 1.0)
-
-
-@functools.partial(jax.jit, static_argnames=("variant", "use_pallas"))
-def _products_dispatch(a_idx, a_rows, a_p, b_idx, b_rows, b_p, *,
-                       variant: str, use_pallas: bool):
-    if use_pallas:
-        return matrix_products_pallas(a_idx, a_rows, a_p, b_idx, b_rows, b_p,
-                                      interpret=_use_interpret())
-    return matrix_products_ref(a_idx, a_rows, a_p, b_idx, b_rows, b_p)
+    from repro.engine.bucketized import payload_slot_probs
+    from repro.engine.containers import BucketizedPayloads
+    return payload_slot_probs(
+        BucketizedPayloads(bc.idx, bc.rows, bc.tau, bc.dropped),
+        variant=variant)
 
 
 def matrix_products_bucketized(A: BucketizedMatrixSketch,
@@ -104,11 +67,9 @@ def matrix_products_bucketized(A: BucketizedMatrixSketch,
     resolves like the build pipeline: the Pallas kernel on TPU, the fused
     ``lax.map`` XLA formulation elsewhere.
     """
-    if A.idx.shape != B.idx.shape:
-        raise ValueError(f"batch layouts differ: {A.idx.shape} vs "
-                         f"{B.idx.shape}")
-    a_p = matrix_slot_probs(A, variant=variant)
-    b_p = matrix_slot_probs(B, variant=variant)
-    return _products_dispatch(A.idx, A.rows, a_p, B.idx, B.rows, b_p,
-                              variant=variant,
-                              use_pallas=resolve_use_pallas(use_pallas))
+    from repro.engine.bucketized import bucketized_products
+    from repro.engine.containers import BucketizedPayloads
+    return bucketized_products(
+        BucketizedPayloads(A.idx, A.rows, A.tau, A.dropped),
+        BucketizedPayloads(B.idx, B.rows, B.tau, B.dropped),
+        variant=variant, use_pallas=use_pallas)

@@ -317,29 +317,35 @@ def _front_end(A: jnp.ndarray, seed, variant: str,
 
 
 # ---------------------------------------------------------------------------
-# Builders
+# Builders — thin shims over the payload-generic engine (DESIGN.md §18).
+# The selection primitives above (kth_smallest_ranks, pack_kept,
+# _overflow_cut, adaptive_tau_batched, _front_end) stay here: the engine
+# imports them at module scope, so this module must only import the engine
+# inside function bodies.
 # ---------------------------------------------------------------------------
 
 
-@functools.partial(jax.jit, static_argnames=("m", "variant", "cap",
-                                             "adaptive", "use_pallas"))
-def _build_threshold(A, seed, indices, *, m, variant, cap, adaptive,
-                     use_pallas):
-    if indices is not None:
-        A, indices = _sort_sparse(A, indices)
-    D, n = A.shape
-    h, ranks, W, _ = _front_end(A, seed, variant, indices, use_pallas,
-                                want_hist=False)
-    if adaptive:
-        tau = adaptive_tau_batched(W, m, use_pallas=use_pallas)
-    else:
-        Wsum = jnp.sum(W, axis=1)
-        tau = jnp.where(Wsum > 0, m / Wsum, 0.0)
-    h2 = h if h.ndim == 2 else h[None, :]
-    include = (W > 0) & (h2 <= tau[:, None] * W)
-    keep = _overflow_cut(include, ranks, cap, use_pallas=use_pallas)
-    kidx, kval = pack_kept(keep, A, cap, indices)
-    return Sketch(idx=kidx, val=kval, tau=tau.astype(jnp.float32))
+def _selector(use_pallas: bool | None) -> str | None:
+    """Legacy ``use_pallas`` flag -> engine selector (None stays auto)."""
+    if use_pallas is None:
+        return None
+    return "pallas" if use_pallas else "xla"
+
+
+@functools.partial(jax.jit, static_argnames=("method", "m", "variant", "cap",
+                                             "adaptive", "selector"))
+def _build_shim(A, seed, indices, *, method, m, variant, cap, adaptive,
+                selector):
+    """One-dispatch d=1 shim: the (D, n) -> (D, n, 1) payload lift and the
+    payload -> val squeeze trace into the same program as the engine build,
+    so ingestion hot paths (serving adds, WAL replay) pay a single jit call
+    exactly like the pre-engine builders did."""
+    from repro.engine.build import build_payload_corpus
+    A = jnp.atleast_2d(jnp.asarray(A, jnp.float32))
+    out = build_payload_corpus(A, m, seed, method=method, variant=variant,
+                               cap=cap, adaptive=adaptive, indices=indices,
+                               selector=selector)
+    return Sketch(idx=out.idx, val=out.payload[..., 0], tau=out.tau)
 
 
 def build_threshold_corpus(A: jnp.ndarray, m: int, seed, *,
@@ -351,32 +357,14 @@ def build_threshold_corpus(A: jnp.ndarray, m: int, seed, *,
 
     Estimator-equivalent to ``vmap(threshold_sketch)``: identical kept sets
     and values; tau may differ by summation-order rounding in the adaptive
-    suffix sums (see ``adaptive_tau_batched``).
+    suffix sums (see ``adaptive_tau_batched``).  d=1 shim over
+    ``repro.engine.build_payload_corpus`` (bit-exact, ``tests/parity``).
     """
-    A = jnp.atleast_2d(jnp.asarray(A, jnp.float32))
     if cap is None:
         cap = default_capacity(m)
-    return _build_threshold(A, seed, indices, m=m, variant=variant, cap=cap,
-                            adaptive=adaptive,
-                            use_pallas=resolve_use_pallas(use_pallas))
-
-
-@functools.partial(jax.jit, static_argnames=("m", "variant", "use_pallas"))
-def _build_priority(A, seed, indices, *, m, variant, use_pallas):
-    if indices is not None:
-        A, indices = _sort_sparse(A, indices)
-    D, n = A.shape
-    h, ranks, W, hist0 = _front_end(A, seed, variant, indices, use_pallas,
-                                    want_hist=True)
-    if n < m + 1:
-        # fewer candidates than m+1: tau is the padded (m+1)-st rank == inf
-        tau = jnp.full((D,), jnp.inf, jnp.float32)
-    else:
-        tau = kth_smallest_ranks(ranks, m + 1, use_pallas=use_pallas,
-                                 hist0=hist0)
-    include = ranks < tau[:, None]
-    kidx, kval = pack_kept(include, A, m, indices)
-    return Sketch(idx=kidx, val=kval, tau=tau.astype(jnp.float32))
+    return _build_shim(A, seed, indices, method="threshold", m=m,
+                       variant=variant, cap=cap, adaptive=adaptive,
+                       selector=_selector(use_pallas))
 
 
 def build_priority_corpus(A: jnp.ndarray, m: int, seed, *,
@@ -387,7 +375,8 @@ def build_priority_corpus(A: jnp.ndarray, m: int, seed, *,
 
     Bit-exact against ``vmap(priority_sketch)``: tau is the exact (m+1)-st
     smallest rank (a pure bit-pattern statistic) and the kept set follows.
+    d=1 shim over ``repro.engine.build_payload_corpus``.
     """
-    A = jnp.atleast_2d(jnp.asarray(A, jnp.float32))
-    return _build_priority(A, seed, indices, m=m, variant=variant,
-                           use_pallas=resolve_use_pallas(use_pallas))
+    return _build_shim(A, seed, indices, method="priority", m=m,
+                       variant=variant, cap=None, adaptive=True,
+                       selector=_selector(use_pallas))

@@ -13,6 +13,11 @@ Split mirrors the build pipeline (DESIGN.md §13/§14):
 
 Threshold-style corpora can pass a caller-computed ``tau`` (e.g. the
 adaptive merged tau from ``core.merge``) — the kernel itself is tau-agnostic.
+
+Since the engine unification (DESIGN.md §18) the merged-tau order statistic
+lives payload-generically in ``repro.engine.bucketized`` (shared with the
+matrix surface); :func:`merged_tau_bucketized` is its d=1 shim.  The d=1
+union/compact dispatch below stays here — the engine dispatches *to* it.
 """
 from __future__ import annotations
 
@@ -21,11 +26,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.hashing import hash_unit
-from repro.core.sketches import INVALID_IDX, sampling_ranks, weight
-
 from ..intersect_estimate.ops import BucketizedSketch
-from ..sketch_build.ops import kth_smallest_ranks, resolve_use_pallas
+from ..sketch_build.ops import resolve_use_pallas
 from .ref import merge_bucketized_ref
 from .sketch_merge import merge_bucketized_pallas
 
@@ -34,31 +36,17 @@ def _use_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("m", "variant"))
 def merged_tau_bucketized(A: BucketizedSketch, B: BucketizedSketch, seed, *,
                           m: int, variant: str = "l2") -> jnp.ndarray:
     """Per-row merged priority tau: the (m+1)-st smallest rank of the union
     candidates (kept ranks of both sides, b-duplicates masked, plus both
     published taus — DESIGN.md §14)."""
-    D, Bk, S = A.idx.shape
-
-    def ranks(idx, val):
-        w = weight(val.astype(jnp.float32), variant)
-        r = sampling_ranks(w, hash_unit(seed, idx))
-        return jnp.where(idx != INVALID_IDX, r, jnp.inf)
-
-    ra = ranks(A.idx, A.val)
-    rb = ranks(B.idx, B.val)
-    dup = jnp.zeros(B.idx.shape, bool)
-    for s in range(S):
-        a_s = A.idx[:, :, s]
-        dup = dup | ((B.idx == a_s[:, :, None])
-                     & (a_s != INVALID_IDX)[:, :, None])
-    rb = jnp.where(dup, jnp.inf, rb)
-    cand = jnp.concatenate(
-        [ra.reshape(D, -1), rb.reshape(D, -1),
-         jnp.reshape(A.tau, (D, 1)), jnp.reshape(B.tau, (D, 1))], axis=1)
-    return kth_smallest_ranks(cand, m + 1)
+    from repro.engine.bucketized import merged_tau_bucketized_payloads
+    from repro.engine.containers import BucketizedPayloads
+    return merged_tau_bucketized_payloads(
+        BucketizedPayloads(A.idx, A.val[..., None], A.tau, A.dropped),
+        BucketizedPayloads(B.idx, B.val[..., None], B.tau, B.dropped),
+        seed, m=m, variant=variant)
 
 
 @functools.partial(jax.jit, static_argnames=("variant", "use_pallas"))

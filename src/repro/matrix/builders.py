@@ -1,12 +1,18 @@
-"""Row-sampling matrix sketch builders (DESIGN.md §15).
+"""Row-sampling matrix sketch builders (DESIGN.md §15, §18).
 
-Both builders are the vector algorithms applied to *row* weights: hash the
-row ids once, form sampling ranks ``h_i / w_i``, and resolve the inclusion
-cutoffs with the linear-time selection primitives of
-``kernels/sketch_build`` (``kth_smallest_ranks`` for the priority tau and
-the threshold overflow cut, ``adaptive_tau_batched`` for Algorithm 4's
-adaptive scale).  No step sorts all n rows; construction is O(n d) — one
-pass for the row norms — plus O(n) selection.
+Both builders are the vector algorithms applied to *row* weights — which
+is exactly the payload-generic engine's d>1 case, so since the engine
+unification these are thin shims over
+``repro.engine.build_payload_corpus``: hash the row ids once, form
+sampling ranks ``h_i / w_i``, resolve the inclusion cutoffs with the
+linear-time selection primitives of ``kernels/sketch_build``, and compact
+with the sort-free prefix-sum pack.  Construction is O(n d) — one pass
+for the row norms — plus O(n) selection.
+
+``backend="fused"`` maps to the engine's auto selector (XLA digest
+descent off-TPU, Pallas histogram levels on TPU — bit-identical exact
+statistics); ``backend="reference"`` maps to ``selector="sort"``, the
+O(n log n) sort/top_k formulations kept as the parity oracle.
 
 ``row_indices`` passes *global* row coordinates for a row partition of a
 taller matrix (the map side of ``distributed.partitioned_matrix_sketch``):
@@ -15,74 +21,31 @@ coordinated and therefore mergeable (DESIGN.md §14).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
-from repro.core.hashing import hash_unit
-from repro.core.sketches import INVALID_IDX, sampling_ranks
-
-from .containers import MatrixSketch, matrix_capacity, row_weight
+from .containers import MATRIX_VARIANTS, MatrixSketch, matrix_capacity
 
 
-def _sort_rows(A: jnp.ndarray, row_indices: jnp.ndarray):
-    """Normalize explicit row coordinates to ascending order so the
-    prefix-sum pack emits an id-sorted sketch for any input order."""
-    row_indices = row_indices.astype(jnp.int32)
-    order = jnp.argsort(row_indices)
-    return A[order], row_indices[order]
+def _check_inputs(A: jnp.ndarray, variant: str, backend: str) -> None:
+    if A.ndim != 2:
+        raise ValueError(f"expected an (n, d) matrix, got shape {A.shape}")
+    if backend not in ("fused", "reference"):
+        raise ValueError(f"unknown backend {backend!r}; "
+                         "expected 'fused' or 'reference'")
+    if variant not in MATRIX_VARIANTS:
+        raise ValueError(f"unknown matrix variant {variant!r}; "
+                         f"expected one of {MATRIX_VARIANTS}")
 
 
-def _pack_rows(keep: jnp.ndarray, A: jnp.ndarray, cap: int,
-               row_indices: jnp.ndarray | None):
-    """Compact kept rows into (cap, d) slots, row-id sorted.
-
-    Row coordinates ascend, so a prefix sum assigns each kept row its output
-    slot — the same sort-free compaction as ``sketch_build.pack_kept``, with
-    a row gather instead of a value gather.
-    """
-    n = keep.shape[0]
-    csum = jnp.cumsum(keep.astype(jnp.int32))
-    targets = jnp.arange(1, cap + 1, dtype=jnp.int32)
-    src = jnp.searchsorted(csum, targets, side="left")
-    valid = targets <= csum[-1]
-    src_c = jnp.minimum(src, n - 1).astype(jnp.int32)
-    out_rows = jnp.where(valid[:, None], A[src_c].astype(jnp.float32), 0.0)
-    gidx = src_c if row_indices is None else row_indices[src_c]
-    out_idx = jnp.where(valid, gidx, INVALID_IDX).astype(jnp.int32)
-    return out_idx, out_rows
-
-
-def _front_end(A: jnp.ndarray, seed, variant: str,
-               row_indices: jnp.ndarray | None):
-    ids = jnp.arange(A.shape[0], dtype=jnp.int32) \
-        if row_indices is None else row_indices
-    w = row_weight(A.astype(jnp.float32), variant)
-    h = hash_unit(seed, ids)
-    return w, h, sampling_ranks(w, h)
-
-
-@functools.partial(jax.jit, static_argnames=("m", "variant", "fused"))
-def _build_priority(A, seed, row_indices, *, m, variant, fused):
-    if row_indices is not None:
-        A, row_indices = _sort_rows(A, row_indices)
-    n = A.shape[0]
-    _, _, ranks = _front_end(A, seed, variant, row_indices)
-    if n < m + 1:
-        # fewer candidate rows than m+1: the padded (m+1)-st rank is +inf
-        tau = jnp.asarray(jnp.inf, jnp.float32)
-    elif fused:
-        from repro.kernels.sketch_build import kth_smallest_ranks
-        tau = kth_smallest_ranks(ranks[None, :], m + 1)[0]
-    else:
-        # reference formulation: top_k over all n ranks (the parity oracle,
-        # mirroring core.priority.priority_sketch)
-        tau = -jax.lax.top_k(-ranks, m + 1)[0][m]
-    include = ranks < tau
-    kidx, krows = _pack_rows(include, A, m, row_indices)
-    return MatrixSketch(row_idx=kidx, rows=krows,
-                        tau=jnp.asarray(tau, jnp.float32))
+def _build(A, m, seed, *, method, variant, cap, adaptive, row_indices,
+           backend) -> MatrixSketch:
+    from repro.engine.build import build_payload_corpus
+    out = build_payload_corpus(
+        A[None], m, seed, method=method, variant=variant, cap=cap,
+        adaptive=adaptive, indices=row_indices,
+        selector="sort" if backend == "reference" else None)
+    return MatrixSketch(row_idx=out.idx[0], rows=out.payload[0],
+                        tau=out.tau[0])
 
 
 def priority_matrix_sketch(A: jnp.ndarray, m: int, seed, *,
@@ -95,52 +58,13 @@ def priority_matrix_sketch(A: jnp.ndarray, m: int, seed, *,
     linear-time histogram selection of ``kernels/sketch_build``;
     ``"reference"`` is the sort/top_k formulation, kept as the parity oracle
     (both are exact order statistics, so they agree bit for bit —
-    DESIGN.md §13, §15)."""
+    DESIGN.md §13, §15, §18)."""
     A = jnp.asarray(A, jnp.float32)
-    if A.ndim != 2:
-        raise ValueError(f"expected an (n, d) matrix, got shape {A.shape}")
-    if backend not in ("fused", "reference"):
-        raise ValueError(f"unknown backend {backend!r}; "
-                         "expected 'fused' or 'reference'")
+    _check_inputs(A, variant, backend)
     if row_indices is not None:
         row_indices = jnp.asarray(row_indices, jnp.int32)
-    return _build_priority(A, seed, row_indices, m=m, variant=variant,
-                           fused=backend == "fused")
-
-
-@functools.partial(jax.jit, static_argnames=("m", "variant", "cap",
-                                             "adaptive", "fused"))
-def _build_threshold(A, seed, row_indices, *, m, variant, cap, adaptive,
-                     fused):
-    if row_indices is not None:
-        A, row_indices = _sort_rows(A, row_indices)
-    n = A.shape[0]
-    w, h, ranks = _front_end(A, seed, variant, row_indices)
-    if adaptive and fused:
-        from repro.kernels.sketch_build import adaptive_tau_batched
-        tau = adaptive_tau_batched(w[None, :], m)[0]
-    elif adaptive:
-        # reference formulation: the O(n log n) descending-sort closed form
-        from repro.core.threshold import adaptive_tau
-        tau = adaptive_tau(w, m)
-    else:
-        W = jnp.sum(w)
-        tau = jnp.where(W > 0, m / W, 0.0)
-    include = (w > 0) & (h <= tau * w)
-    if cap + 1 <= n:
-        # overflow (Lemma 4, probability < ~1e-4): evict largest-rank rows
-        # beyond cap, under a scalar cond so the selection is rarely paid
-        def cut(_):
-            from repro.kernels.sketch_build import kth_smallest_ranks
-            masked = jnp.where(include, ranks, jnp.inf)
-            sel = kth_smallest_ranks(masked[None, :], cap + 1)[0]
-            return include & (ranks < sel)
-
-        include = jax.lax.cond(jnp.sum(include) > cap, cut,
-                               lambda _: include, operand=None)
-    kidx, krows = _pack_rows(include, A, cap, row_indices)
-    return MatrixSketch(row_idx=kidx, rows=krows,
-                        tau=jnp.asarray(tau, jnp.float32))
+    return _build(A, m, seed, method="priority", variant=variant, cap=None,
+                  adaptive=True, row_indices=row_indices, backend=backend)
 
 
 def threshold_matrix_sketch(A: jnp.ndarray, m: int, seed, *,
@@ -154,18 +78,13 @@ def threshold_matrix_sketch(A: jnp.ndarray, m: int, seed, *,
     default) computes it with the linear-time top-m weight extraction of
     ``adaptive_tau_batched``; ``"reference"`` is the O(n log n)
     descending-sort closed form (the parity oracle — identical kept sets,
-    tau equal up to summation-order rounding, DESIGN.md §13, §15).
+    tau equal up to summation-order rounding, DESIGN.md §13, §15, §18).
     ``cap`` defaults to the Lemma-4 sizing ``m + 4 ceil(sqrt(m))``."""
     A = jnp.asarray(A, jnp.float32)
-    if A.ndim != 2:
-        raise ValueError(f"expected an (n, d) matrix, got shape {A.shape}")
-    if backend not in ("fused", "reference"):
-        raise ValueError(f"unknown backend {backend!r}; "
-                         "expected 'fused' or 'reference'")
+    _check_inputs(A, variant, backend)
     if cap is None:
         cap = matrix_capacity(m)
     if row_indices is not None:
         row_indices = jnp.asarray(row_indices, jnp.int32)
-    return _build_threshold(A, seed, row_indices, m=m, variant=variant,
-                            cap=cap, adaptive=adaptive,
-                            fused=backend == "fused")
+    return _build(A, m, seed, method="threshold", variant=variant, cap=cap,
+                  adaptive=adaptive, row_indices=row_indices, backend=backend)

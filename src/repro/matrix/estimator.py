@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.sketches import INVALID_IDX
 
-from .containers import MatrixSketch, row_weight
+from .containers import MatrixSketch
 
 
 def _match(a_idx: jnp.ndarray, b_idx: jnp.ndarray):
@@ -33,24 +33,20 @@ def _match(a_idx: jnp.ndarray, b_idx: jnp.ndarray):
     return match, pos
 
 
-def _safe_mul(tau: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
-    """tau * w with inf * 0 -> inf (zero-weight lanes are 'certain')."""
-    return jnp.where(w > 0, tau * w, jnp.inf)
-
-
 def estimate_matrix_product(sa: MatrixSketch, sb: MatrixSketch, *,
                             variant: str = "l2") -> jnp.ndarray:
     """Unbiased (d_A, d_B) estimate of ``A^T B`` from two same-seed matrix
     sketches.  ``variant`` must match construction (weights are recomputed
-    from the stored rows)."""
-    match, pos = _match(sa.row_idx, sb.row_idx)
-    b_rows = jnp.take(sb.rows, pos, axis=0)           # (cap_a, d_b) aligned
-    wa = row_weight(sa.rows, variant)
-    wb = row_weight(b_rows, variant)
-    p = jnp.minimum(1.0, jnp.minimum(_safe_mul(sa.tau, wa),
-                                     _safe_mul(sb.tau, wb)))
-    coeff = jnp.where(match, 1.0 / jnp.where(match, p, 1.0), 0.0)
-    return jnp.matmul((sa.rows * coeff[:, None]).T, b_rows)
+    from the stored rows).
+
+    Shim over the payload-generic ``repro.engine.estimate_product`` with
+    the ``reduction="matmul"`` pin — the matrix contraction order, bit-for-
+    bit the historical formulation (DESIGN.md §18, ``tests/parity``).
+    """
+    from repro.engine.estimate import estimate_product
+    from repro.engine.containers import from_matrix
+    return estimate_product(from_matrix(sa), from_matrix(sb),
+                            variant=variant, reduction="matmul")
 
 
 def matrix_intersection_size(sa: MatrixSketch, sb: MatrixSketch) -> jnp.ndarray:

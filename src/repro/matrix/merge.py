@@ -10,21 +10,19 @@ stacked matrix in one shot.  Threshold merges recompute the adaptive tau
 from the union's kept row weights plus additive ``PartitionStats``
 (total row weight + nonzero-row count per partition), exactly the §14
 capped-prefix argument with rows in place of scalar entries.
+
+Since the engine unification (DESIGN.md §18) the union math lives once in
+``repro.engine.merge`` — this module is the (P, cap, d)-at-D=1 shim (the
+parity contract of ``tests/parity/test_merge_parity.py``) plus the stats
+folding and list-stacking plumbing.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
-from repro.core.hashing import hash_unit
-from repro.core.merge import (PartitionStats, _adaptive_tau_union,
-                              _dup_earlier, assert_no_duplicate_ids)
-from repro.core.sketches import INVALID_IDX, sampling_ranks
+from repro.core.merge import PartitionStats, assert_no_duplicate_ids
 
-from .containers import (MatrixSketch, matrix_capacity, row_weight,
-                         stack_matrix_sketches)
+from .containers import MatrixSketch, matrix_capacity, stack_matrix_sketches
 
 
 def _stack_parts(parts):
@@ -36,57 +34,24 @@ def _stack_parts(parts):
     return stack_matrix_sketches(parts)
 
 
-@functools.partial(jax.jit, static_argnames=("m", "method", "variant", "cap",
-                                             "adaptive", "dedupe"))
 def _merge(parts: MatrixSketch, seed, stats, *, m, method, variant, cap,
-           adaptive, dedupe):
-    P, pcap, d = parts.rows.shape
-    idx_u = parts.row_idx.reshape(P * pcap)
-    rows_u = parts.rows.reshape(P * pcap, d)
-    w_u = row_weight(rows_u, variant)
-    h_u = hash_unit(seed, idx_u)
-    ranks = sampling_ranks(w_u, h_u)          # padding: w=0 -> +inf
-    if dedupe:
-        # first occurrence stands for a replicated row (same id + same seed
-        # => same rank, DESIGN.md §14); later copies sink to rank +inf.
-        # Reuses the vector path's searchsorted earlier-part scan on the
-        # per-part sorted id layout (a D=1 corpus of P parts).
-        dup = _dup_earlier(parts.row_idx[:, None, :]).reshape(P * pcap)
-        ranks = jnp.where(dup, jnp.inf, ranks)
-        w_u = jnp.where(dup, 0.0, w_u)
-
-    from repro.kernels.sketch_build import kth_smallest_ranks
-    if method == "priority":
-        cand = jnp.concatenate([ranks, parts.tau.reshape(-1)])
-        if cand.shape[0] < m + 1:
-            tau = jnp.asarray(jnp.inf, jnp.float32)
-        else:
-            tau = kth_smallest_ranks(cand[None, :], m + 1)[0]
-        include = ranks < tau
-        out_cap = m
-    else:
-        if adaptive:
-            W, nnz = stats
-            tau = _adaptive_tau_union(w_u[None, :], W[None], nnz[None], m)[0]
-        elif stats is not None:
-            W, _ = stats
-            tau = jnp.where(W > 0, m / W, 0.0)
-        else:
-            # non-adaptive part tau = m / W_part: each part's W is recoverable
-            W = jnp.sum(jnp.where(parts.tau > 0, m / parts.tau, 0.0))
-            tau = jnp.where(W > 0, m / W, 0.0)
-        include = jnp.isfinite(ranks) & (w_u > 0) & (h_u <= tau * w_u)
-        out_cap = cap
-    # keep smallest-rank included entries up to out_cap (threshold overflow
-    # evicts largest ranks first, as the builders do), then re-sort by id —
-    # positions ride along as a payload so the rows gather afterwards
-    from repro.core.sketches import select_and_pack
-    pos_f = jnp.arange(idx_u.shape[0], dtype=jnp.float32)
-    kidx, kpos = select_and_pack(ranks, include, idx_u, pos_f, out_cap)
-    valid = kidx != INVALID_IDX
-    krows = jnp.where(valid[:, None], rows_u[kpos.astype(jnp.int32)], 0.0)
-    return MatrixSketch(row_idx=kidx, rows=krows,
-                        tau=jnp.asarray(tau, jnp.float32))
+           adaptive, dedupe) -> MatrixSketch:
+    """(P, cap, d) parts -> merged sketch via the payload-generic engine
+    (a D=1 batch of P payload parts; folded stats lift to (1,) rows)."""
+    from repro.engine.containers import PayloadSketch
+    from repro.engine.merge import merge_payload_sketches
+    P = parts.rows.shape[0]
+    lifted = PayloadSketch(idx=parts.row_idx[:, None, :],
+                           payload=parts.rows[:, None],
+                           tau=jnp.reshape(
+                               jnp.asarray(parts.tau, jnp.float32), (P, 1)))
+    folded = None if stats is None else (jnp.reshape(stats[0], (1,)),
+                                         jnp.reshape(stats[1], (1,)))
+    out = merge_payload_sketches(lifted, seed, m=m, method=method,
+                                 variant=variant, cap=cap, adaptive=adaptive,
+                                 stats=folded, dedupe=dedupe)
+    return MatrixSketch(row_idx=out.idx[0], rows=out.payload[0],
+                        tau=out.tau[0])
 
 
 def merge_matrix_sketches(parts, seed, *, m: int, method: str = "priority",

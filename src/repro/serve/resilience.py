@@ -333,21 +333,29 @@ class IngestJournal:
     forces fallback to an older one.
     """
 
-    def __init__(self, path: str, *, seq: Optional[int] = None):
+    def __init__(self, path: str, *, seq: Optional[int] = None,
+                 valid_end: Optional[int] = None):
         """``seq``: resume numbering from a known position instead of
         taking it from the existing file (recovery already parsed it).
-        Either way the file is scanned once so a corrupt/truncated tail is
-        cut off *before* the file reopens for append."""
+        ``valid_end``: byte offset past the last valid record, from a scan
+        the caller already ran (:meth:`scan_all`) — skips the re-scan but
+        still cuts the corrupt/truncated tail.  Without it the file is
+        scanned here, so either way the tail is cut off *before* the file
+        reopens for append."""
         self.path = path
         self._seq = seq if seq is not None else 0
         if os.path.exists(path):
-            records, dropped, valid_end = self._scan(path)
-            if dropped:
-                # drop the corrupt tail now: appending after it would put
-                # acknowledged records where no replay ever reaches
-                os.truncate(path, valid_end)
-            if seq is None and records:
-                self._seq = records[-1][0]
+            if seq is not None and valid_end is not None:
+                if os.path.getsize(path) > valid_end:
+                    # drop the corrupt tail now: appending after it would
+                    # put acknowledged records where no replay ever reaches
+                    os.truncate(path, valid_end)
+            else:
+                records, dropped, v_end = self._scan(path)
+                if dropped:
+                    os.truncate(path, v_end)
+                if seq is None and records:
+                    self._seq = records[-1][0]
         self._fh = open(path, "a")
 
     @property
@@ -400,7 +408,14 @@ class IngestJournal:
         the truncation point that makes the file safe to append to.  A
         final record missing its newline counts as tail: :meth:`append`
         fsyncs the full line before acking, so an acked record always has
-        its terminator."""
+        its terminator.
+
+        Records at or before ``after_seq`` are structurally walked (parsed,
+        terminator-checked) but not checksummed: their bytes are already
+        inside the snapshot being recovered from and are never replayed —
+        the same rationale by which :meth:`read_all` skips whole archived
+        segments ending at or before the snapshot sequence.  This keeps
+        recovery O(live tail) in validation work, not O(journal)."""
         records = []
         dropped = 0
         valid_end = 0
@@ -414,10 +429,11 @@ class IngestJournal:
                 if not raw.endswith(b"\n"):
                     raise ValueError("truncated record (no terminator)")
                 rec = json.loads(raw.decode())
-                canon = json.dumps(rec["body"], sort_keys=True)
-                if (zlib.crc32(canon.encode()) & 0xFFFFFFFF) != rec["crc"]:
-                    raise ValueError("CRC mismatch")
                 seq, op, body = int(rec["seq"]), rec["op"], rec["body"]
+                if seq > after_seq:
+                    canon = json.dumps(body, sort_keys=True)
+                    if (zlib.crc32(canon.encode()) & 0xFFFFFFFF) != rec["crc"]:
+                        raise ValueError("CRC mismatch")
             except (ValueError, KeyError, TypeError, UnicodeDecodeError):
                 dropped = len(lines) - i
                 break
@@ -436,11 +452,11 @@ class IngestJournal:
         return records, dropped
 
     @classmethod
-    def read_all(cls, path: str, *, after_seq: int = 0):
-        """Read archived segments + the live journal, skipping whole
-        segments that end at or before ``after_seq`` (their records are
-        already inside the snapshot being recovered from).  Stops at the
-        first corrupt record — later segments may depend on the gap."""
+    def scan_all(cls, path: str, *, after_seq: int = 0):
+        """:meth:`read_all` plus the live journal's ``valid_end`` byte
+        offset (``None`` when a corrupt archive stopped the scan before
+        reaching the live file) — recovery hands it to :class:`__init__`
+        so the journal is scanned exactly once end to end."""
         directory = os.path.dirname(path) or "."
         segments = []
         if os.path.isdir(directory):
@@ -454,11 +470,21 @@ class IngestJournal:
                         segments.append(os.path.join(directory, name))
         records = []
         for seg in segments + [path]:
-            recs, dropped = cls.read(seg, after_seq=after_seq)
+            recs, dropped, valid_end = cls._scan(seg, after_seq)
             records.extend(recs)
+            live_end = valid_end if seg == path else None
             if dropped:
-                return records, dropped
-        return records, 0
+                return records, dropped, live_end
+        return records, 0, live_end
+
+    @classmethod
+    def read_all(cls, path: str, *, after_seq: int = 0):
+        """Read archived segments + the live journal, skipping whole
+        segments that end at or before ``after_seq`` (their records are
+        already inside the snapshot being recovered from).  Stops at the
+        first corrupt record — later segments may depend on the gap."""
+        records, dropped, _ = cls.scan_all(path, after_seq=after_seq)
+        return records, dropped
 
 
 class DurableSketchIndex:
@@ -477,14 +503,16 @@ class DurableSketchIndex:
 
     def __init__(self, directory: str, *, snapshot_every: Optional[int] = None,
                  index: Optional[SketchIndex] = None,
-                 _journal_seq: Optional[int] = None, **index_kwargs):
+                 _journal_seq: Optional[int] = None,
+                 _journal_valid_end: Optional[int] = None, **index_kwargs):
         os.makedirs(directory, exist_ok=True)
         self.directory = directory
         self.index = index if index is not None else SketchIndex(**index_kwargs)
         self.snapshot_every = snapshot_every
         self._ops_since_snapshot = 0
         self.journal = IngestJournal(os.path.join(directory, "journal.wal"),
-                                     seq=_journal_seq)
+                                     seq=_journal_seq,
+                                     valid_end=_journal_valid_end)
 
     # -- ingest (journaled) --------------------------------------------
     def add(self, name, vector=None, *, indices=None, values=None) -> None:
@@ -584,14 +612,14 @@ class DurableSketchIndex:
             os.path.join(directory, "snapshots"))
         if index is None:
             index = SketchIndex(**index_kwargs)
-        records, dropped = IngestJournal.read_all(
+        records, dropped, live_end = IngestJournal.scan_all(
             os.path.join(directory, "journal.wal"), after_seq=seq)
         last_seq = records[-1][0] if records else seq
         records = [r for r in records if r[1] != "checkpoint"]
         for rec_seq, op, body in records:
             cls._apply(index, op, body)
         out = cls(directory, snapshot_every=snapshot_every, index=index,
-                  _journal_seq=last_seq)
+                  _journal_seq=last_seq, _journal_valid_end=live_end)
         out.replayed_ops = len(records)
         out.dropped_tail = dropped
         return out

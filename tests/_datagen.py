@@ -1,0 +1,31 @@
+"""Synthetic data generators shared across test modules.
+
+Lives in its own helper module (not ``conftest.py``) so tests can
+``from _datagen import make_pair`` regardless of which directory's
+conftest happens to shadow the plain ``conftest`` module name on
+``sys.path`` when subdirectories like ``tests/parity/`` are collected.
+"""
+import numpy as np
+
+
+def make_pair(rng, n=20000, nnz=4000, overlap=0.1, outlier_frac=0.02,
+              outlier_scale=10.0, binary=False):
+    """Synthetic vector pair following Section 5.1's generator."""
+    a = np.zeros(n, np.float32)
+    b = np.zeros(n, np.float32)
+    n_common = int(nnz * overlap)
+    common = rng.choice(n, n_common, replace=False)
+    rest = np.setdiff1d(np.arange(n), common)
+    extra = rng.choice(rest, 2 * (nnz - n_common), replace=False)
+    ia = np.concatenate([common, extra[: nnz - n_common]])
+    ib = np.concatenate([common, extra[nnz - n_common:]])
+    if binary:
+        a[ia] = 1.0
+        b[ib] = 1.0
+    else:
+        a[ia] = rng.uniform(-1, 1, nnz)
+        b[ib] = rng.uniform(-1, 1, nnz)
+        n_out = max(1, int(nnz * outlier_frac))
+        a[rng.choice(ia, n_out, replace=False)] = rng.uniform(0, outlier_scale, n_out)
+        b[rng.choice(ib, n_out, replace=False)] = rng.uniform(0, outlier_scale, n_out)
+    return a, b

@@ -1,30 +1,19 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real single CPU device; only launch/dryrun.py forces 512 devices."""
+import zlib
+
 import numpy as np
 import pytest
 
+from _datagen import make_pair  # noqa: F401  (re-export for fixtures below)
 
-def make_pair(rng, n=20000, nnz=4000, overlap=0.1, outlier_frac=0.02,
-              outlier_scale=10.0, binary=False):
-    """Synthetic vector pair following Section 5.1's generator."""
-    a = np.zeros(n, np.float32)
-    b = np.zeros(n, np.float32)
-    n_common = int(nnz * overlap)
-    common = rng.choice(n, n_common, replace=False)
-    rest = np.setdiff1d(np.arange(n), common)
-    extra = rng.choice(rest, 2 * (nnz - n_common), replace=False)
-    ia = np.concatenate([common, extra[: nnz - n_common]])
-    ib = np.concatenate([common, extra[nnz - n_common:]])
-    if binary:
-        a[ia] = 1.0
-        b[ib] = 1.0
-    else:
-        a[ia] = rng.uniform(-1, 1, nnz)
-        b[ib] = rng.uniform(-1, 1, nnz)
-        n_out = max(1, int(nnz * outlier_frac))
-        a[rng.choice(ia, n_out, replace=False)] = rng.uniform(0, outlier_scale, n_out)
-        b[rng.choice(ib, n_out, replace=False)] = rng.uniform(0, outlier_scale, n_out)
-    return a, b
+
+@pytest.fixture
+def rng(request):
+    """Per-test deterministic RNG, seeded from the test's node id: data is
+    stable across runs and test orderings without hand-picked seed
+    constants, and two tests never share a stream by accident."""
+    return np.random.default_rng(zlib.crc32(request.node.nodeid.encode()))
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,139 @@
+"""Seeded case grid + numpy oracles for the differential parity harness.
+
+Every case is fully determined by its fields (data is generated from a
+``default_rng`` seeded with a stable hash of the case name), so a failure
+reproduces from the parametrize id alone.  The numpy oracles recompute the
+membership rules of Algorithms 1/3/4 from the frozen primitives only
+(``hash_unit`` and the per-entry weight) — they share *no* selection or
+packing code with ``repro.engine``.
+"""
+from __future__ import annotations
+
+import zlib
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.hashing import hash_unit
+from repro.engine import payload_weight
+
+
+class Case(NamedTuple):
+    name: str      # parametrize id; also seeds the data generator
+    method: str    # "threshold" | "priority"
+    variant: str   # payload weighting
+    n: int         # entries (vector length / matrix rows)
+    m: int         # sketch size
+    d: int         # payload dim (1 = vector)
+    edge: str      # data shape: dense | sparse | zero_row | small | ties
+
+    @property
+    def seed(self) -> int:
+        """Hash seed for the sketch build (decoupled from the data rng)."""
+        return zlib.crc32(self.name.encode()) & 0x7FFFFFFF
+
+
+def _mk(method, variant, n, m, d, edge):
+    name = f"{method}-{variant}-n{n}-m{m}-d{d}-{edge}"
+    return Case(name, method, variant, n, m, d, edge)
+
+
+# Small but deliberately spread: both samplers, all three weightings, the
+# keep-everything (n < m) and all-zero degenerate rows, heavy ties (rank
+# collisions stress the selection kernels), and sparse supports.
+VECTOR_CASES = [
+    _mk("priority", "l2", 300, 16, 1, "dense"),
+    _mk("priority", "l2", 300, 16, 1, "sparse"),
+    _mk("priority", "l1", 257, 8, 1, "dense"),
+    _mk("priority", "uniform", 300, 16, 1, "ties"),
+    _mk("priority", "l2", 12, 16, 1, "small"),
+    _mk("priority", "l2", 300, 16, 1, "zero_row"),
+    _mk("threshold", "l2", 300, 16, 1, "dense"),
+    _mk("threshold", "l2", 300, 16, 1, "sparse"),
+    _mk("threshold", "l1", 257, 8, 1, "dense"),
+    _mk("threshold", "uniform", 300, 16, 1, "ties"),
+    _mk("threshold", "l2", 12, 16, 1, "small"),
+    _mk("threshold", "l2", 300, 16, 1, "zero_row"),
+]
+
+MATRIX_CASES = [
+    _mk("priority", "l2", 200, 12, 3, "dense"),
+    _mk("priority", "l2", 200, 12, 5, "sparse"),
+    _mk("priority", "uniform", 200, 12, 3, "dense"),
+    _mk("priority", "l2", 9, 12, 3, "small"),
+    _mk("priority", "l2", 200, 12, 4, "zero_row"),
+    _mk("threshold", "l2", 200, 12, 3, "dense"),
+    _mk("threshold", "l2", 200, 12, 5, "sparse"),
+    _mk("threshold", "uniform", 200, 12, 3, "dense"),
+    _mk("threshold", "l2", 9, 12, 3, "small"),
+    _mk("threshold", "l2", 200, 12, 4, "zero_row"),
+]
+
+ALL_CASES = VECTOR_CASES + MATRIX_CASES
+
+
+def case_rng(case: Case) -> np.random.Generator:
+    return np.random.default_rng(zlib.crc32(b"data:" + case.name.encode()))
+
+
+def make_payloads(case: Case, D: int = 2) -> np.ndarray:
+    """(D, n, d) float32 payload batch for a case (d=1 => vector values)."""
+    rng = case_rng(case)
+    P = rng.uniform(-1.0, 1.0, (D, case.n, case.d)).astype(np.float32)
+    if case.variant == "uniform" or case.edge == "ties":
+        P = np.sign(P).astype(np.float32)          # binary +-1 rows
+    if case.edge == "sparse":
+        P[rng.random((D, case.n)) < 0.7] = 0.0     # 70% empty entries
+    if case.edge == "zero_row":
+        P[:, rng.choice(case.n, case.n // 4, replace=False)] = 0.0
+    # a few outliers keep the weighted samplers honest (except binary data)
+    if case.variant != "uniform" and case.edge not in ("ties", "small"):
+        hot = rng.choice(case.n, max(1, case.n // 50), replace=False)
+        P[:, hot] *= 10.0
+    return P
+
+
+def oracle_ranks(P: np.ndarray, seed: int, variant: str):
+    """(w, h, rank) per entry — numpy port of the sampling-rank transform,
+    with the weight taken from the frozen ``payload_weight`` so summation
+    order cannot skew the comparison."""
+    D, n, _ = P.shape
+    w = np.asarray(payload_weight(jnp.asarray(P), variant))
+    h = np.asarray(hash_unit(seed, jnp.arange(n, dtype=jnp.int32)))
+    h = np.broadcast_to(h, (D, n))
+    rank = np.where(w > 0, h / np.where(w > 0, w, 1.0), np.inf)
+    return w, h, rank
+
+
+def oracle_priority_kept(P: np.ndarray, m: int, seed: int, variant: str):
+    """Per batch row: (sorted kept entry ids, tau) under Algorithm 3."""
+    w, _, rank = oracle_ranks(P, seed, variant)
+    kept, taus = [], []
+    for dr in range(P.shape[0]):
+        order = np.argsort(rank[dr], kind="stable")
+        nnz = int((w[dr] > 0).sum())
+        kept.append(sorted(order[: min(m, nnz)].tolist()))
+        taus.append(np.float32(rank[dr][order[m]]) if nnz > m
+                    else np.float32(np.inf))
+    return kept, taus
+
+
+def oracle_threshold_kept(P: np.ndarray, seed: int, variant: str,
+                          tau: np.ndarray):
+    """Per batch row: sorted kept ids under Algorithm 1 at a *given* tau
+    (tau itself is checked separately against the frozen adaptive solver)."""
+    w, h, _ = oracle_ranks(P, seed, variant)
+    out = []
+    for dr in range(P.shape[0]):
+        t = float(tau[dr])
+        thresh = np.multiply(t, w[dr], where=w[dr] > 0,
+                             out=np.zeros_like(w[dr]))
+        out.append(sorted(np.nonzero((w[dr] > 0)
+                                     & (h[dr] <= thresh))[0].tolist()))
+    return out
+
+
+def valid_ids(idx: np.ndarray) -> list:
+    from repro.core.sketches import INVALID_IDX
+    return sorted(int(i) for i in np.asarray(idx).ravel() if i != INVALID_IDX)

@@ -1,0 +1,37 @@
+"""Parity-harness plumbing: path setup + grid summary artifact.
+
+Setting ``PARITY_SUMMARY=/path/to/summary.json`` makes the session write a
+machine-readable per-test outcome table (the CI ``parity`` job uploads it);
+unset, the hook is inert.  The ``sys.path`` insert lets parity tests reuse
+the top-level ``tests/`` helpers (``_subproc``, ``_datagen.make_pair``).
+"""
+import json
+import os
+import sys
+
+_TESTS_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _TESTS_DIR not in sys.path:
+    sys.path.insert(0, _TESTS_DIR)
+
+_RESULTS = []
+
+
+def pytest_runtest_logreport(report):
+    if report.when != "call":
+        return
+    if f"tests{os.sep}parity" not in report.nodeid.replace("/", os.sep):
+        return
+    _RESULTS.append({"test": report.nodeid, "outcome": report.outcome,
+                     "duration_s": round(report.duration, 3)})
+
+
+def pytest_sessionfinish(session, exitstatus):
+    path = os.environ.get("PARITY_SUMMARY")
+    if not path or not _RESULTS:
+        return
+    counts = {}
+    for r in _RESULTS:
+        counts[r["outcome"]] = counts.get(r["outcome"], 0) + 1
+    with open(path, "w") as f:
+        json.dump({"exit_status": int(exitstatus), "counts": counts,
+                   "results": _RESULTS}, f, indent=2)

@@ -1,0 +1,174 @@
+"""Bucketized-layout parity: engine (P, B, S, d) surface vs d=1 legacy.
+
+Pins the three claims of ``repro.engine.bucketized`` (DESIGN.md §18):
+
+- the payload bucketize scatter at d=1 is bit-identical to the legacy
+  value scatter (``kernels.intersect_estimate.bucketize_corpus``);
+- the merged-tau order statistic and the merge dispatch at d=1 are
+  bit-identical to ``kernels.sketch_merge`` on both backends, and the
+  d>1 jnp merge oracle degenerates to ``merge_bucketized_ref`` exactly;
+- the product kernel (Pallas, interpret off-TPU) agrees bit for bit with
+  the ``lax.map`` oracle at every payload dim (shared body), and with
+  the sorted-layout estimator up to summation order when nothing drops.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hashing import hash_unit
+from repro.core.sketches import INVALID_IDX
+from repro.engine import (BucketizedPayloads, bucketize_payload_sketches,
+                          bucketized_products, build_payload_corpus,
+                          estimate_product, merge_bucketized_payloads,
+                          merged_tau_bucketized_payloads, payload_weight)
+from repro.kernels.intersect_estimate import bucketize_corpus
+from repro.kernels.sketch_merge import (merge_bucketized_corpora,
+                                        merge_bucketized_ref)
+
+from _grid import Case, make_payloads
+
+N_BUCKETS, SLOTS = 64, 4
+
+
+def _corpus(case, P, indices=None):
+    sk = build_payload_corpus(jnp.asarray(P), case.m, case.seed,
+                              method=case.method, variant=case.variant,
+                              indices=indices)
+    return sk, bucketize_payload_sketches(sk, n_buckets=N_BUCKETS,
+                                          slots=SLOTS)
+
+
+def _split_corpus(case, D=3):
+    """Two coordinated corpora over disjoint halves of the same vectors."""
+    P = make_payloads(case, D=D)
+    rng = np.random.default_rng(5)
+    mask = rng.random(case.n) < 0.5
+    lo = np.where(mask[None, :, None], P, 0.0).astype(np.float32)
+    hi = np.where(mask[None, :, None], 0.0, P).astype(np.float32)
+    return _corpus(case, lo)[1], _corpus(case, hi)[1]
+
+
+VEC = Case("bucketized-vec", "priority", "l2", 300, 16, 1, "sparse")
+MAT3 = Case("bucketized-mat3", "priority", "l2", 200, 12, 3, "dense")
+
+
+def test_bucketize_d1_bit_identical_to_legacy():
+    P = make_payloads(VEC, D=3)
+    sk, bc = _corpus(VEC, P)
+    from repro.core.sketches import Sketch
+    legacy = bucketize_corpus(Sketch(sk.idx, sk.payload[..., 0], sk.tau),
+                              n_buckets=N_BUCKETS, slots=SLOTS)
+    np.testing.assert_array_equal(np.asarray(bc.idx), np.asarray(legacy.idx))
+    np.testing.assert_array_equal(np.asarray(bc.payload[..., 0]),
+                                  np.asarray(legacy.val))
+    np.testing.assert_array_equal(np.asarray(bc.tau), np.asarray(legacy.tau))
+    np.testing.assert_array_equal(np.asarray(bc.dropped),
+                                  np.asarray(legacy.dropped))
+
+
+def test_merged_tau_matches_numpy_union_oracle():
+    A, B = _split_corpus(VEC)
+    m = VEC.m
+    tau = merged_tau_bucketized_payloads(A, B, VEC.seed, m=m,
+                                         variant=VEC.variant)
+    a_idx, b_idx = np.asarray(A.idx), np.asarray(B.idx)
+    wa = np.asarray(payload_weight(A.payload, VEC.variant))
+    wb = np.asarray(payload_weight(B.payload, VEC.variant))
+    for dr in range(a_idx.shape[0]):
+        cand = [float(A.tau[dr]), float(B.tau[dr])]
+        a_ids = set()
+        for bk in range(N_BUCKETS):
+            for s in range(SLOTS):
+                i = int(a_idx[dr, bk, s])
+                if i != INVALID_IDX:
+                    a_ids.add(i)
+                    h = float(hash_unit(VEC.seed, jnp.int32(i)))
+                    cand.append(h / wa[dr, bk, s] if wa[dr, bk, s] > 0
+                                else np.inf)
+        for bk in range(N_BUCKETS):
+            for s in range(SLOTS):
+                i = int(b_idx[dr, bk, s])
+                if i != INVALID_IDX and i not in a_ids:
+                    h = float(hash_unit(VEC.seed, jnp.int32(i)))
+                    cand.append(h / wb[dr, bk, s] if wb[dr, bk, s] > 0
+                                else np.inf)
+        want = np.sort(np.asarray(cand, np.float32))[m]
+        assert float(tau[dr]) == pytest.approx(float(want), rel=1e-6), dr
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+def test_merge_d1_bit_identical_to_legacy(use_pallas):
+    A, B = _split_corpus(VEC)
+    got = merge_bucketized_payloads(A, B, VEC.seed, m=VEC.m,
+                                    variant=VEC.variant,
+                                    use_pallas=use_pallas)
+    from repro.kernels.intersect_estimate import BucketizedSketch
+    legacy = merge_bucketized_corpora(
+        BucketizedSketch(A.idx, A.payload[..., 0], A.tau, A.dropped),
+        BucketizedSketch(B.idx, B.payload[..., 0], B.tau, B.dropped),
+        VEC.seed, m=VEC.m, variant=VEC.variant, use_pallas=use_pallas)
+    np.testing.assert_array_equal(np.asarray(got.idx),
+                                  np.asarray(legacy.idx))
+    np.testing.assert_array_equal(np.asarray(got.payload[..., 0]),
+                                  np.asarray(legacy.val))
+    np.testing.assert_array_equal(np.asarray(got.tau),
+                                  np.asarray(legacy.tau))
+    np.testing.assert_array_equal(np.asarray(got.dropped),
+                                  np.asarray(legacy.dropped))
+
+
+def test_merge_oracle_d1_degenerates_to_ref():
+    from repro.engine.bucketized import _merge_payloads_oracle
+    A, B = _split_corpus(VEC)
+    tau = merged_tau_bucketized_payloads(A, B, VEC.seed, m=VEC.m,
+                                         variant=VEC.variant)
+    oi, op, od = _merge_payloads_oracle(A.idx, A.payload, B.idx, B.payload,
+                                        tau, VEC.seed, variant=VEC.variant)
+    ri, rv, rd = merge_bucketized_ref(A.idx, A.payload[..., 0],
+                                      B.idx, B.payload[..., 0],
+                                      tau, VEC.seed, variant=VEC.variant)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(op[..., 0]), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(od), np.asarray(rd))
+
+
+def test_merge_d3_matches_one_shot_corpus():
+    """d>1 bucketized merge == bucketizing the one-shot merged sketch:
+    same kept ids everywhere, same payload rows (bucket layouts agree
+    because bucket assignment is id-deterministic)."""
+    A, B = _split_corpus(MAT3)
+    got = merge_bucketized_payloads(A, B, MAT3.seed, m=MAT3.m,
+                                    variant=MAT3.variant)
+    assert int(np.asarray(got.dropped).sum()) == 0
+    P = make_payloads(MAT3, D=3)
+    _, full = _corpus(MAT3, P)
+    np.testing.assert_array_equal(np.asarray(got.idx), np.asarray(full.idx))
+    np.testing.assert_array_equal(np.asarray(got.payload),
+                                  np.asarray(full.payload))
+    np.testing.assert_array_equal(np.asarray(got.tau), np.asarray(full.tau))
+
+
+@pytest.mark.parametrize("case", [VEC, MAT3], ids=["d1", "d3"])
+def test_products_pallas_bit_identical_to_oracle(case):
+    P = make_payloads(case, D=4)
+    Q = make_payloads(case, D=4) * np.float32(0.5) + np.float32(0.1)
+    _, A = _corpus(case, P)
+    _, B = _corpus(case, Q.astype(np.float32))
+    ref = bucketized_products(A, B, variant=case.variant, use_pallas=False)
+    pal = bucketized_products(A, B, variant=case.variant, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(pal), np.asarray(ref))
+
+
+def test_products_d1_match_sorted_estimator():
+    P = make_payloads(VEC, D=4)
+    Q = np.roll(P, 1, axis=1)
+    sa, A = _corpus(VEC, P)
+    sb, B = _corpus(VEC, Q)
+    assert int(np.asarray(A.dropped).sum() + np.asarray(B.dropped).sum()) == 0
+    prod = np.asarray(bucketized_products(A, B, variant=VEC.variant))[:, 0, 0]
+    import jax
+    sorted_est = np.asarray(jax.vmap(
+        lambda i, p, t, i2, p2, t2: estimate_product(
+            type(sa)(i, p, t), type(sa)(i2, p2, t2), variant=VEC.variant))(
+        sa.idx, sa.payload, sa.tau, sb.idx, sb.payload, sb.tau))
+    np.testing.assert_allclose(prod, sorted_est, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,110 @@
+"""Differential build parity: engine vs frozen legacy oracles (DESIGN.md §18).
+
+Three independent anchors pin the payload-generic builders:
+
+1. d=1 against the *frozen* sort-based single-vector references
+   (``threshold_sketch``/``priority_sketch``, ``backend="reference"``) —
+   bit-exact kept set and values; tau bit-exact for priority (pure order
+   statistic) and for the ``sort`` selector's threshold closed form.
+2. selector ``pallas`` (interpret off-TPU) against selector ``xla`` —
+   bit-exact on every field for every case, d=1 and d>1.
+3. every d against the numpy membership-rule oracles in ``_grid``, which
+   share no selection/packing code with the engine.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.threshold import adaptive_tau
+from repro.engine import build_payload_corpus
+from repro.kernels.sketch_build.ref import (build_priority_corpus_ref,
+                                            build_threshold_corpus_ref)
+
+from _grid import (ALL_CASES, VECTOR_CASES, make_payloads,
+                   oracle_priority_kept, oracle_threshold_kept, valid_ids)
+
+ids = [c.name for c in ALL_CASES]
+vec_ids = [c.name for c in VECTOR_CASES]
+
+
+def _build(case, P, selector):
+    return build_payload_corpus(jnp.asarray(P), case.m, case.seed,
+                                method=case.method, variant=case.variant,
+                                selector=selector)
+
+
+@pytest.mark.parametrize("case", VECTOR_CASES, ids=vec_ids)
+def test_engine_matches_frozen_vector_reference(case):
+    P = make_payloads(case)
+    sk = _build(case, P, "xla")
+    if case.method == "priority":
+        ref = build_priority_corpus_ref(P[..., 0], case.m, case.seed,
+                                        variant=case.variant)
+    else:
+        ref = build_threshold_corpus_ref(P[..., 0], case.m, case.seed,
+                                         variant=case.variant)
+    np.testing.assert_array_equal(np.asarray(sk.idx), np.asarray(ref.idx))
+    np.testing.assert_array_equal(np.asarray(sk.payload[..., 0]),
+                                  np.asarray(ref.val))
+    if case.method == "priority":
+        np.testing.assert_array_equal(np.asarray(sk.tau), np.asarray(ref.tau))
+    else:
+        # adaptive tau: equal up to the batched solver's summation order
+        np.testing.assert_allclose(np.asarray(sk.tau), np.asarray(ref.tau),
+                                   rtol=1e-6)
+        # the sort selector reuses the reference solver verbatim: bit-exact
+        sk_sort = _build(case, P, "sort")
+        np.testing.assert_array_equal(np.asarray(sk_sort.tau),
+                                      np.asarray(ref.tau))
+
+
+@pytest.mark.parametrize("case", ALL_CASES, ids=ids)
+def test_selector_pallas_bit_identical_to_xla(case):
+    P = make_payloads(case)
+    a = _build(case, P, "xla")
+    b = _build(case, P, "pallas")
+    np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx))
+    np.testing.assert_array_equal(np.asarray(a.payload),
+                                  np.asarray(b.payload))
+    np.testing.assert_array_equal(np.asarray(a.tau), np.asarray(b.tau))
+
+
+@pytest.mark.parametrize("case", ALL_CASES, ids=ids)
+def test_engine_matches_numpy_membership_oracle(case):
+    P = make_payloads(case)
+    sk = _build(case, P, "xla")
+    idx = np.asarray(sk.idx)
+    tau = np.asarray(sk.tau)
+    if case.method == "priority":
+        kept_ref, tau_ref = oracle_priority_kept(P, case.m, case.seed,
+                                                 case.variant)
+        np.testing.assert_array_equal(tau, np.asarray(tau_ref))
+    else:
+        from repro.engine import payload_weight
+        w = payload_weight(jnp.asarray(P), case.variant)
+        tau_ref = [adaptive_tau(w[dr], case.m) for dr in range(P.shape[0])]
+        np.testing.assert_allclose(tau, np.asarray(tau_ref), rtol=1e-6)
+        kept_ref = oracle_threshold_kept(P, case.seed, case.variant, tau)
+    for dr in range(P.shape[0]):
+        kept = valid_ids(idx[dr])
+        if len(kept_ref[dr]) <= sk.capacity:
+            assert kept == kept_ref[dr], case.name
+    # payload rows round-trip exactly for every kept id
+    pay = np.asarray(sk.payload)
+    for dr in range(P.shape[0]):
+        for j, i in enumerate(np.asarray(sk.idx[dr])):
+            if int(i) != np.iinfo(np.int32).max:
+                np.testing.assert_array_equal(pay[dr, j], P[dr, int(i)])
+
+
+def test_vector_adapter_roundtrip():
+    """from_vector/to_vector and from_matrix/to_matrix are zero-cost views."""
+    from repro.core.priority import priority_sketch
+    from repro.engine import from_vector, to_vector
+    case = VECTOR_CASES[0]
+    a = make_payloads(case)[0, :, 0]
+    s = priority_sketch(jnp.asarray(a), case.m, case.seed)
+    rt = to_vector(from_vector(s))
+    np.testing.assert_array_equal(np.asarray(rt.idx), np.asarray(s.idx))
+    np.testing.assert_array_equal(np.asarray(rt.val), np.asarray(s.val))
+    np.testing.assert_array_equal(np.asarray(rt.tau), np.asarray(s.tau))

@@ -1,0 +1,96 @@
+"""Hypothesis properties of the payload-generic engine (DESIGN.md §18).
+
+The membership rules are deterministic given the hash, so these are exact
+invariants on arbitrary payload batches — including the cross-selector
+bit-identity, which hypothesis probes far off the curated ``_grid`` cases.
+Skipped when hypothesis is absent (see requirements-dev.txt); CI runs them.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis not installed (see requirements-dev.txt); "
+           "engine property tests skipped")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sketches import INVALID_IDX
+from repro.engine import build_payload_corpus, payload_weight
+
+payload_case = st.tuples(
+    st.integers(min_value=4, max_value=120),          # n
+    st.integers(min_value=1, max_value=4),            # d
+    st.integers(min_value=1, max_value=24),           # m
+    st.integers(min_value=0, max_value=2 ** 31 - 1),  # seed
+    st.integers(min_value=0, max_value=2 ** 16 - 1),  # data seed
+    st.floats(min_value=0.1, max_value=0.9),          # density
+)
+
+
+def _payloads(n, d, data_seed, density, D=2):
+    rng = np.random.default_rng(data_seed)
+    P = rng.uniform(-8.0, 8.0, (D, n, d)).astype(np.float32)
+    P[rng.random((D, n)) > density] = 0.0
+    return P
+
+
+@settings(max_examples=40, deadline=None)
+@given(payload_case, st.sampled_from(["priority", "threshold"]))
+def test_selectors_bit_identical(case, method):
+    n, d, m, seed, data_seed, density = case
+    P = jnp.asarray(_payloads(n, d, data_seed, density))
+    a = build_payload_corpus(P, m, seed, method=method, selector="xla")
+    b = build_payload_corpus(P, m, seed, method=method, selector="pallas")
+    np.testing.assert_array_equal(np.asarray(a.idx), np.asarray(b.idx))
+    np.testing.assert_array_equal(np.asarray(a.payload),
+                                  np.asarray(b.payload))
+    np.testing.assert_array_equal(np.asarray(a.tau), np.asarray(b.tau))
+
+
+@settings(max_examples=40, deadline=None)
+@given(payload_case)
+def test_priority_size_is_min_m_nnz(case):
+    n, d, m, seed, data_seed, density = case
+    P = _payloads(n, d, data_seed, density)
+    sk = build_payload_corpus(jnp.asarray(P), m, seed, method="priority")
+    nnz = np.any(P != 0, axis=-1).sum(axis=-1)
+    np.testing.assert_array_equal(np.asarray(sk.size()),
+                                  np.minimum(m, nnz))
+
+
+@settings(max_examples=40, deadline=None)
+@given(payload_case)
+def test_threshold_membership_rule(case):
+    n, d, m, seed, data_seed, density = case
+    from repro.core.hashing import hash_unit
+    P = _payloads(n, d, data_seed, density)
+    sk = build_payload_corpus(jnp.asarray(P), m, seed, method="threshold")
+    w = np.asarray(payload_weight(jnp.asarray(P), "l2"))
+    h = np.asarray(hash_unit(seed, jnp.arange(n, dtype=jnp.int32)))
+    idx = np.asarray(sk.idx)
+    for dr in range(P.shape[0]):
+        kept = set(int(i) for i in idx[dr] if i != INVALID_IDX)
+        thresh = np.multiply(float(sk.tau[dr]), w[dr], where=w[dr] > 0,
+                             out=np.zeros_like(w[dr]))
+        expected = set(np.nonzero((w[dr] > 0) & (h <= thresh))[0].tolist())
+        if len(expected) <= sk.capacity:
+            assert kept == expected
+
+
+@settings(max_examples=30, deadline=None)
+@given(payload_case, st.sampled_from(["priority", "threshold"]))
+def test_idx_sorted_unique_payload_zero_padded(case, method):
+    n, d, m, seed, data_seed, density = case
+    P = _payloads(n, d, data_seed, density)
+    sk = build_payload_corpus(jnp.asarray(P), m, seed, method=method)
+    idx = np.asarray(sk.idx)
+    pay = np.asarray(sk.payload)
+    for dr in range(P.shape[0]):
+        valid = idx[dr][idx[dr] != INVALID_IDX]
+        assert np.all(np.diff(valid) > 0)
+        assert np.all(pay[dr][idx[dr] == INVALID_IDX] == 0.0)
+        # kept payload rows are verbatim source rows
+        for j, i in enumerate(idx[dr]):
+            if i != INVALID_IDX:
+                np.testing.assert_array_equal(pay[dr, j], P[dr, int(i)])

@@ -1,0 +1,125 @@
+"""Differential merge parity: shimmed merges vs one-shot frozen builds.
+
+The §14 contract, now carried by ``repro.engine.merge`` for both surfaces:
+a priority merge of disjoint partitions is *bit-exact* against sketching
+the union in one shot; a threshold merge reproduces the kept set exactly
+and the adaptive tau up to summation order, given ``PartitionStats``.
+The one-shot side uses the frozen single-vector references, so vector
+merge parity is independent of engine build code; the matrix cases pin
+engine-merge against engine-build (different code paths).  A subprocess
+case re-runs one vector merge under 8 forced host devices — the union
+math must not depend on device count.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (merge_sketches_many, partition_stats,
+                        priority_sketch, threshold_sketch)
+from repro.core.merge import PartitionStats
+from repro.matrix import (matrix_partition_stats, merge_matrix_sketches,
+                          priority_matrix_sketch, threshold_matrix_sketch)
+
+from _grid import MATRIX_CASES, VECTOR_CASES, make_payloads
+from _subproc import run_with_devices
+
+P_PARTS = 3
+
+
+def _vector_parts(a):
+    """Split a vector into P contiguous global-index ranges (vals, ids)."""
+    n = a.shape[0]
+    bounds = np.linspace(0, n, P_PARTS + 1).astype(int)
+    return [(a[lo:hi], np.arange(lo, hi, dtype=np.int32))
+            for lo, hi in zip(bounds[:-1], bounds[1:])]
+
+
+def _stack_stats(parts_dense, variant):
+    ss = [partition_stats(p, variant=variant) for p in parts_dense]
+    return PartitionStats(jnp.stack([s.total_weight for s in ss]),
+                          jnp.stack([s.nnz for s in ss]))
+
+
+@pytest.mark.parametrize("case", VECTOR_CASES,
+                         ids=[c.name for c in VECTOR_CASES])
+def test_vector_merge_matches_one_shot_reference(case):
+    a = make_payloads(case, D=1)[0, :, 0]
+    build = priority_sketch if case.method == "priority" else threshold_sketch
+    full = build(jnp.asarray(a), case.m, case.seed, variant=case.variant)
+    parts = [build(jnp.asarray(v), case.m, case.seed, variant=case.variant,
+                   indices=jnp.asarray(ids))
+             for v, ids in _vector_parts(a)]
+    kw = {}
+    if case.method == "threshold":
+        dense = [np.zeros_like(a) for _ in range(P_PARTS)]
+        for (v, ids), buf in zip(_vector_parts(a), dense):
+            buf[ids] = v
+        kw["stats"] = _stack_stats(dense, case.variant)
+    mg = merge_sketches_many(parts, case.seed, m=case.m, method=case.method,
+                             variant=case.variant, **kw)
+    np.testing.assert_array_equal(np.asarray(mg.idx), np.asarray(full.idx))
+    np.testing.assert_array_equal(np.asarray(mg.val), np.asarray(full.val))
+    if case.method == "priority":
+        np.testing.assert_array_equal(np.asarray(mg.tau),
+                                      np.asarray(full.tau))
+    else:
+        np.testing.assert_allclose(np.asarray(mg.tau), np.asarray(full.tau),
+                                   rtol=1e-5)
+
+
+@pytest.mark.parametrize("case", MATRIX_CASES,
+                         ids=[c.name for c in MATRIX_CASES])
+def test_matrix_merge_matches_one_shot(case):
+    A = make_payloads(case, D=1)[0]
+    build = (priority_matrix_sketch if case.method == "priority"
+             else threshold_matrix_sketch)
+    full = build(jnp.asarray(A), case.m, case.seed, variant=case.variant)
+    bounds = np.linspace(0, case.n, P_PARTS + 1).astype(int)
+    parts, stats = [], []
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        parts.append(build(jnp.asarray(A[lo:hi]), case.m, case.seed,
+                           variant=case.variant,
+                           row_indices=jnp.arange(lo, hi, dtype=jnp.int32)))
+        stats.append(matrix_partition_stats(jnp.asarray(A[lo:hi]),
+                                            variant=case.variant))
+    kw = {}
+    if case.method == "threshold":
+        kw["stats"] = PartitionStats(
+            jnp.stack([s.total_weight for s in stats]),
+            jnp.stack([s.nnz for s in stats]))
+    mg = merge_matrix_sketches(parts, case.seed, m=case.m,
+                               method=case.method, variant=case.variant, **kw)
+    np.testing.assert_array_equal(np.asarray(mg.row_idx),
+                                  np.asarray(full.row_idx))
+    np.testing.assert_array_equal(np.asarray(mg.rows), np.asarray(full.rows))
+    if case.method == "priority":
+        np.testing.assert_array_equal(np.asarray(mg.tau),
+                                      np.asarray(full.tau))
+    else:
+        np.testing.assert_allclose(np.asarray(mg.tau), np.asarray(full.tau),
+                                   rtol=1e-5)
+
+
+def test_vector_merge_parity_survives_multi_device():
+    """Same merge-vs-one-shot check inside a subprocess with
+    ``--xla_force_host_platform_device_count=8``: the engine union must be
+    bit-stable under a different device topology."""
+    run_with_devices("""
+import numpy as np, jax, jax.numpy as jnp
+assert jax.device_count() == 8, jax.device_count()
+from repro.core import merge_sketches_many, priority_sketch
+rng = np.random.default_rng(123)
+a = np.where(rng.random(3000) < 0.4,
+             rng.standard_normal(3000), 0.0).astype(np.float32)
+m, seed = 48, 11
+full = priority_sketch(jnp.asarray(a), m, seed)
+bounds = np.linspace(0, 3000, 4).astype(int)
+parts = [priority_sketch(jnp.asarray(a[lo:hi]), m, seed,
+                         indices=jnp.arange(lo, hi, dtype=jnp.int32))
+         for lo, hi in zip(bounds[:-1], bounds[1:])]
+mg = merge_sketches_many(parts, seed, m=m)
+np.testing.assert_array_equal(np.asarray(mg.idx), np.asarray(full.idx))
+np.testing.assert_array_equal(np.asarray(mg.val), np.asarray(full.val))
+np.testing.assert_array_equal(np.asarray(mg.tau), np.asarray(full.tau))
+print("OK")
+""", n_devices=8)

@@ -61,7 +61,7 @@ def test_wmh_reasonable(vector_pair):
 def test_weighted_sampling_beats_linear_sketching_low_overlap():
     """Headline claim (Figure 3): at low overlap TS/PS-weighted error is far
     below JL/CountSketch at equal m."""
-    from conftest import make_pair
+    from _datagen import make_pair
     from repro.core import estimate_inner_product, priority_sketch
     rng = np.random.default_rng(9)
     a, b = make_pair(rng, overlap=0.05)

@@ -29,8 +29,7 @@ def test_vector_m_exceeds_n():
         assert est == pytest.approx(float(jnp.dot(a, b)), rel=1e-5)
 
 
-def test_matrix_m_exceeds_n():
-    rng = np.random.default_rng(0)
+def test_matrix_m_exceeds_n(rng):
     A = rng.standard_normal((6, 3)).astype(np.float32)
     B = rng.standard_normal((6, 3)).astype(np.float32)
     A[2] = 0
@@ -47,10 +46,9 @@ def test_matrix_m_exceeds_n():
 # ---------------------------------------------------------------------------
 
 
-def test_vector_all_zero():
+def test_vector_all_zero(rng):
     z = jnp.zeros((32,), jnp.float32)
-    b = jnp.asarray(np.random.default_rng(1).standard_normal(32)
-                    .astype(np.float32))
+    b = jnp.asarray(rng.standard_normal(32).astype(np.float32))
     for fn in (priority_sketch, threshold_sketch):
         sz = fn(z, 8, 3)
         sb = fn(b, 8, 3)
@@ -59,10 +57,9 @@ def test_vector_all_zero():
         assert float(estimate_inner_product(sz, sz)) == 0.0
 
 
-def test_matrix_all_zero_rows():
+def test_matrix_all_zero_rows(rng):
     Z = jnp.zeros((32, 4), jnp.float32)
-    B = jnp.asarray(np.random.default_rng(1).standard_normal((32, 4))
-                    .astype(np.float32))
+    B = jnp.asarray(rng.standard_normal((32, 4)).astype(np.float32))
     for build in (priority_matrix_sketch, threshold_matrix_sketch):
         sz = build(Z, 8, 3)
         sb = build(B, 8, 3)
@@ -71,8 +68,7 @@ def test_matrix_all_zero_rows():
             np.asarray(estimate_matrix_product(sz, sb)), 0.0)
 
 
-def test_matrix_partially_zero_rows_never_sampled():
-    rng = np.random.default_rng(2)
+def test_matrix_partially_zero_rows_never_sampled(rng):
     A = rng.standard_normal((128, 4)).astype(np.float32)
     A[::2] = 0
     sk = priority_matrix_sketch(jnp.asarray(A), 32, 3)

@@ -43,7 +43,7 @@ def test_weighted_beats_uniform_with_outliers():
     """The core claim of the paper: l2^2 sampling beats uniform sampling
     when entry magnitudes vary (Figure 3 vs uniform baselines).  The paper
     notes the gap grows with outlier magnitude; use a clearly skewed pair."""
-    from conftest import make_pair
+    from _datagen import make_pair
     rng = np.random.default_rng(11)
     a, b = make_pair(rng, overlap=0.3, outlier_frac=0.02, outlier_scale=50.0)
     a, b = jnp.array(a), jnp.array(b)
