@@ -137,6 +137,42 @@ def roofline_stats(fn, *args, measured: "Timing | float | None" = None):
     return out
 
 
+# Opt-in observability recording, set by ``run.py --obs`` (mirrors the
+# roofline pattern above): the registry runs during every module and its
+# snapshot rides into the JSON artifact as one row per module.
+_OBS = False
+
+
+def set_obs(on: bool) -> None:
+    """Enable/disable obs-registry recording for benchmark runs
+    (``--obs``): flips the process-wide ``repro.obs`` switch."""
+    global _OBS
+    _OBS = bool(on)
+    from repro import obs
+    if on:
+        obs.enable()
+    else:
+        obs.disable()
+
+
+def obs_recording() -> bool:
+    return _OBS
+
+
+def obs_snapshot_row(module: str, profile: str):
+    """One JSON row carrying the registry snapshot accumulated while
+    ``module`` ran, then a reset so the next module starts clean.
+    Returns ``None`` when ``--obs`` is off."""
+    if not _OBS:
+        return None
+    from repro import obs
+    snap = obs.snapshot()
+    obs.reset()
+    return {"module": module, "name": f"{module}/obs/registry",
+            "us_per_call": 0.0, "derived": "obs registry snapshot",
+            "profile": profile, "obs": snap}
+
+
 # Global repetition override, set by ``run.py --repeats N`` (PR 1 measured
 # ~2x wall-clock noise on this box; medians over more repeats tighten every
 # gate the same way, so one flag governs all suites).

@@ -25,7 +25,7 @@ from . import (allpairs_throughput, common, construction_throughput,
                degraded_serving, fig3_synthetic_ip, fig4_binary,
                fig5_endbiased, fig6_join_corr, fig7_runtime, fig9_textsim,
                fig10_joinsize, matrix_product, merge_throughput,
-               table2_realworld, topk_discovery)
+               obs_overhead, table2_realworld, topk_discovery)
 
 MODULES = [
     ("fig3_synthetic_ip", fig3_synthetic_ip),
@@ -42,6 +42,7 @@ MODULES = [
     ("merge_throughput", merge_throughput),
     ("matrix_product", matrix_product),
     ("degraded_serving", degraded_serving),
+    ("obs_overhead", obs_overhead),
 ]
 
 
@@ -102,9 +103,15 @@ def main() -> None:
                     help="opt-in HLO-level roofline accounting: modules "
                          "that support it attach FLOPs/bytes + achieved-"
                          "vs-peak fractions to their rows (DESIGN.md §9)")
+    ap.add_argument("--obs", action="store_true",
+                    help="opt-in observability recording: runs every "
+                         "module with repro.obs enabled and attaches one "
+                         "registry-snapshot row per module to the JSON "
+                         "artifact (DESIGN.md §19)")
     args = ap.parse_args()
     common.set_repeats(args.repeats)
     common.set_roofline(args.roofline)
+    common.set_obs(args.obs)
     print("name,us_per_call,derived")
     failures = []
     all_rows = []
@@ -121,6 +128,10 @@ def main() -> None:
                                          "full" if args.full else "quick"))
             if "/validate/" in row_name and "FAIL" in derived:
                 failures.append((row_name, derived))
+        obs_row = common.obs_snapshot_row(name,
+                                          "full" if args.full else "quick")
+        if obs_row is not None:
+            all_rows.append(obs_row)
         print(f"# {name} done in {time.time()-t0:.0f}s", file=sys.stderr)
     if args.json_out:
         payload = merge_json_rows(args.json_out, ran, all_rows,

@@ -35,6 +35,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.hashing import hash_unit
 from repro.core.sketches import INVALID_IDX, sampling_ranks
 from repro.core.threshold import adaptive_tau
@@ -194,17 +195,22 @@ def build_payload_corpus(payloads: jnp.ndarray, m: int, seed, *,
         P = P[..., None]
     if P.ndim != 3:
         raise ValueError(f"expected (D, n, d) payloads, got shape {P.shape}")
-    sel = resolve_selector(selector)
-    if indices is not None:
-        indices = jnp.asarray(indices, jnp.int32)
-    if method == "threshold":
-        if cap is None:
-            cap = payload_capacity(m)
-        return _build_threshold_payload(P, seed, indices, m=m,
-                                        variant=variant, cap=cap,
-                                        adaptive=adaptive, selector=sel)
-    if method == "priority":
-        return _build_priority_payload(P, seed, indices, m=m,
-                                       variant=variant, selector=sel)
-    raise ValueError(f"unknown method {method!r}; "
-                     "expected 'threshold' or 'priority'")
+    # jit boundary rule (DESIGN.md §19): under tracing this records one
+    # retrace tick and no span — the body must never be timed inside jit
+    with obs.engine_op("build_payload_corpus",
+                       isinstance(P, jax.core.Tracer)) as sp:
+        sp.set("method", method)
+        sel = resolve_selector(selector)
+        if indices is not None:
+            indices = jnp.asarray(indices, jnp.int32)
+        if method == "threshold":
+            if cap is None:
+                cap = payload_capacity(m)
+            return _build_threshold_payload(P, seed, indices, m=m,
+                                            variant=variant, cap=cap,
+                                            adaptive=adaptive, selector=sel)
+        if method == "priority":
+            return _build_priority_payload(P, seed, indices, m=m,
+                                           variant=variant, selector=sel)
+        raise ValueError(f"unknown method {method!r}; "
+                         "expected 'threshold' or 'priority'")

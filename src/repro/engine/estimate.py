@@ -27,8 +27,10 @@ is the batched serving path.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.sketches import INVALID_IDX
 
 from .containers import PayloadSketch, payload_weight
@@ -64,24 +66,30 @@ def estimate_product(sa: PayloadSketch, sb: PayloadSketch, *,
                          f"expected one of {REDUCTIONS}")
     if reduction == "auto":
         reduction = "sum" if (sa.dim == 1 and sb.dim == 1) else "matmul"
-    match, pos = _match(sa.idx, sb.idx)
-    b_pay = jnp.take(sb.payload, pos, axis=0)         # (cap_a, d_b) aligned
-    wa = payload_weight(sa.payload, variant)
-    wb = payload_weight(b_pay, variant)
-    # min(1, tau_a w_a, tau_b w_b); taus may be +inf (keep-everything case):
-    # inf * w>0 = inf -> min() = 1, correct. Padding lanes are masked below.
-    p = jnp.minimum(1.0, jnp.minimum(_safe_mul(sa.tau, wa),
-                                     _safe_mul(sb.tau, wb)))
-    if reduction == "sum":
-        if sa.dim != 1 or sb.dim != 1:
-            raise ValueError(
-                "reduction='sum' is the d=1 (vector) formulation; got "
-                f"payload dims {sa.dim} x {sb.dim} — use 'matmul'")
-        p = jnp.where(match, p, 1.0)  # avoid 0/0 on padding
-        terms = jnp.where(match, sa.payload[..., 0] * b_pay[..., 0] / p, 0.0)
-        return jnp.sum(terms, axis=-1)
-    coeff = jnp.where(match, 1.0 / jnp.where(match, p, 1.0), 0.0)
-    return jnp.matmul((sa.payload * coeff[:, None]).T, b_pay)
+    # jit boundary rule (DESIGN.md §19): no span body inside jit
+    with obs.engine_op("estimate_product",
+                       isinstance(sa.idx, jax.core.Tracer)) as sp:
+        sp.set("reduction", reduction)
+        match, pos = _match(sa.idx, sb.idx)
+        b_pay = jnp.take(sb.payload, pos, axis=0)     # (cap_a, d_b) aligned
+        wa = payload_weight(sa.payload, variant)
+        wb = payload_weight(b_pay, variant)
+        # min(1, tau_a w_a, tau_b w_b); taus may be +inf (keep-everything
+        # case): inf * w>0 = inf -> min() = 1, correct. Padding lanes are
+        # masked below.
+        p = jnp.minimum(1.0, jnp.minimum(_safe_mul(sa.tau, wa),
+                                         _safe_mul(sb.tau, wb)))
+        if reduction == "sum":
+            if sa.dim != 1 or sb.dim != 1:
+                raise ValueError(
+                    "reduction='sum' is the d=1 (vector) formulation; got "
+                    f"payload dims {sa.dim} x {sb.dim} — use 'matmul'")
+            p = jnp.where(match, p, 1.0)  # avoid 0/0 on padding
+            terms = jnp.where(match,
+                              sa.payload[..., 0] * b_pay[..., 0] / p, 0.0)
+            return jnp.sum(terms, axis=-1)
+        coeff = jnp.where(match, 1.0 / jnp.where(match, p, 1.0), 0.0)
+        return jnp.matmul((sa.payload * coeff[:, None]).T, b_pay)
 
 
 def payload_intersection_size(sa: PayloadSketch,

@@ -25,6 +25,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.hashing import hash_unit
 from repro.core.merge import _adaptive_tau_union, _dup_earlier
 from repro.core.sketches import INVALID_IDX, sampling_ranks, select_and_pack
@@ -131,19 +132,24 @@ def merge_payload_sketches(parts: PayloadSketch, seed, *, m: int,
     if parts.idx.ndim != 3 or parts.payload.ndim != 4:
         raise ValueError("expected stacked (P, D, cap[, d]) parts, got idx "
                          f"{parts.idx.shape}, payload {parts.payload.shape}")
-    if method == "priority":
-        return _merge_priority_payload(parts, seed, m=m, variant=variant,
-                                       dedupe=dedupe)
-    if method == "threshold":
-        if stats is None and adaptive:
-            raise ValueError(
-                "merging adaptive threshold sketches needs PartitionStats "
-                "for every part (tau = m'/W does not expose W); collect "
-                "them with partition_stats() at build time")
-        from .containers import payload_capacity
-        return _merge_threshold_payload(
-            parts, seed, stats, m=m, variant=variant,
-            cap=payload_capacity(m) if cap is None else cap,
-            adaptive=adaptive, dedupe=dedupe)
-    raise ValueError(f"unknown method {method!r}; "
-                     "expected 'priority' or 'threshold'")
+    # jit boundary rule (DESIGN.md §19): no span body inside jit
+    with obs.engine_op("merge_payload_sketches",
+                       isinstance(parts.idx, jax.core.Tracer)) as sp:
+        sp.set("method", method)
+        if method == "priority":
+            return _merge_priority_payload(parts, seed, m=m, variant=variant,
+                                           dedupe=dedupe)
+        if method == "threshold":
+            if stats is None and adaptive:
+                raise ValueError(
+                    "merging adaptive threshold sketches needs "
+                    "PartitionStats for every part (tau = m'/W does not "
+                    "expose W); collect them with partition_stats() at "
+                    "build time")
+            from .containers import payload_capacity
+            return _merge_threshold_payload(
+                parts, seed, stats, m=m, variant=variant,
+                cap=payload_capacity(m) if cap is None else cap,
+                adaptive=adaptive, dedupe=dedupe)
+        raise ValueError(f"unknown method {method!r}; "
+                         "expected 'priority' or 'threshold'")

@@ -21,6 +21,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.hashing import hash_bucket
 from repro.core.sketches import INVALID_IDX, Sketch
 
@@ -112,10 +113,17 @@ def slot_inclusion_probs(bc: BucketizedSketch, *, variant: str = "l2") -> jnp.nd
         variant=variant)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
 def query_corpus(q: BucketizedSketch, corpus: BucketizedSketch, *,
                  use_pallas: bool = True) -> jnp.ndarray:
     """(C,) inner product estimates of one query against a corpus."""
+    if obs.enabled() and not isinstance(q.idx, jax.core.Tracer):
+        obs.kernel_launch("intersect_estimate.query")
+    return _query_corpus_jit(q, corpus, use_pallas=use_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _query_corpus_jit(q: BucketizedSketch, corpus: BucketizedSketch, *,
+                      use_pallas: bool = True) -> jnp.ndarray:
     if not use_pallas:
         return intersect_estimate_ref(q.idx, q.val, q.tau,
                                       corpus.idx, corpus.val, corpus.tau)
@@ -177,6 +185,8 @@ def estimate_all_pairs_bucketized(A: BucketizedSketch, B: BucketizedSketch, *,
     (D1, D2, B) — the knob the allpairs benchmark tunes per layout,
     DESIGN.md §17).
     """
+    if obs.enabled() and not isinstance(A.idx, jax.core.Tracer):
+        obs.kernel_launch("intersect_estimate.allpairs")
     a_p = slot_inclusion_probs(A, variant=variant)
     b_p = slot_inclusion_probs(B, variant=variant)
     return _allpairs_dispatch(A.idx, A.val, a_p, B.idx, B.val, b_p,
@@ -184,7 +194,6 @@ def estimate_all_pairs_bucketized(A: BucketizedSketch, B: BucketizedSketch, *,
                               ref_chunk=ref_chunk, use_pallas=use_pallas)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas",))
 def estimate_tile_rows(a_idx, a_val, a_p, b_idx, b_val, b_p,
                        rows_a, rows_b, *, use_pallas: bool = True):
     """Estimate one (tq, tc) tile of the all-pairs matrix from *gathered*
@@ -198,6 +207,15 @@ def estimate_tile_rows(a_idx, a_val, a_p, b_idx, b_val, b_p,
     that is what lets the engine visit an arbitrary, bound-ordered subset
     of tiles without recompiling or materializing the (D1, D2) matrix.
     """
+    if obs.enabled() and not isinstance(a_idx, jax.core.Tracer):
+        obs.kernel_launch("intersect_estimate.tile")
+    return _estimate_tile_rows_jit(a_idx, a_val, a_p, b_idx, b_val, b_p,
+                                   rows_a, rows_b, use_pallas=use_pallas)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def _estimate_tile_rows_jit(a_idx, a_val, a_p, b_idx, b_val, b_p,
+                            rows_a, rows_b, *, use_pallas: bool = True):
     gather = lambda arr, rows: jnp.take(arr, rows, axis=0, mode="clip")
     ai, av, ap = (gather(x, rows_a) for x in (a_idx, a_val, a_p))
     bi, bv, bp = (gather(x, rows_b) for x in (b_idx, b_val, b_p))
@@ -214,6 +232,8 @@ def allpairs_moments(a_idx, a_val, a_p, b_idx, b_val, b_p, *, qt: int = QT,
     """(D1, D2, 6) co-moment channels (MOMENT_CHANNELS order) from bucketized
     corpora with caller-supplied per-slot inclusion probabilities — the
     join-correlation all-pairs path (DESIGN.md §7, §12)."""
+    if obs.enabled() and not isinstance(a_idx, jax.core.Tracer):
+        obs.kernel_launch("intersect_estimate.moments")
     return _allpairs_dispatch(a_idx, a_val, a_p, b_idx, b_val, b_p,
                               moments=True, qt=qt, ct=ct,
                               use_pallas=use_pallas)

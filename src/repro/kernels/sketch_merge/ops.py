@@ -26,6 +26,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
+
 from ..intersect_estimate.ops import BucketizedSketch
 from ..sketch_build.ops import resolve_use_pallas
 from .ref import merge_bucketized_ref
@@ -77,6 +79,8 @@ def merge_bucketized_corpora(A: BucketizedSketch, B: BucketizedSketch,
     if A.idx.shape != B.idx.shape:
         raise ValueError(f"corpus shapes differ: {A.idx.shape} vs "
                          f"{B.idx.shape}")
+    if obs.enabled() and not isinstance(A.idx, jax.core.Tracer):
+        obs.kernel_launch("sketch_merge.merge")
     if tau is None:
         tau = merged_tau_bucketized(A, B, seed, m=m, variant=variant)
     out_idx, out_val, new_drop = _merge_dispatch(

@@ -1,0 +1,294 @@
+"""Estimator-quality self-monitoring (DESIGN.md §19).
+
+The paper's closed-form variance bounds (Theorems 1/3) are what make
+*accuracy* monitorable in production: a deployment can continuously
+compare realized estimator behavior against the predicted Chebyshev
+envelope — something WMH-style sketches cannot offer (Section 1.1,
+"unable to analyze the variance of the method").  Three surfaces:
+
+1. **Ingest health** (:class:`QualityMonitor.observe_ingest`) — rolling
+   tau gauges (last + EWMA: a drifting tau means the corpus weight
+   profile is shifting and with it every inclusion probability), bucket
+   overflow accounting (dropped entries are *silent* estimator bias —
+   the one failure mode the unbiasedness proofs do not cover), and
+   ingest row counts.
+
+2. **Canary pairs** (:class:`CanaryMonitor`) — K pinned (query vector,
+   indexed target) pairs with known true inner products.  Each check
+   re-estimates every pair through the live index and folds realized
+   ``|error|`` against the Theorem-1/3 Chebyshev half-width
+   ``sqrt(2 /(m-1) * ||a||^2 ||b||^2 / delta)`` into an **error-budget
+   ratio**; ratio > 1 more often than ``delta`` of checks means the
+   deployed estimator violates its own certificate — the "silent
+   accuracy degradation" signal (e.g. a lost shard biasing reads) that
+   crash-only monitoring never sees.
+
+3. **Durability / degraded-serving health** — degraded-read coverage,
+   WAL replay length, recovery age and snapshot quarantine counts land
+   in the same registry (fed by ``repro.serve.resilience``), so one
+   ``/metrics`` exposition answers both "is it up" and "is it right".
+
+``repro.obs.metrics``/``tracing`` are stdlib-only; this module speaks
+numpy at the boundary because every caller hands it arrays.  jax stays
+out of ``repro.obs`` entirely.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .metrics import MetricsRegistry
+
+EWMA_ALPHA = 0.1
+
+
+def chebyshev_halfwidth(a_norm2: float, b_norm2: float, m: int,
+                        delta: float = 0.05) -> float:
+    """Theorem-1/3 Chebyshev half-width: ``Var <= 2/(m-1) *
+    ||a_I||^2 ||b_I||^2 <= 2/(m-1) * ||a||^2 ||b||^2``, so
+    ``|est - <a,b>| <= sqrt(Var / delta)`` with probability >= 1 - delta
+    (scalar twin of :func:`repro.core.variance.chebyshev_interval`,
+    kept numpy/stdlib-only here; derivation in DESIGN.md §19)."""
+    var = 2.0 / max(m - 1, 1) * float(a_norm2) * float(b_norm2)
+    return math.sqrt(var / delta)
+
+
+class QualityMonitor:
+    """Rolling estimator-health gauges over one metrics registry."""
+
+    def __init__(self, registry: MetricsRegistry):
+        self.registry = registry
+        self._tau_ewma: Optional[float] = None
+        self._g_tau_last = registry.gauge(
+            "repro_quality_tau_last", "tau of the most recently built row")
+        self._g_tau_ewma = registry.gauge(
+            "repro_quality_tau_ewma",
+            f"EWMA (alpha={EWMA_ALPHA}) of ingested taus — drift here "
+            "means the corpus weight profile is moving")
+        self._c_rows = registry.counter(
+            "repro_quality_ingest_rows_total", "rows sketched at ingest")
+        self._c_overflow = registry.counter(
+            "repro_quality_overflow_entries_total",
+            "sketch entries lost to bucket overflow (silent estimator "
+            "bias; should stay ~0 under the n_buckets >= 2m sizing)")
+        self._c_overflow_rows = registry.counter(
+            "repro_quality_overflow_rows_total",
+            "ingested rows that dropped at least one entry")
+        self._g_coverage = registry.gauge(
+            "repro_quality_coverage",
+            "squared-mass coverage of the most recent read on this "
+            "surface (1.0 = fully healthy)", labelnames=("surface",))
+
+    # -- ingest ---------------------------------------------------------
+
+    def observe_ingest(self, tau, dropped=None) -> None:
+        """Fold one ingest batch's taus (array-like) and overflow drops
+        into the rolling gauges."""
+        tau = np.atleast_1d(np.asarray(tau, np.float64))
+        if tau.size:
+            finite = tau[np.isfinite(tau)]
+            last = float(tau[-1])
+            self._g_tau_last.set(last)
+            if finite.size:
+                mean = float(finite.mean())
+                self._tau_ewma = mean if self._tau_ewma is None else \
+                    (1 - EWMA_ALPHA) * self._tau_ewma + EWMA_ALPHA * mean
+                self._g_tau_ewma.set(self._tau_ewma)
+            self._c_rows.inc(tau.size)
+        if dropped is not None:
+            dropped = np.atleast_1d(np.asarray(dropped, np.int64))
+            total = int(dropped.sum())
+            if total:
+                self._c_overflow.inc(total)
+                self._c_overflow_rows.inc(int((dropped > 0).sum()))
+
+    # -- degraded reads -------------------------------------------------
+
+    def observe_coverage(self, coverage: float, surface: str) -> None:
+        self._g_coverage.labels(surface).set(float(coverage))
+
+    # -- training telemetry --------------------------------------------
+
+    def observe_gns(self, gns: float, big2: float, small2: float,
+                    mean_halfwidth: float) -> None:
+        """Gradient-noise-scale telemetry (``train.telemetry``): the GNS
+        point estimate plus the mean Chebyshev CI half-width of the
+        pairwise sketch estimates it was assembled from."""
+        r = self.registry
+        r.gauge("repro_train_gns",
+                "gradient noise scale (critical batch size) estimate"
+                ).set(float(gns))
+        r.gauge("repro_train_gns_big_norm2",
+                "estimated ||mean gradient||^2").set(float(big2))
+        r.gauge("repro_train_gns_small_norm2",
+                "mean per-shard ||gradient||^2").set(float(small2))
+        r.gauge("repro_train_gns_ci_halfwidth",
+                "mean Chebyshev half-width of the pairwise inner-product "
+                "estimates feeding the GNS").set(float(mean_halfwidth))
+
+
+# ---------------------------------------------------------------------------
+# Canary-pair monitoring
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class CanaryPair:
+    """One pinned probe: a held-out query vector, the name of an indexed
+    target, the exact inner product, and the Theorem-1/3 half-width the
+    realized error is budgeted against."""
+    label: str
+    vector: np.ndarray
+    target: str
+    true_value: float
+    halfwidth: float
+
+
+@dataclass(frozen=True)
+class CanaryReading:
+    label: str
+    estimate: float
+    true_value: float
+    halfwidth: float
+    error: float
+    budget_ratio: float      # |error| / halfwidth; > 1 = budget blown
+
+    @property
+    def violated(self) -> bool:
+        return self.budget_ratio > 1.0
+
+
+class CanaryMonitor:
+    """Periodically re-estimates K pinned pairs through a live index and
+    publishes the error-budget SLO gauges (DESIGN.md §19).
+
+    ``index`` is anything with ``query(vector)`` returning either
+    ``[(name, estimate), ...]`` (:class:`~repro.serve.sketch_service.
+    SketchIndex` / ``ShardedSketchIndex``) or a ``DegradedResult``-like
+    object with ``names``/``estimates`` (:class:`~repro.serve.resilience.
+    ResilientSketchIndex`) — degraded reads are exactly the regime the
+    canaries exist to catch, when their widened bounds are ignored
+    downstream.
+
+    The **SLO**: each check's ``budget_ratio = |est - true| / halfwidth``
+    should exceed 1 in at most a ``delta`` fraction of checks (that is
+    the Chebyshev guarantee itself).  A violation *streak* — every check
+    failing after a shard loss — is the injected-fault signature the
+    chaos suite asserts on.
+    """
+
+    def __init__(self, index, pairs: Sequence[CanaryPair], *,
+                 registry: MetricsRegistry, every: int = 1):
+        if not pairs:
+            raise ValueError("need at least one canary pair")
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self.index = index
+        self.pairs = list(pairs)
+        self.every = every
+        self._tick = 0
+        r = registry
+        self._g_ratio = r.gauge(
+            "repro_canary_error_budget_ratio",
+            "worst |error| / Chebyshev-half-width over the canary pairs "
+            "at the last check (> 1 = certificate violated)")
+        self._g_pair = r.gauge(
+            "repro_canary_budget_ratio", "per-canary error-budget ratio",
+            labelnames=("canary",))
+        self._g_ok = r.gauge(
+            "repro_canary_slo_ok",
+            "1 when every canary was inside its error budget at the "
+            "last check, else 0")
+        self._c_checks = r.counter(
+            "repro_canary_checks_total", "canary sweeps performed")
+        self._c_violations = r.counter(
+            "repro_canary_violations_total",
+            "canary readings whose realized error exceeded the "
+            "predicted Chebyshev half-width")
+
+    @classmethod
+    def from_vectors(cls, index, canaries, *, registry: MetricsRegistry,
+                     m: Optional[int] = None, delta: float = 0.05,
+                     every: int = 1) -> "CanaryMonitor":
+        """Build pinned pairs from raw vectors: ``canaries`` is
+        ``[(label, query_vector, target_name, target_vector), ...]``;
+        the exact product and half-width are computed here once, the
+        target vector is NOT retained.  ``m`` defaults to ``index.m``."""
+        m = index.m if m is None else m
+        pairs = []
+        for label, qv, target, tv in canaries:
+            qv = np.asarray(qv, np.float64)
+            tv = np.asarray(tv, np.float64)
+            pairs.append(CanaryPair(
+                label=str(label), vector=qv.astype(np.float32),
+                target=target, true_value=float(qv @ tv),
+                halfwidth=chebyshev_halfwidth(
+                    float(qv @ qv), float(tv @ tv), m, delta)))
+        return cls(index, pairs, registry=registry, every=every)
+
+    def _estimates(self, vector: np.ndarray) -> dict:
+        res = self.index.query(vector)
+        if hasattr(res, "estimates"):          # DegradedResult-like
+            return dict(zip(res.names, np.asarray(res.estimates).tolist()))
+        return {name: float(est) for name, est in res}
+
+    def check(self) -> list:
+        """Run one canary sweep; returns the readings and updates the
+        SLO gauges/counters."""
+        readings = []
+        worst = 0.0
+        violations = 0
+        for pair in self.pairs:
+            est = self._estimates(pair.vector)[pair.target]
+            err = abs(est - pair.true_value)
+            ratio = err / max(pair.halfwidth, 1e-30)
+            readings.append(CanaryReading(
+                label=pair.label, estimate=float(est),
+                true_value=pair.true_value, halfwidth=pair.halfwidth,
+                error=float(err), budget_ratio=float(ratio)))
+            self._g_pair.labels(pair.label).set(ratio)
+            worst = max(worst, ratio)
+            violations += ratio > 1.0
+        self._g_ratio.set(worst)
+        self._g_ok.set(0.0 if violations else 1.0)
+        self._c_checks.inc()
+        if violations:
+            self._c_violations.inc(violations)
+        return readings
+
+    def maybe_check(self) -> Optional[list]:
+        """Rate-limited :meth:`check`: runs every ``every``-th call
+        (wire it after ingest batches or on a serving timer)."""
+        self._tick += 1
+        if self._tick % self.every:
+            return None
+        return self.check()
+
+
+# ---------------------------------------------------------------------------
+# Durability / WAL / snapshot health (fed by repro.serve.resilience)
+# ---------------------------------------------------------------------------
+
+
+def observe_recovery(registry: MetricsRegistry, *, replayed_ops: int,
+                     dropped_tail: int, snapshot_mtime: Optional[float],
+                     now: Optional[float] = None) -> None:
+    """Publish one recovery's health: WAL replay length, corrupt-tail
+    drops, and the age of the snapshot it started from (``None`` = cold
+    recovery with no snapshot)."""
+    now = time.time() if now is None else now
+    registry.counter("repro_recovery_total", "index recoveries").inc()
+    registry.gauge("repro_recovery_replayed_ops",
+                   "journal records replayed by the last recovery"
+                   ).set(replayed_ops)
+    registry.gauge("repro_recovery_dropped_tail",
+                   "corrupt/truncated WAL tail records dropped by the "
+                   "last recovery").set(dropped_tail)
+    age = -1.0 if snapshot_mtime is None else max(now - snapshot_mtime, 0.0)
+    registry.gauge("repro_recovery_snapshot_age_seconds",
+                   "age of the snapshot the last recovery loaded "
+                   "(-1 = recovered without a snapshot)").set(age)

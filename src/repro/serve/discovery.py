@@ -48,6 +48,7 @@ from typing import Callable, Optional
 import numpy as np
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import priority_sketch
 from repro.core.variance import chebyshev_estimate_ceiling
 from repro.kernels import (bucketize, estimate_tile_rows, round_up_pow2,
@@ -161,6 +162,36 @@ class ScanStats:
     summary_tiles_refreshed: int = 0
 
 
+def _publish_scan(stats: ScanStats, scan: str) -> None:
+    """Fold one scan's :class:`ScanStats` into the metrics registry
+    (DESIGN.md §19) — the dataclass stays the caller-facing view, the
+    registry gets the fleet-wide accumulation; no call-site plumbing."""
+    if not obs.enabled():
+        return
+    r = obs.registry()
+    lab = ("scan",)
+    r.counter("repro_discovery_scans_total",
+              "pruned discovery scans", lab).labels(scan).inc()
+    r.counter("repro_discovery_tiles_total",
+              "candidate tile(-pair)s considered", lab
+              ).labels(scan).inc(stats.tiles_total)
+    r.counter("repro_discovery_tiles_launched_total",
+              "tile kernel launches actually made", lab
+              ).labels(scan).inc(stats.tiles_launched)
+    r.counter("repro_discovery_tiles_pruned_total",
+              "tile(-pair)s skipped by the bound certificate", lab
+              ).labels(scan).inc(stats.tiles_pruned)
+    r.counter("repro_discovery_kernel_launches_total",
+              "estimate_tile_rows dispatches", lab
+              ).labels(scan).inc(stats.kernel_launches)
+    r.gauge("repro_discovery_peak_bytes",
+            "peak working-set bytes of the last scan", lab
+            ).labels(scan).set(stats.peak_bytes)
+    r.gauge("repro_discovery_summary_tiles_refreshed",
+            "cumulative dirty-tile summary refreshes at the last scan",
+            lab).labels(scan).set(stats.summary_tiles_refreshed)
+
+
 @dataclass
 class DiscoveryResult:
     """Top-k discovery answer.  ``items`` is descending by score:
@@ -270,12 +301,26 @@ class DiscoveryEngine:
                   audit: bool = False) -> DiscoveryResult:
         """Global top-k pairs of the index against itself (each unordered
         pair once, self-pairs excluded)."""
-        return _pair_scan(self, self, k, absolute=absolute, audit=audit)
+        with obs.op("serve.discovery.top_pairs") as sp:
+            res = _pair_scan(self, self, k, absolute=absolute, audit=audit)
+            sp.set("launched", res.stats.tiles_launched)
+            sp.set("pruned", res.stats.tiles_pruned)
+            _publish_scan(res.stats, "pairs")
+            return res
 
     def top_k_for_query(self, vector, k: int = 10, *,
                         absolute: bool = False) -> DiscoveryResult:
         """Top-k indexed rows for one query vector: corpus tiles whose
         ceiling falls below the running k-th score are never launched."""
+        with obs.op("serve.discovery.top_k_for_query") as sp:
+            res = self._top_k_for_query(vector, k, absolute=absolute)
+            sp.set("launched", res.stats.tiles_launched)
+            sp.set("pruned", res.stats.tiles_pruned)
+            _publish_scan(res.stats, "query")
+            return res
+
+    def _top_k_for_query(self, vector, k: int = 10, *,
+                         absolute: bool = False) -> DiscoveryResult:
         index = self.index
         if not index._names:
             raise ValueError("discovery on an empty index: add vectors "
@@ -490,27 +535,43 @@ class ShardedDiscoveryEngine:
         t0 = self._clock()
         delay = policy.base_delay
         last: Optional[BaseException] = None
-        for attempt in range(max(policy.attempts, 1)):
-            try:
-                if self._call_wrapper is not None:
-                    out = self._call_wrapper(shards, fn)
-                else:
-                    out = fn()
-                for p in shards:
-                    self.health.beat(p)
-                return out
-            except Exception as e:  # noqa: BLE001 — fault boundary
-                last = e
-                timed_out = isinstance(e, TimeoutError) or (
-                    policy.deadline is not None
-                    and self._clock() - t0 >= policy.deadline)
-                if timed_out or attempt >= policy.attempts - 1:
-                    break
-                self._sleep(delay)
-                delay = min(delay * 2.0, policy.max_delay)
-        raise ShardDownError(
-            f"discovery task over shards {shards} failed after "
-            f"{attempt + 1} attempt(s): {last}") from last
+        with obs.span("serve.discovery.task") as tsp:
+            tsp.set("shards", list(shards))
+            for attempt in range(max(policy.attempts, 1)):
+                try:
+                    obs.counter("repro_retry_attempts_total",
+                                "guarded-call attempts",
+                                ("surface",)).labels("discovery").inc()
+                    if self._call_wrapper is not None:
+                        out = self._call_wrapper(shards, fn)
+                    else:
+                        out = fn()
+                    for p in shards:
+                        self.health.beat(p)
+                    return out
+                except Exception as e:  # noqa: BLE001 — fault boundary
+                    last = e
+                    timed_out = isinstance(e, TimeoutError) or (
+                        policy.deadline is not None
+                        and self._clock() - t0 >= policy.deadline)
+                    if timed_out:
+                        obs.counter("repro_deadline_hits_total",
+                                    "guarded calls terminated by timeout "
+                                    "or deadline",
+                                    ("surface",)).labels("discovery").inc()
+                    if timed_out or attempt >= policy.attempts - 1:
+                        break
+                    obs.counter("repro_retry_backoffs_total",
+                                "backoff sleeps between retries",
+                                ("surface",)).labels("discovery").inc()
+                    self._sleep(delay)
+                    delay = min(delay * 2.0, policy.max_delay)
+            obs.counter("repro_shard_down_total",
+                        "guarded tasks that exhausted their retries",
+                        ("surface",)).labels("discovery").inc()
+            raise ShardDownError(
+                f"discovery task over shards {shards} failed after "
+                f"{attempt + 1} attempt(s): {last}") from last
 
     def _fan_out(self, tasks: dict):
         """Run ``{shards_tuple: thunk}`` concurrently; returns
@@ -577,11 +638,32 @@ class ShardedDiscoveryEngine:
                 if (s, t) in results or (s, t) not in lost:
                     covered += n
         down = self.health.down_shards()
-        return DiscoveryResult(
+        res = DiscoveryResult(
             items=items, stats=stats, degraded=bool(lost),
             coverage=covered / total if total else 1.0,
             lost_pairs=tuple(sorted(lost)),
             lost_shards=tuple(sorted(down)))
+        self._publish_result(res, "pairs", publish_stats=True)
+        return res
+
+    def _publish_result(self, res: DiscoveryResult, scan: str,
+                        *, publish_stats: bool) -> None:
+        """Coverage / shard-health exposition for one fan-out (leaf query
+        scans publish their own ScanStats; pair tasks bypass the engine
+        wrappers, so the merged stats are published here once)."""
+        if not obs.enabled():
+            return
+        if publish_stats:
+            _publish_scan(res.stats, scan)
+        obs.quality_monitor().observe_coverage(res.coverage, "discovery." + scan)
+        obs.gauge("repro_shards_down",
+                  "shards currently marked down",
+                  ("surface",)).labels("discovery").set(
+                      len(res.lost_shards))
+        if res.degraded:
+            obs.counter("repro_degraded_results_total",
+                        "fan-out answers served with coverage < 1",
+                        ("surface",)).labels("discovery." + scan).inc()
 
     def top_k_for_query(self, vector, k: int = 10, *,
                         absolute: bool = False) -> DiscoveryResult:
@@ -608,8 +690,10 @@ class ShardedDiscoveryEngine:
         lost_rows = sum(len(shards[key[0]]) for key in lost)
         D = len(sharded)
         down = self.health.down_shards()
-        return DiscoveryResult(
+        res = DiscoveryResult(
             items=merged[:k], stats=stats, degraded=bool(lost),
             coverage=(D - lost_rows) / D if D else 1.0,
             lost_pairs=tuple(sorted(lost)),
             lost_shards=tuple(sorted(down)))
+        self._publish_result(res, "query", publish_stats=False)
+        return res

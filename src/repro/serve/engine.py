@@ -10,6 +10,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models import decode_fn, prefill_fn
 
@@ -53,30 +54,39 @@ class Engine:
         S = max(len(r.prompt) for r in wave)
         qb = self.cfg.attn_q_block
         S = max(-(-S // qb) * qb, qb)
-        toks = np.zeros((B, S), np.int32)
-        for i, r in enumerate(wave):
-            toks[i, S - len(r.prompt):] = r.prompt  # left-pad
-        batch = {"tokens": jnp.asarray(toks)}
-        if self.cfg.vision_tokens:
-            batch["image_embeds"] = jnp.zeros(
-                (B, self.cfg.vision_tokens, self.cfg.d_model), jnp.float32)
-        if self.cfg.is_encdec:
-            batch["frames"] = jnp.zeros(
-                (B, max(S // self.cfg.enc_ratio, 1), self.cfg.d_model),
-                jnp.float32)
-        logits, state = self._prefill(self.params, batch)
-        tok = self._sample(logits)
-        steps = max(r.max_new_tokens for r in wave)
-        for _ in range(steps):
+        with obs.op("serve.lm.wave") as sp:
+            sp.set("requests", len(wave))
+            toks = np.zeros((B, S), np.int32)
             for i, r in enumerate(wave):
-                if not r.done and len(r.output) < r.max_new_tokens:
-                    r.output.append(int(tok[i]))
-                    if len(r.output) >= r.max_new_tokens:
-                        r.done = True
-            if all(r.done for r in wave):
-                break
-            logits, state = self._decode(self.params, state, tok[:, None])
+                toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+            batch = {"tokens": jnp.asarray(toks)}
+            if self.cfg.vision_tokens:
+                batch["image_embeds"] = jnp.zeros(
+                    (B, self.cfg.vision_tokens, self.cfg.d_model), jnp.float32)
+            if self.cfg.is_encdec:
+                batch["frames"] = jnp.zeros(
+                    (B, max(S // self.cfg.enc_ratio, 1), self.cfg.d_model),
+                    jnp.float32)
+            logits, state = self._prefill(self.params, batch)
             tok = self._sample(logits)
+            steps = max(r.max_new_tokens for r in wave)
+            emitted = 0
+            for _ in range(steps):
+                for i, r in enumerate(wave):
+                    if not r.done and len(r.output) < r.max_new_tokens:
+                        r.output.append(int(tok[i]))
+                        emitted += 1
+                        if len(r.output) >= r.max_new_tokens:
+                            r.done = True
+                if all(r.done for r in wave):
+                    break
+                logits, state = self._decode(self.params, state, tok[:, None])
+                tok = self._sample(logits)
+            if obs.enabled():
+                obs.counter("repro_lm_waves_total",
+                            "LM serving waves run").inc()
+                obs.counter("repro_lm_tokens_total",
+                            "Tokens emitted by the LM engine").inc(emitted)
         return wave
 
     def serve(self, requests: list[Request]) -> list[Request]:

@@ -46,6 +46,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core import coverage_fraction, fold_seed, surviving_corpus_bound
 from repro.distributed import partition_bounds
 from repro.serve.sketch_service import MatrixSketchStore, SketchIndex
@@ -268,6 +269,8 @@ def quarantine_snapshot(path: str, reason: str) -> str:
     os.replace(path, dest)
     with open(os.path.join(dest, "QUARANTINE_REASON"), "w") as f:
         f.write(reason + "\n")
+    obs.counter("repro_snapshot_quarantines_total",
+                "corrupt snapshots moved aside by recovery").inc()
     return dest
 
 
@@ -377,6 +380,8 @@ class IngestJournal:
         self._fh.write(self._line(self._seq, op, body))
         self._fh.flush()
         os.fsync(self._fh.fileno())
+        obs.counter("repro_wal_appends_total",
+                    "acknowledged journal records", ("op",)).labels(op).inc()
         return self._seq
 
     def rotate(self) -> str:
@@ -395,6 +400,8 @@ class IngestJournal:
             f.flush()
             os.fsync(f.fileno())
         self._fh = open(self.path, "a")
+        obs.counter("repro_wal_rotations_total",
+                    "journal checkpoint rotations").inc()
         return archive
 
     def close(self) -> None:
@@ -559,11 +566,15 @@ class DurableSketchIndex:
         """Cut a snapshot at the current journal position, then checkpoint
         the journal (archive + restart) so recovery only replays ops past
         this snapshot."""
-        path = save_snapshot(self.index, self._snap_dir(),
-                             journal_seq=self.journal.seq)
-        self.journal.rotate()
-        self._ops_since_snapshot = 0
-        return path
+        with obs.op("serve.durable.snapshot") as sp:
+            sp.set("journal_seq", self.journal.seq)
+            path = save_snapshot(self.index, self._snap_dir(),
+                                 journal_seq=self.journal.seq)
+            self.journal.rotate()
+            self._ops_since_snapshot = 0
+            obs.counter("repro_snapshots_total",
+                        "snapshots cut (with journal checkpoint)").inc()
+            return path
 
     def _snap_dir(self) -> str:
         return os.path.join(self.directory, "snapshots")
@@ -608,21 +619,34 @@ class DurableSketchIndex:
         """Rebuild the pre-crash index: newest intact snapshot (corrupt
         ones are quarantined) + replay of the journal tail.  Bit-exact
         against the crashed instance's acknowledged state."""
-        index, seq = load_latest_snapshot(
-            os.path.join(directory, "snapshots"))
-        if index is None:
-            index = SketchIndex(**index_kwargs)
-        records, dropped, live_end = IngestJournal.scan_all(
-            os.path.join(directory, "journal.wal"), after_seq=seq)
-        last_seq = records[-1][0] if records else seq
-        records = [r for r in records if r[1] != "checkpoint"]
-        for rec_seq, op, body in records:
-            cls._apply(index, op, body)
-        out = cls(directory, snapshot_every=snapshot_every, index=index,
-                  _journal_seq=last_seq, _journal_valid_end=live_end)
-        out.replayed_ops = len(records)
-        out.dropped_tail = dropped
-        return out
+        with obs.op("serve.durable.recover") as sp:
+            index, seq = load_latest_snapshot(
+                os.path.join(directory, "snapshots"))
+            if index is None:
+                index = SketchIndex(**index_kwargs)
+            records, dropped, live_end = IngestJournal.scan_all(
+                os.path.join(directory, "journal.wal"), after_seq=seq)
+            last_seq = records[-1][0] if records else seq
+            records = [r for r in records if r[1] != "checkpoint"]
+            for rec_seq, op, body in records:
+                cls._apply(index, op, body)
+            out = cls(directory, snapshot_every=snapshot_every, index=index,
+                      _journal_seq=last_seq, _journal_valid_end=live_end)
+            out.replayed_ops = len(records)
+            out.dropped_tail = dropped
+            sp.set("replayed_ops", out.replayed_ops)
+            sp.set("dropped_tail", out.dropped_tail)
+            if obs.enabled():
+                snap_path = os.path.join(directory, "snapshots",
+                                         f"{_SNAP_PREFIX}{seq:010d}")
+                mtime = os.path.getmtime(snap_path) \
+                    if seq and os.path.isdir(snap_path) else None
+                from repro.obs.quality import observe_recovery
+                observe_recovery(obs.registry(),
+                                 replayed_ops=out.replayed_ops,
+                                 dropped_tail=out.dropped_tail,
+                                 snapshot_mtime=mtime)
+            return out
 
 
 # ---------------------------------------------------------------------------
@@ -726,6 +750,18 @@ class DegradedResult:
                 for i in order]
 
 
+def _publish_degraded(coverage: float, lost_any: bool, surface: str) -> None:
+    """Degraded-read exposition (DESIGN.md §19): the coverage gauge per
+    surface plus a counter of answers actually served degraded."""
+    if not obs.enabled():
+        return
+    obs.quality_monitor().observe_coverage(coverage, surface)
+    if lost_any:
+        obs.counter("repro_degraded_results_total",
+                    "fan-out answers served with coverage < 1",
+                    ("surface",)).labels(surface).inc()
+
+
 class _GuardedFanout:
     """Shared shard-call guard: injectable wrapper -> retry/backoff ->
     deadline -> health bookkeeping."""
@@ -763,26 +799,42 @@ class _GuardedFanout:
         t0 = self._clock()
         delay = policy.base_delay
         last: Optional[BaseException] = None
-        for attempt in range(max(policy.attempts, 1)):
-            try:
-                if self._call_wrapper is not None:
-                    out = self._call_wrapper(shard, fn)
-                else:
-                    out = fn()
-                self.health.beat(shard)   # success proves liveness
-                return out
-            except Exception as e:  # noqa: BLE001 — fault boundary
-                last = e
-                timed_out = isinstance(e, TimeoutError) or (
-                    policy.deadline is not None
-                    and self._clock() - t0 >= policy.deadline)
-                if timed_out or attempt >= policy.attempts - 1:
-                    break
-                self._sleep(delay)
-                delay = min(delay * 2.0, policy.max_delay)
-        self.health.mark_down(shard, f"{type(last).__name__}: {last}")
-        raise ShardDownError(f"shard {shard} failed after "
-                             f"{attempt + 1} attempt(s): {last}") from last
+        with obs.span("serve.shard_call") as tsp:
+            tsp.set("shard", shard)
+            for attempt in range(max(policy.attempts, 1)):
+                try:
+                    obs.counter("repro_retry_attempts_total",
+                                "guarded-call attempts",
+                                ("surface",)).labels("serve").inc()
+                    if self._call_wrapper is not None:
+                        out = self._call_wrapper(shard, fn)
+                    else:
+                        out = fn()
+                    self.health.beat(shard)   # success proves liveness
+                    return out
+                except Exception as e:  # noqa: BLE001 — fault boundary
+                    last = e
+                    timed_out = isinstance(e, TimeoutError) or (
+                        policy.deadline is not None
+                        and self._clock() - t0 >= policy.deadline)
+                    if timed_out:
+                        obs.counter("repro_deadline_hits_total",
+                                    "guarded calls terminated by timeout "
+                                    "or deadline",
+                                    ("surface",)).labels("serve").inc()
+                    if timed_out or attempt >= policy.attempts - 1:
+                        break
+                    obs.counter("repro_retry_backoffs_total",
+                                "backoff sleeps between retries",
+                                ("surface",)).labels("serve").inc()
+                    self._sleep(delay)
+                    delay = min(delay * 2.0, policy.max_delay)
+            self.health.mark_down(shard, f"{type(last).__name__}: {last}")
+            obs.counter("repro_shard_down_total",
+                        "guarded tasks that exhausted their retries",
+                        ("surface",)).labels("serve").inc()
+            raise ShardDownError(f"shard {shard} failed after "
+                                 f"{attempt + 1} attempt(s): {last}") from last
 
     def _fan_out(self, shards: Sequence[int], fn_of: Callable):
         """Call ``fn_of(shard)`` on every currently-up shard; returns
@@ -795,7 +847,10 @@ class _GuardedFanout:
                 results[p] = self._shard_call(p, fn_of(p))
             except ShardDownError:
                 continue
-        return results, self.health.down_shards()
+        down = self.health.down_shards()
+        obs.gauge("repro_shards_down", "shards currently marked down",
+                  ("surface",)).labels("serve").set(len(down))
+        return results, down
 
     def _check_strict(self, strict: Optional[bool], down: dict,
                       n_served: int) -> None:
@@ -966,6 +1021,7 @@ class ResilientSketchIndex(_GuardedFanout):
             q2[surv], V2[:, surv], q2[lost], V2[:, lost], self.m,
             delta, method="priority"))
         cov = float(coverage_fraction(q2[surv], q2[lost]))
+        _publish_degraded(cov, bool(lost.size), "serve.query")
         return DegradedResult(
             names=tuple(self._names), estimates=est.astype(np.float32),
             coverage=cov, bound=widened, sampling_bound=sampling,
@@ -997,6 +1053,7 @@ class ResilientSketchIndex(_GuardedFanout):
         lost_root = np.sqrt(V2[:, lost].sum(axis=1))
         lost_mass = np.outer(lost_root, lost_root)
         cov = float(coverage_fraction(Vs.sum(axis=0), V2[:, lost].sum(axis=0)))
+        _publish_degraded(cov, bool(lost.size), "serve.all_pairs")
         return DegradedResult(
             names=tuple(self._names), estimates=est.astype(np.float32),
             coverage=cov, bound=sampling + lost_mass,
@@ -1146,6 +1203,7 @@ class ResilientMatrixStore(_GuardedFanout):
             q2[surv], F2[:, surv], q2[lost], F2[:, lost], self.m,
             delta, method="priority"))
         cov = float(coverage_fraction(q2[surv], q2[lost]))
+        _publish_degraded(cov, bool(lost.size), "serve.matrix_query")
         return DegradedResult(
             names=tuple(self._names), estimates=est.astype(np.float32),
             coverage=cov, bound=widened, sampling_bound=sampling,

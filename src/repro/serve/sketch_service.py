@@ -25,6 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import INVALID_IDX, priority_sketch
 from repro.serve.validation import (check_finite, check_nonfinite_policy,
                                     check_sparse, check_unique_name,
@@ -183,34 +184,40 @@ class SketchIndex:
         if (vector is None) == (indices is None and values is None):
             raise ValueError("pass either a dense vector or (indices, values)")
         check_unique_name(name, self._name_set)
-        if vector is not None:
-            vector = check_vector(vector, f"vector {name!r}", dim=self._dim,
-                                  nonfinite=self.nonfinite)
-            self._dim = vector.shape[0]
-            sk = priority_sketch(jnp.asarray(vector), self.m, self.seed)
-        else:
-            if indices is None or values is None:
-                raise ValueError("sparse input needs both indices and values")
-            indices, values = check_sparse(indices, values, dim=self._dim,
-                                           nonfinite=self.nonfinite)
-            nnz = indices.shape[0]
-            pad = round_up_pow2(max(nnz, 1)) - nnz
-            # padding: value 0 -> weight 0 -> rank +inf, never selected
-            vals_p = jnp.asarray(np.pad(values, (0, pad)))
-            idx_p = jnp.asarray(np.pad(indices, (0, pad)))
-            sk = priority_sketch(vals_p, self.m, self.seed, indices=idx_p)
-        b = bucketize(sk, n_buckets=self.n_buckets, slots=self.slots)
-        if len(self._names) == self._cap:
-            self._grow()
-        d = len(self._names)
-        self._idx[d] = np.asarray(b.idx)
-        self._val[d] = np.asarray(b.val)
-        self._tau[d] = float(b.tau)
-        self._dropped[d] = int(b.dropped)
-        self._names.append(name)
-        self._name_set.add(name)
-        self._refresh_row_stats(d, d + 1)
-        self._device_corpus = None  # re-upload (not re-bucketize) lazily
+        with obs.op("serve.index.add") as sp:
+            if vector is not None:
+                vector = check_vector(vector, f"vector {name!r}",
+                                      dim=self._dim,
+                                      nonfinite=self.nonfinite)
+                self._dim = vector.shape[0]
+                sk = priority_sketch(jnp.asarray(vector), self.m, self.seed)
+            else:
+                if indices is None or values is None:
+                    raise ValueError(
+                        "sparse input needs both indices and values")
+                indices, values = check_sparse(indices, values, dim=self._dim,
+                                               nonfinite=self.nonfinite)
+                nnz = indices.shape[0]
+                pad = round_up_pow2(max(nnz, 1)) - nnz
+                # padding: value 0 -> weight 0 -> rank +inf, never selected
+                vals_p = jnp.asarray(np.pad(values, (0, pad)))
+                idx_p = jnp.asarray(np.pad(indices, (0, pad)))
+                sk = priority_sketch(vals_p, self.m, self.seed, indices=idx_p)
+                sp.set("sparse", True)
+            b = bucketize(sk, n_buckets=self.n_buckets, slots=self.slots)
+            if len(self._names) == self._cap:
+                self._grow()
+            d = len(self._names)
+            self._idx[d] = np.asarray(b.idx)
+            self._val[d] = np.asarray(b.val)
+            self._tau[d] = float(b.tau)
+            self._dropped[d] = int(b.dropped)
+            self._names.append(name)
+            self._name_set.add(name)
+            self._refresh_row_stats(d, d + 1)
+            self._device_corpus = None  # re-upload (not re-bucketize) lazily
+            if obs.enabled():
+                obs.quality_monitor().observe_ingest(self._tau[d], self._dropped[d])
 
     def add_many(self, names: Sequence, matrix: np.ndarray) -> None:
         """Batch-ingest a (D, n) block: one fused linear-time build for all
@@ -233,20 +240,26 @@ class SketchIndex:
         D = matrix.shape[0]
         if D == 0:
             return
-        self._dim = matrix.shape[1]
-        sk = build_priority_corpus(jnp.asarray(matrix), self.m, self.seed)
-        bc = bucketize_corpus(sk, n_buckets=self.n_buckets, slots=self.slots)
-        while len(self._names) + D > self._cap:
-            self._grow()
-        d0 = len(self._names)
-        self._idx[d0:d0 + D] = np.asarray(bc.idx)
-        self._val[d0:d0 + D] = np.asarray(bc.val)
-        self._tau[d0:d0 + D] = np.asarray(bc.tau)
-        self._dropped[d0:d0 + D] = np.asarray(bc.dropped)
-        self._names.extend(names)
-        self._name_set.update(names)
-        self._refresh_row_stats(d0, d0 + D)
-        self._device_corpus = None
+        with obs.op("serve.index.add_many") as sp:
+            sp.set("rows", D)
+            self._dim = matrix.shape[1]
+            sk = build_priority_corpus(jnp.asarray(matrix), self.m, self.seed)
+            bc = bucketize_corpus(sk, n_buckets=self.n_buckets,
+                                  slots=self.slots)
+            while len(self._names) + D > self._cap:
+                self._grow()
+            d0 = len(self._names)
+            self._idx[d0:d0 + D] = np.asarray(bc.idx)
+            self._val[d0:d0 + D] = np.asarray(bc.val)
+            self._tau[d0:d0 + D] = np.asarray(bc.tau)
+            self._dropped[d0:d0 + D] = np.asarray(bc.dropped)
+            self._names.extend(names)
+            self._name_set.update(names)
+            self._refresh_row_stats(d0, d0 + D)
+            self._device_corpus = None
+            if obs.enabled():
+                obs.quality_monitor().observe_ingest(self._tau[d0:d0 + D],
+                                             self._dropped[d0:d0 + D])
 
     def _rollback_last(self, k: int) -> None:
         """Undo the last ``k`` appended rows, restoring padding state
@@ -283,24 +296,29 @@ class SketchIndex:
         if not self._names:
             raise ValueError("query on an empty index: add vectors before "
                              "querying")
-        vector = check_vector(vector, "query vector", dim=self._dim,
-                              nonfinite=self.nonfinite)
-        sq = priority_sketch(jnp.asarray(vector), self.m, self.seed)
-        q = bucketize(sq, n_buckets=self.n_buckets, slots=self.slots)
-        est = np.asarray(query_corpus(q, self._corpus()))[: len(self._names)]
-        if top_k is None:
-            return list(zip(self._names, est.tolist()))
-        order = _top_k_desc(est, top_k)
-        return [(self._names[i], float(est[i])) for i in order]
+        with obs.op("serve.index.query") as sp:
+            sp.set("rows", len(self._names))
+            vector = check_vector(vector, "query vector", dim=self._dim,
+                                  nonfinite=self.nonfinite)
+            sq = priority_sketch(jnp.asarray(vector), self.m, self.seed)
+            q = bucketize(sq, n_buckets=self.n_buckets, slots=self.slots)
+            est = np.asarray(query_corpus(
+                q, self._corpus()))[: len(self._names)]
+            if top_k is None:
+                return list(zip(self._names, est.tolist()))
+            order = _top_k_desc(est, top_k)
+            return [(self._names[i], float(est[i])) for i in order]
 
     def all_pairs(self, *, use_pallas: bool = True) -> np.ndarray:
         """(D, D) inner-product estimate matrix over the indexed vectors in
         one tiled all-pairs kernel launch."""
-        c = self._corpus()
-        est = np.asarray(estimate_all_pairs_bucketized(
-            c, c, use_pallas=use_pallas))
-        D = len(self._names)
-        return est[:D, :D]
+        with obs.op("serve.index.all_pairs") as sp:
+            c = self._corpus()
+            est = np.asarray(estimate_all_pairs_bucketized(
+                c, c, use_pallas=use_pallas))
+            D = len(self._names)
+            sp.set("rows", D)
+            return est[:D, :D]
 
     def top_pairs(self, k: int = 10, **kw):
         """Streaming top-k most-similar pairs via the bound-pruned tile
@@ -342,20 +360,23 @@ class SketchIndex:
         D = len(self._names)
         if D == 0:
             return
-        mine = BucketizedSketch(
-            jnp.asarray(self._idx[:D]), jnp.asarray(self._val[:D]),
-            jnp.asarray(self._tau[:D]), jnp.asarray(self._dropped[:D]))
-        theirs = BucketizedSketch(
-            jnp.asarray(other._idx[:D]), jnp.asarray(other._val[:D]),
-            jnp.asarray(other._tau[:D]), jnp.asarray(other._dropped[:D]))
-        merged = merge_bucketized_corpora(mine, theirs, self.seed, m=self.m)
-        self._idx[:D] = np.asarray(merged.idx)
-        self._val[:D] = np.asarray(merged.val)
-        self._tau[:D] = np.asarray(merged.tau)
-        self._dropped[:D] = np.asarray(merged.dropped)
-        # every row's kept set / tau changed: all D rows are dirty
-        self._refresh_row_stats(0, D)
-        self._device_corpus = None
+        with obs.op("serve.index.merge_from") as sp:
+            sp.set("rows", D)
+            mine = BucketizedSketch(
+                jnp.asarray(self._idx[:D]), jnp.asarray(self._val[:D]),
+                jnp.asarray(self._tau[:D]), jnp.asarray(self._dropped[:D]))
+            theirs = BucketizedSketch(
+                jnp.asarray(other._idx[:D]), jnp.asarray(other._val[:D]),
+                jnp.asarray(other._tau[:D]), jnp.asarray(other._dropped[:D]))
+            merged = merge_bucketized_corpora(mine, theirs, self.seed,
+                                              m=self.m)
+            self._idx[:D] = np.asarray(merged.idx)
+            self._val[:D] = np.asarray(merged.val)
+            self._tau[:D] = np.asarray(merged.tau)
+            self._dropped[:D] = np.asarray(merged.dropped)
+            # every row's kept set / tau changed: all D rows are dirty
+            self._refresh_row_stats(0, D)
+            self._device_corpus = None
 
 
 class MatrixSketchStore:
@@ -593,35 +614,39 @@ class ShardedSketchIndex:
         if not self._names:
             raise ValueError("query on an empty index: add vectors before "
                              "querying")
-        per = [s.query(vector) if len(s) else [] for s in self._shards]
-        est = np.empty(len(self._names), np.float32)
-        for g, (s, r) in enumerate(self._homes):
-            est[g] = per[s][r][1]
-        if top_k is None:
-            return list(zip(self._names, est.tolist()))
-        order = _top_k_desc(est, top_k)
-        return [(self._names[i], float(est[i])) for i in order]
+        with obs.op("serve.sharded.query") as sp:
+            sp.set("shards", self.num_shards)
+            per = [s.query(vector) if len(s) else [] for s in self._shards]
+            est = np.empty(len(self._names), np.float32)
+            for g, (s, r) in enumerate(self._homes):
+                est[g] = per[s][r][1]
+            if top_k is None:
+                return list(zip(self._names, est.tolist()))
+            order = _top_k_desc(est, top_k)
+            return [(self._names[i], float(est[i])) for i in order]
 
     def all_pairs(self, *, use_pallas: bool = True) -> np.ndarray:
         """Global (D, D) estimates assembled from shard-pair launches."""
-        D = len(self._names)
-        out = np.zeros((D, D), np.float32)
-        gids = [[] for _ in range(self.num_shards)]
-        for g, (s, _) in enumerate(self._homes):
-            gids[s].append(g)
-        for i in range(self.num_shards):
-            if not gids[i]:
-                continue
-            ci = self._shards[i]._corpus()
-            for j in range(self.num_shards):
-                if not gids[j]:
+        with obs.op("serve.sharded.all_pairs") as sp:
+            sp.set("shards", self.num_shards)
+            D = len(self._names)
+            out = np.zeros((D, D), np.float32)
+            gids = [[] for _ in range(self.num_shards)]
+            for g, (s, _) in enumerate(self._homes):
+                gids[s].append(g)
+            for i in range(self.num_shards):
+                if not gids[i]:
                     continue
-                cj = self._shards[j]._corpus()
-                blk = np.asarray(estimate_all_pairs_bucketized(
-                    ci, cj, use_pallas=use_pallas))
-                out[np.ix_(gids[i], gids[j])] = \
-                    blk[: len(gids[i]), : len(gids[j])]
-        return out
+                ci = self._shards[i]._corpus()
+                for j in range(self.num_shards):
+                    if not gids[j]:
+                        continue
+                    cj = self._shards[j]._corpus()
+                    blk = np.asarray(estimate_all_pairs_bucketized(
+                        ci, cj, use_pallas=use_pallas))
+                    out[np.ix_(gids[i], gids[j])] = \
+                        blk[: len(gids[i]), : len(gids[j])]
+            return out
 
     def top_pairs(self, k: int = 10, **kw):
         """Global top-k pairs via guarded async fan-out of bound-pruned

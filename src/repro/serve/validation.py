@@ -12,11 +12,22 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
+
 NONFINITE_POLICIES = ("raise", "sanitize")
+
+
+def _reject(check: str) -> None:
+    """Count a boundary rejection (immediately before the ValueError)."""
+    if obs.enabled():
+        obs.counter("repro_validation_rejects_total",
+                    "Inputs rejected at the serving boundary",
+                    ("check",)).labels(check).inc()
 
 
 def check_nonfinite_policy(policy: str) -> str:
     if policy not in NONFINITE_POLICIES:
+        _reject("policy")
         raise ValueError(f"nonfinite policy must be one of "
                          f"{NONFINITE_POLICIES}, got {policy!r}")
     return policy
@@ -31,7 +42,12 @@ def check_finite(arr, what: str, *, nonfinite: str = "raise") -> np.ndarray:
     bad = ~np.isfinite(arr)
     if bad.any():
         if nonfinite == "sanitize":
+            if obs.enabled():
+                obs.counter("repro_validation_sanitized_total",
+                            "Non-finite values zeroed at the boundary"
+                            ).inc(int(bad.sum()))
             return np.where(bad, np.float32(0), arr)
+        _reject("nonfinite")
         raise ValueError(
             f"{what} contains {int(bad.sum())} non-finite value(s) "
             f"(NaN/Inf) out of {arr.size}; clean the input or construct "
@@ -44,8 +60,10 @@ def check_vector(vector, what: str, *, dim=None,
     """1-D shape + finiteness + (known) coordinate-universe size check."""
     vector = np.asarray(vector, np.float32)
     if vector.ndim != 1:
+        _reject("shape")
         raise ValueError(f"{what} must be 1-D, got shape {vector.shape}")
     if dim is not None and vector.shape[0] != dim:
+        _reject("dim")
         raise ValueError(f"{what} has {vector.shape[0]} coordinates but "
                          f"this index was built over {dim} — estimates "
                          "across different universes are meaningless")
@@ -60,15 +78,19 @@ def check_sparse(indices, values, *, dim=None,
     indices = np.asarray(indices, np.int32)
     values = np.asarray(values, np.float32)
     if indices.shape != values.shape or indices.ndim != 1:
+        _reject("shape")
         raise ValueError("indices/values must be equal-length 1-D")
     if indices.size:
         if int(indices.min()) < 0:
+            _reject("sparse_index")
             raise ValueError("sparse indices must be non-negative")
         if np.any(np.diff(indices) <= 0):
+            _reject("sparse_index")
             raise ValueError("sparse indices must be strictly ascending "
                              "(duplicate coordinates would be double-"
                              "sketched)")
         if dim is not None and int(indices.max()) >= dim:
+            _reject("sparse_index")
             raise ValueError(f"sparse index {int(indices.max())} out of "
                              f"range for a {dim}-coordinate universe")
     values = check_finite(values, "sparse values", nonfinite=nonfinite)
@@ -77,6 +99,7 @@ def check_sparse(indices, values, *, dim=None,
 
 def check_unique_name(name, existing, *, what: str = "index") -> None:
     if name in existing:
+        _reject("duplicate_name")
         raise ValueError(f"duplicate name {name!r}: already present in "
                          f"this {what} — a second copy would double-count "
                          "in all_pairs/query results")
@@ -86,6 +109,7 @@ def check_unique_names(names, existing, *, what: str = "index") -> None:
     seen = set()
     for name in names:
         if name in seen:
+            _reject("duplicate_name")
             raise ValueError(f"duplicate name {name!r} within the batch")
         seen.add(name)
         check_unique_name(name, existing, what=what)

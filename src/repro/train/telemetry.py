@@ -13,6 +13,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.estimator import estimate_inner_product
 from repro.core.priority import priority_sketch
 from repro.core.sketches import Sketch
@@ -46,22 +47,32 @@ def grad_cosine(a: GradSketch, b: GradSketch) -> jnp.ndarray:
 def gradient_noise_scale(per_shard: list[GradSketch], batch_per_shard: int):
     """Simple GNS estimate (Appendix-style, McCandlish et al.): uses
     |g_small|^2 (per-shard) vs |g_big|^2 (mean gradient), where the big-norm
-    is estimated from pairwise sketch inner products — O(W^2 m) instead of a
-    second full all-reduce."""
+    is estimated from pairwise sketch inner products — O(W^2 m / 2) instead
+    of a second full all-reduce."""
     W = len(per_shard)
     small2 = jnp.mean(jnp.stack([s.norm2 for s in per_shard]))
-    # E||mean g||^2 = (1/W^2) sum_ij <g_i, g_j>
+    # E||mean g||^2 = (1/W^2) sum_ij <g_i, g_j>.  The estimator is symmetric
+    # in its arguments (the joint inclusion probability is
+    # min(1, tau_a w_a, tau_b w_b)), so each off-diagonal pair is estimated
+    # once for i<j and doubled — half the estimator calls of the full loop.
     total = 0.0
+    half_sum = 0.0
+    n_pairs = 0
     for i in range(W):
-        for j in range(W):
-            if i == j:
-                total = total + per_shard[i].norm2
-            else:
-                est, _ = grad_inner_product(per_shard[i], per_shard[j])
-                total = total + est
+        total = total + per_shard[i].norm2
+        for j in range(i + 1, W):
+            est, half = grad_inner_product(per_shard[i], per_shard[j])
+            total = total + 2.0 * est
+            half_sum = half_sum + half
+            n_pairs += 1
     big2 = total / (W * W)
     b_small = batch_per_shard
     b_big = batch_per_shard * W
     g2 = (b_big * big2 - b_small * small2) / jnp.maximum(b_big - b_small, 1)
     s = (small2 - big2) / (1.0 / b_small - 1.0 / b_big)
-    return jnp.maximum(s, 0.0) / jnp.maximum(g2, 1e-30)
+    gns = jnp.maximum(s, 0.0) / jnp.maximum(g2, 1e-30)
+    if obs.enabled():
+        mean_half = half_sum / n_pairs if n_pairs else 0.0
+        obs.quality_monitor().observe_gns(
+            float(gns), float(big2), float(small2), float(mean_half))
+    return gns
