@@ -34,23 +34,32 @@ def scaled_error(est: float, true: float, a: np.ndarray, b: np.ndarray) -> float
 
 
 # method name -> (sketch_fn(vec, m_budget, seed), estimate_fn(sa, sb))
-def make_methods(include_wmh: bool = True, include_mh: bool = True):
+def make_methods(include_wmh: bool = True, include_mh: bool = True,
+                 backend: str = "reference"):
+    """The paper's method lineup.  ``backend`` threads into the sampling
+    sketch builders ("pallas" routes TS/PS through the fused engine-backed
+    corpus pipeline — the serving construction path — so figure benchmarks
+    exercise the same code the index serves from)."""
     methods = {
         "JL": (lambda v, m, s: jl_sketch(v, m, s), jl_estimate),
         "CS": (lambda v, m, s: countsketch(v, m, s), countsketch_estimate),
         "TS-weighted": (
-            lambda v, m, s: threshold_sketch(v, samples_for_budget(m), s),
+            lambda v, m, s: threshold_sketch(v, samples_for_budget(m), s,
+                                             backend=backend),
             lambda a, b: estimate_inner_product(a, b)),
         "PS-weighted": (
-            lambda v, m, s: priority_sketch(v, samples_for_budget(m), s),
+            lambda v, m, s: priority_sketch(v, samples_for_budget(m), s,
+                                            backend=backend),
             lambda a, b: estimate_inner_product(a, b)),
         "TS-uniform": (
             lambda v, m, s: threshold_sketch(v, samples_for_budget(m), s,
-                                             variant="uniform"),
+                                             variant="uniform",
+                                             backend=backend),
             lambda a, b: estimate_inner_product(a, b, variant="uniform")),
         "PS-uniform": (
             lambda v, m, s: priority_sketch(v, samples_for_budget(m), s,
-                                            variant="uniform"),
+                                            variant="uniform",
+                                            backend=backend),
             lambda a, b: estimate_inner_product(a, b, variant="uniform")),
     }
     if include_mh:

@@ -2,9 +2,18 @@
 Estan & Naughton [33]) and its priority counterpart vs our l2^2 methods.
 
 Validation: l2 variants perform at least as well as l1 (the paper found
-'similar, but never significantly better')."""
+'similar, but never significantly better').  Sketches build through the
+engine-backed ``backend="pallas"`` pipeline — the same fused construction
+path the serving layer uses — so this figure also exercises variant
+threading through the batched builders.
+
+Run standalone:
+    PYTHONPATH=src python -m benchmarks.fig5_endbiased            # full
+    PYTHONPATH=src python -m benchmarks.fig5_endbiased --dry-run  # CI gate
+"""
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
@@ -25,7 +34,8 @@ def run(quick: bool = True) -> Csv:
 
     def make(variant, kind):
         fn = threshold_sketch if kind == "TS" else priority_sketch
-        return (lambda v, mm, s: fn(v, samples_for_budget(mm), s, variant=variant),
+        return (lambda v, mm, s: fn(v, samples_for_budget(mm), s,
+                                    variant=variant, backend="pallas"),
                 lambda a, b: estimate_inner_product(a, b, variant=variant))
 
     methods = {
@@ -55,5 +65,16 @@ def run(quick: bool = True) -> Csv:
     return csv
 
 
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    csv = run(quick="--dry-run" in argv)
+    failures = [r for r in csv.rows if "/validate/" in r[0]
+                and not r[2].startswith("ok")]
+    if failures:
+        print(f"{len(failures)} gate(s) FAILED", file=sys.stderr)
+        return 1
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

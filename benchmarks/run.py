@@ -25,7 +25,8 @@ from . import (allpairs_throughput, common, construction_throughput,
                degraded_serving, fig3_synthetic_ip, fig4_binary,
                fig5_endbiased, fig6_join_corr, fig7_runtime, fig9_textsim,
                fig10_joinsize, matrix_product, merge_throughput,
-               obs_overhead, table2_realworld, topk_discovery)
+               obs_overhead, sketchdp_dryrun, table2_realworld,
+               topk_discovery)
 
 MODULES = [
     ("fig3_synthetic_ip", fig3_synthetic_ip),
@@ -36,6 +37,7 @@ MODULES = [
     ("table2_realworld", table2_realworld),
     ("fig9_textsim", fig9_textsim),
     ("fig10_joinsize", fig10_joinsize),
+    ("sketchdp_dryrun", sketchdp_dryrun),
     ("allpairs_throughput", allpairs_throughput),
     ("topk_discovery", topk_discovery),
     ("construction_throughput", construction_throughput),

@@ -37,7 +37,8 @@ from .batched import estimate_all_pairs, estimate_query, sketch_corpus
 from .merge import (PartitionStats, merge_combined_sketches, merge_sketches,
                     merge_sketches_many, merge_stats, partition_stats)
 from .variance import (chebyshev_estimate_ceiling, chebyshev_interval,
-                       coverage_fraction, error_guarantee,
+                       coverage_fraction, dp_chebyshev_halfwidth,
+                       dp_debias_gap, dp_variance_bound, error_guarantee,
                        linear_sketch_error, pair_estimate_ceiling,
                        rescaled_kept_norms, sketch_size_high_prob,
                        surviving_corpus_bound, variance_bound)
@@ -59,6 +60,7 @@ __all__ = [
     "PartitionStats", "merge_combined_sketches", "merge_sketches",
     "merge_sketches_many", "merge_stats", "partition_stats",
     "chebyshev_estimate_ceiling", "chebyshev_interval", "coverage_fraction",
+    "dp_chebyshev_halfwidth", "dp_debias_gap", "dp_variance_bound",
     "error_guarantee", "linear_sketch_error", "pair_estimate_ceiling",
     "rescaled_kept_norms", "sketch_size_high_prob",
     "surviving_corpus_bound", "variance_bound",

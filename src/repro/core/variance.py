@@ -161,6 +161,134 @@ def chebyshev_estimate_ceiling(n_a, n_b, m: int, delta: float = 0.05, *,
     return jnp.asarray(n_a) * jnp.asarray(n_b) * (1.0 + (lead / delta) ** 0.5)
 
 
+# ---------------------------------------------------------------------------
+# DP-release variance accounting (DESIGN.md §20)
+# ---------------------------------------------------------------------------
+
+
+def _dp_moments(a, b, m, *, q, noise_scale, clamp, p_floor, tau=None,
+                method="threshold", variant="l2"):
+    """Shared per-coordinate moments of the DP release mechanism: returns
+    ``(p, z, sigma2, b)`` for the release of ``a``'s sketch.
+
+    ``tau=None`` models the inclusion scale as ``m_eff / W`` (Theorem-1/3
+    lead convention: ``m`` for threshold, ``m-1`` for priority); passing
+    the realized sketch ``tau`` gives the exact per-release moments.
+    """
+    from .sketches import weight
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    w = weight(a, variant)
+    if tau is None:
+        m_eff = m if method == "threshold" else max(m - 1, 1)
+        W = jnp.sum(w)
+        tau = jnp.where(W > 0, m_eff / W, 0.0)
+    p = jnp.where(w > 0, jnp.minimum(1.0, tau * w), 0.0)
+    p_eff = jnp.clip(p, p_floor, 1.0)
+    z = jnp.where(p > 0, jnp.clip(a, -clamp, clamp) / p_eff, 0.0)
+    sigma2 = 2.0 * noise_scale * noise_scale   # Var of Laplace(b) = 2 b^2
+    return p, z, sigma2, b
+
+
+def dp_variance_bound(a, b, m, *, q, noise_scale, clamp, p_floor,
+                      universe=None, capacity=0, tau=None,
+                      method: str = "threshold", variant: str = "l2",
+                      mode: str = "dense") -> jnp.ndarray:
+    """Variance of the debiased DP estimator (DESIGN.md §20), the private
+    twin of :func:`variance_bound` — full-vector form for tests and the
+    ``benchmarks/sketchdp_dryrun.py`` band gate.
+
+    ``mode="dense"``: ``a`` privately released, ``b`` fully known
+    (:func:`repro.private.release.estimate_private_dense`).  Per
+    coordinate the contribution variance is ``b_i^2 (p_i (z_i^2 +
+    sigma^2) / q - p_i^2 z_i^2)``; each of the <= ``capacity`` decoy
+    slots adds ``sigma^2 E[b_u^2] / q^2 = sigma^2 ||b||^2 / (q^2
+    universe)``.
+
+    ``mode="pair"``: both sides privately released from **independently
+    seeded** sketches with the same calibration; the per-coordinate
+    variance is ``S_a S_b - mu_a^2 mu_b^2`` with ``S = p (z^2 +
+    sigma^2)/q``, ``mu = p z``, plus a decoy-collision bound.
+
+    Comparable against Theorem-1/3: at ``q -> 1``, ``sigma -> 0``,
+    ``p_floor -> 0`` the dense form collapses to the one-sided sampling
+    variance ``sum b_i^2 (1/p_i - 1) a_i^2``, which
+    :func:`variance_bound` upper-bounds.
+    """
+    p, z, sigma2, b = _dp_moments(a, b, m, q=q, noise_scale=noise_scale,
+                                  clamp=clamp, p_floor=p_floor, tau=tau,
+                                  method=method, variant=variant)
+    b2 = jnp.sum(b * b)
+    if mode == "dense":
+        var = jnp.sum(b * b * (p * (z * z + sigma2) / q - p * p * z * z))
+        if universe:
+            var = var + capacity * sigma2 * b2 / (q * q * universe)
+        return var
+    if mode != "pair":
+        raise ValueError(f"unknown mode {mode!r}; expected 'dense'|'pair'")
+    pb_, zb, _, _ = _dp_moments(b, a, m, q=q, noise_scale=noise_scale,
+                                clamp=clamp, p_floor=p_floor, tau=None,
+                                method=method, variant=variant)
+    Sa = p * (z * z + sigma2) / q
+    Sb = pb_ * (zb * zb + sigma2) / q
+    var = jnp.sum(Sa * Sb - (p * z) ** 2 * (pb_ * zb) ** 2)
+    if universe:
+        Z2 = (clamp / p_floor) ** 2
+        var = var + 2.0 * capacity * capacity * sigma2 * (Z2 + sigma2) \
+            / (q ** 4 * universe)
+    return var
+
+
+def dp_debias_gap(a, b, m, *, clamp, p_floor, tau=None,
+                  method: str = "threshold", variant: str = "l2",
+                  mode: str = "dense") -> jnp.ndarray:
+    """Deterministic residual bias of the DP estimator: ``|sum_i b_i (p_i
+    z_i - a_i)|`` (dense) — zero unless a value was clamped at ``C`` or an
+    inclusion probability was floored at ``p_floor``.  The band gate adds
+    this gap to the Chebyshev half-width, so the certificate covers the
+    clamp/floor bias the noise debiasing cannot remove."""
+    p, z, _, b = _dp_moments(a, b, m, q=1.0, noise_scale=0.0, clamp=clamp,
+                             p_floor=p_floor, tau=tau, method=method,
+                             variant=variant)
+    a = jnp.asarray(a, jnp.float32)
+    if mode == "dense":
+        return jnp.abs(jnp.sum(b * (p * z - a)))
+    if mode != "pair":
+        raise ValueError(f"unknown mode {mode!r}; expected 'dense'|'pair'")
+    pb_, zb, _, _ = _dp_moments(b, a, m, q=1.0, noise_scale=0.0,
+                                clamp=clamp, p_floor=p_floor, tau=None,
+                                method=method, variant=variant)
+    return jnp.abs(jnp.sum(p * z * pb_ * zb - a * b))
+
+
+def dp_chebyshev_halfwidth(a_norm2, b_norm2, m: int, *, q, noise_scale,
+                           clamp, p_floor, capacity=0, universe=None,
+                           delta: float = 0.05,
+                           method: str = "priority") -> jnp.ndarray:
+    """Norm-only production band for private serving, the DP twin of
+    :func:`chebyshev_interval` / ``obs.quality.chebyshev_halfwidth``.
+
+    Uses ``z_i^2 p_i <= c_i^2 / p_eff_i <= max(||a||^2 / m_eff, C^2 /
+    p_floor)`` (the first branch when ``p_i >= p_floor`` — then ``c^2/p
+    <= 1/tau = W/m_eff``; the second when floored), so
+
+        ``Var <= (max(a2/m_eff, C^2/p_floor) + sigma^2) b2 / q
+                 + capacity sigma^2 b2 / (q^2 universe)``
+
+    and the half-width is ``sqrt(Var / delta)``.  Reduces toward the
+    Theorem-1/3 band as ``q -> 1``, ``sigma -> 0``.
+    """
+    m_eff = m if method == "threshold" else max(m - 1, 1)
+    a2 = jnp.asarray(a_norm2, jnp.float32)
+    b2 = jnp.asarray(b_norm2, jnp.float32)
+    sigma2 = 2.0 * noise_scale * noise_scale
+    K = jnp.maximum(a2 / m_eff, clamp * clamp / p_floor)
+    var = (K + sigma2) * b2 / q
+    if universe:
+        var = var + capacity * sigma2 * b2 / (q * q * universe)
+    return jnp.sqrt(var / delta)
+
+
 def coverage_fraction(surv_mass, lost_mass):
     """Fraction of (squared-norm) mass served by the surviving shards:
     ``surv / (surv + lost)``; 1.0 for an empty corpus (nothing to lose)."""

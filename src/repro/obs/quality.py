@@ -182,7 +182,8 @@ class CanaryMonitor:
     """
 
     def __init__(self, index, pairs: Sequence[CanaryPair], *,
-                 registry: MetricsRegistry, every: int = 1):
+                 registry: MetricsRegistry, every: int = 1,
+                 query_kwargs: Optional[dict] = None):
         if not pairs:
             raise ValueError("need at least one canary pair")
         if every < 1:
@@ -190,6 +191,9 @@ class CanaryMonitor:
         self.index = index
         self.pairs = list(pairs)
         self.every = every
+        # extra kwargs for index.query — e.g. {"mode": "bias_aware"} to
+        # canary a non-plain serving mode (DESIGN.md §20)
+        self.query_kwargs = dict(query_kwargs or {})
         self._tick = 0
         r = registry
         self._g_ratio = r.gauge(
@@ -213,12 +217,23 @@ class CanaryMonitor:
     @classmethod
     def from_vectors(cls, index, canaries, *, registry: MetricsRegistry,
                      m: Optional[int] = None, delta: float = 0.05,
-                     every: int = 1) -> "CanaryMonitor":
+                     every: int = 1, halfwidth_fn=None,
+                     query_kwargs: Optional[dict] = None) -> "CanaryMonitor":
         """Build pinned pairs from raw vectors: ``canaries`` is
         ``[(label, query_vector, target_name, target_vector), ...]``;
         the exact product and half-width are computed here once, the
-        target vector is NOT retained.  ``m`` defaults to ``index.m``."""
+        target vector is NOT retained.  ``m`` defaults to ``index.m``.
+
+        ``halfwidth_fn(a_norm2, b_norm2, m, delta)`` overrides the
+        Theorem-1/3 half-width — DP and bias-aware serving modes come
+        with *wider* (DP) or *tighter* (bias-aware) accounted bounds, and
+        canarying those modes against the plain certificate would either
+        page spuriously or hide real regressions (DESIGN.md §20;
+        :func:`repro.core.variance.dp_chebyshev_halfwidth` is the DP
+        choice).  ``query_kwargs`` forwards to ``index.query`` (e.g.
+        ``{"mode": "private"}``)."""
         m = index.m if m is None else m
+        hw = chebyshev_halfwidth if halfwidth_fn is None else halfwidth_fn
         pairs = []
         for label, qv, target, tv in canaries:
             qv = np.asarray(qv, np.float64)
@@ -226,12 +241,13 @@ class CanaryMonitor:
             pairs.append(CanaryPair(
                 label=str(label), vector=qv.astype(np.float32),
                 target=target, true_value=float(qv @ tv),
-                halfwidth=chebyshev_halfwidth(
-                    float(qv @ qv), float(tv @ tv), m, delta)))
-        return cls(index, pairs, registry=registry, every=every)
+                halfwidth=float(hw(
+                    float(qv @ qv), float(tv @ tv), m, delta))))
+        return cls(index, pairs, registry=registry, every=every,
+                   query_kwargs=query_kwargs)
 
     def _estimates(self, vector: np.ndarray) -> dict:
-        res = self.index.query(vector)
+        res = self.index.query(vector, **self.query_kwargs)
         if hasattr(res, "estimates"):          # DegradedResult-like
             return dict(zip(res.names, np.asarray(res.estimates).tolist()))
         return {name: float(est) for name, est in res}

@@ -1,0 +1,28 @@
+"""Private & bias-aware estimation subsystem (DESIGN.md §20).
+
+- :mod:`repro.private.accountant` — strict (epsilon, delta) ledgers with
+  sequential/parallel/advanced composition;
+- :mod:`repro.private.release` — DP release of coordinated sampling
+  sketches (HT-rescale -> randomized response + decoys -> Laplace) and
+  the debiased dense / private-product estimators;
+- :mod:`repro.private.biasaware` — exact head + sampled-tail estimators
+  that tame Zipfian variance, with a median-of-k CountSketch fallback.
+"""
+from .accountant import (PrivacyAccountant, PrivacyBudgetExceeded,
+                         ReleaseRecord)
+from .release import (DPParams, PrivateSketch, estimate_private_dense,
+                      estimate_private_product, private_release,
+                      private_release_corpus)
+from .biasaware import (BiasAwareCSSketch, BiasAwareSketch,
+                        bias_aware_cs_sketch, bias_aware_sketch,
+                        estimate_bias_aware, estimate_bias_aware_cs,
+                        head_split, head_tail_variance_bound)
+
+__all__ = [
+    "PrivacyAccountant", "PrivacyBudgetExceeded", "ReleaseRecord",
+    "DPParams", "PrivateSketch", "estimate_private_dense",
+    "estimate_private_product", "private_release", "private_release_corpus",
+    "BiasAwareCSSketch", "BiasAwareSketch", "bias_aware_cs_sketch",
+    "bias_aware_sketch", "estimate_bias_aware", "estimate_bias_aware_cs",
+    "head_split", "head_tail_variance_bound",
+]

@@ -1,0 +1,296 @@
+"""Bias-aware head/tail estimation (DESIGN.md §20; Bias-Aware Sketches,
+arXiv 1610.07718; CountSketches and the Median of Three, arXiv 2102.02193).
+
+On Zipfian inputs a handful of heavy coordinates dominate the estimator
+variance.  The bias-aware sketch spends its budget asymmetrically: the
+top-``h`` coordinates *by value magnitude of the original vector* are
+kept **exactly** (the head), and a coordinated sample of the residual
+(the head zeroed out) covers the tail with the remaining ``m - h``
+budget.  The estimator splits into four termwise-unbiased parts:
+
+- head ∩ head   — exact, zero variance;
+- head_a x tail_b — one-sided Horvitz-Thompson (``v / p_b``), the head
+  value is exact so only b's inclusion randomness remains;
+- head_b x tail_a — symmetric;
+- tail x tail   — the plain Algorithm-2 path on the residual sketches.
+
+The head **must** be chosen from the original vector (a deterministic
+function of the data), not from the realized kept set — conditioning the
+head on the sketch couples the selection with the inclusion hashes and
+biases the tail terms (§20).  With a data-deterministic head the whole
+estimator is unbiased for *any* head size (the hypothesis property test
+in ``tests/test_private.py``).
+
+**When it wins.**  For the ``l2``/``l1`` weighted variants with adaptive
+tau, paying ``h`` budget for an exact head is *identical* to what
+adaptive threshold selection already does — the heavy entries are capped
+at ``p = 1`` and the tail tau works out to the same value, so the
+estimates agree to rounding (measured, not just argued: see §20).
+Adaptive weighted sampling IS a bias-aware sketch.  The split genuinely
+pays off where the plain estimator cannot adapt: the ``uniform`` variant
+(KMV-style join-size sampling), where a Zipf(1.5) head blows the plain
+variance up by orders of magnitude — that is the gated scenario
+(``benchmarks/sketchdp_dryrun.py``, ≥ 2x RMSE win).
+
+The CountSketch tail fallback replaces the sampled tail with ``k``
+independent CountSketch tables of the residual, estimated by the
+**median of k** (cross terms decode per-coordinate point queries, also
+median-of-k).  The median makes it robust to heavy collisions but NOT
+unbiased — it trades the unbiasedness certificate for collision
+robustness, and is excluded from the unbiasedness property test.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import (INVALID_IDX, estimate_inner_product, priority_sketch,
+                        threshold_sketch)
+from repro.core.hashing import fold_seed, hash_bucket, hash_sign
+from repro.core.sketches import Sketch, weight
+
+
+class BiasAwareSketch(NamedTuple):
+    """Exact head + coordinated tail sample of the residual."""
+
+    head_idx: np.ndarray   # int64 (h,) sorted ascending; -1 at padding
+    head_val: np.ndarray   # f32 (h,), 0 at padding
+    tail: Sketch           # residual sketch, budget m - h
+    variant: str
+
+    @property
+    def head_size(self) -> int:
+        return int(np.sum(self.head_idx >= 0))
+
+
+def head_split(a: np.ndarray, h: int):
+    """Deterministic top-``h``-by-magnitude split of a dense vector:
+    returns ``(head_idx sorted, head_val, residual)``.  Selection is
+    always by ``a_i^2`` — the head exists to remove the big *values*
+    driving the estimator variance, which is independent of the tail's
+    sampling variant (under ``uniform`` sampling weights are flat, yet
+    heavy values still dominate the variance; that is exactly the gated
+    regime).  Ties break by ascending coordinate (stable argsort), so the
+    head is a pure function of the data."""
+    a = np.asarray(a, np.float32)
+    h = int(min(h, a.shape[0]))
+    if h == 0:
+        return (np.empty((0,), np.int64), np.empty((0,), np.float32),
+                a.copy())
+    w = a.astype(np.float64) ** 2
+    head = np.sort(np.argsort(-w, kind="stable")[:h].astype(np.int64))
+    head_val = a[head]
+    # zero-weight coords carry no mass; keep them out of the head so h=0
+    # parity holds on sparse vectors
+    live = head_val != 0
+    head, head_val = head[live], head_val[live]
+    resid = a.copy()
+    resid[head] = 0.0
+    return head, head_val, resid
+
+
+def bias_aware_sketch(a: np.ndarray, m: int, seed, *, h: int = 16,
+                      kind: str = "priority", variant: str = "l2",
+                      adaptive: bool = True,
+                      backend: str = "reference") -> BiasAwareSketch:
+    """Build the head/tail sketch at total budget ``m`` (``h`` exact head
+    entries + an ``m - h`` coordinated sample of the residual).  ``h=0``
+    is bit-identical to the plain sketch (parity-tested)."""
+    if not 0 <= h < m:
+        raise ValueError(f"need 0 <= h < m, got h={h}, m={m}")
+    head_idx, head_val, resid = head_split(a, h)
+    mt = m - h
+    if kind == "priority":
+        tail = priority_sketch(jnp.asarray(resid), mt, seed, variant=variant,
+                               backend=backend)
+    elif kind == "threshold":
+        tail = threshold_sketch(jnp.asarray(resid), mt, seed,
+                                variant=variant, adaptive=adaptive,
+                                backend=backend)
+    else:
+        raise ValueError(f"unknown kind {kind!r}; "
+                         "expected 'priority'|'threshold'")
+    return BiasAwareSketch(head_idx=head_idx, head_val=head_val, tail=tail,
+                           variant=variant)
+
+
+def _tail_lookup(head_idx: np.ndarray, head_val: np.ndarray,
+                 other_head_idx: np.ndarray, tail: Sketch,
+                 variant: str) -> float:
+    """``sum_i v_i * tail_b[i] / p_b(i)`` over head coords of one side not
+    in the other side's head — the one-sided HT cross term."""
+    if head_idx.size == 0:
+        return 0.0
+    in_other = np.isin(head_idx, other_head_idx, assume_unique=True)
+    hi = head_idx[~in_other]
+    hv = head_val[~in_other]
+    if hi.size == 0:
+        return 0.0
+    t_idx = np.asarray(tail.idx, np.int64)
+    t_val = np.asarray(tail.val, np.float64)
+    tau = float(tail.tau)
+    w = np.asarray(weight(jnp.asarray(t_val, jnp.float32), variant),
+                   np.float64)
+    with np.errstate(over="ignore", invalid="ignore"):  # inf tau * 0 pad
+        p = np.where(w > 0, np.minimum(1.0, tau * w), 1.0)
+    pos = np.searchsorted(t_idx, hi)
+    pos = np.clip(pos, 0, max(t_idx.size - 1, 0))
+    found = (t_idx[pos] == hi) & (hi != INVALID_IDX)
+    return float(np.sum(np.where(found, hv * t_val[pos] / p[pos], 0.0)))
+
+
+def estimate_bias_aware(sa: BiasAwareSketch, sb: BiasAwareSketch) -> float:
+    """The four-part head/tail estimator (module docstring).  Unbiased
+    for any head size; exact on head ∩ head."""
+    if sa.variant != sb.variant:
+        raise ValueError("sketches must share a weight variant")
+    # head ∩ head: exact (both sorted -> searchsorted join)
+    est = 0.0
+    if sa.head_idx.size and sb.head_idx.size:
+        pos = np.searchsorted(sb.head_idx, sa.head_idx)
+        pos = np.clip(pos, 0, sb.head_idx.size - 1)
+        match = sb.head_idx[pos] == sa.head_idx
+        est += float(np.sum(np.where(
+            match, sa.head_val.astype(np.float64)
+            * sb.head_val[pos].astype(np.float64), 0.0)))
+    # cross terms: exact head value x HT-rescaled tail lookup
+    est += _tail_lookup(sa.head_idx, sa.head_val.astype(np.float64),
+                        sb.head_idx, sb.tail, sa.variant)
+    est += _tail_lookup(sb.head_idx, sb.head_val.astype(np.float64),
+                        sa.head_idx, sa.tail, sa.variant)
+    # tail x tail: plain Algorithm 2 on the residual sketches.  A coord in
+    # head_b is zeroed in residual_b, so it cannot re-enter here — no
+    # double counting with the cross terms.
+    est += float(estimate_inner_product(sa.tail, sb.tail,
+                                        variant=sa.variant))
+    return est
+
+
+def head_tail_variance_bound(a, b, m: int, h: int, *, variant: str = "l2",
+                             method: str = "priority") -> float:
+    """Full-vector variance decomposition of the bias-aware estimator
+    (DESIGN.md §20): head ∩ head contributes 0; each cross term is a
+    one-sided HT sum ``sum v_i^2 r_i^2 (1 - p)/p`` over the partner's
+    modeled tail inclusion; tail x tail is Theorem 1/3 on the residuals
+    at budget ``m - h``.  The Zipfian win is visible here before any
+    sampling: the residual norms shrink by the head mass."""
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    ha, va, ra = head_split(a, h)
+    hb, vb, rb = head_split(b, h)
+    mt = m - h
+    m_eff = mt if method == "threshold" else max(mt - 1, 1)
+
+    def tail_p(resid):
+        w = np.asarray(weight(jnp.asarray(resid, jnp.float32), variant),
+                       np.float64)
+        W = w.sum()
+        tau = m_eff / W if W > 0 else np.inf
+        return np.where(w > 0, np.minimum(1.0, tau * w), 1.0)
+
+    pa, pb = tail_p(ra), tail_p(rb)
+    only_a = ha[~np.isin(ha, hb, assume_unique=True)]
+    only_b = hb[~np.isin(hb, ha, assume_unique=True)]
+    cross_ab = float(np.sum(a[only_a] ** 2 * rb[only_a] ** 2
+                            * (1.0 - pb[only_a]) / pb[only_a]))
+    cross_ba = float(np.sum(b[only_b] ** 2 * ra[only_b] ** 2
+                            * (1.0 - pa[only_b]) / pa[only_b]))
+    maskI = (ra != 0) & (rb != 0)
+    raI2 = float(np.sum(np.where(maskI, ra * ra, 0.0)))
+    rbI2 = float(np.sum(np.where(maskI, rb * rb, 0.0)))
+    lead = 2.0 / max(m_eff, 1)
+    tail_tail = lead * max(raI2 * float(np.sum(rb * rb)),
+                           float(np.sum(ra * ra)) * rbI2)
+    return cross_ab + cross_ba + tail_tail
+
+
+# ---------------------------------------------------------------------------
+# CountSketch tail fallback (median of k; arXiv 2102.02193)
+# ---------------------------------------------------------------------------
+
+
+class BiasAwareCSSketch(NamedTuple):
+    """Exact head + ``k`` CountSketch tables of the residual."""
+
+    head_idx: np.ndarray   # int64 (h,) sorted
+    head_val: np.ndarray   # f32 (h,)
+    tables: np.ndarray     # f32 (k, mt) CountSketch tables
+    seed: int              # base seed; rep j hashes under seed + 7919 j
+    universe: int
+
+
+def _cs_seeds(seed: int, rep: int):
+    s = np.uint32(seed) + np.uint32(7919) * np.uint32(rep)
+    return fold_seed(s, 1), fold_seed(s, 2)
+
+
+def bias_aware_cs_sketch(a: np.ndarray, m: int, seed: int, *, h: int = 16,
+                         reps: int = 3,
+                         variant: str = "l2") -> BiasAwareCSSketch:
+    """Head + ``reps`` CountSketch tables of the residual, each of width
+    ``(m - h) // reps`` (equal total budget), built on the
+    ``kernels/countsketch`` pipeline."""
+    from repro.kernels.countsketch.ops import countsketch as cs_kernel
+    if reps < 1:
+        raise ValueError("reps must be >= 1")
+    mt = (m - h) // reps
+    if mt < 1:
+        raise ValueError(f"budget m={m} too small for h={h}, reps={reps}")
+    head_idx, head_val, resid = head_split(a, h)
+    rj = jnp.asarray(resid, jnp.float32)
+    tables = np.stack([
+        np.asarray(cs_kernel(rj, mt, *_cs_seeds(seed, j)))
+        for j in range(reps)])
+    return BiasAwareCSSketch(head_idx=head_idx, head_val=head_val,
+                             tables=tables, seed=int(seed),
+                             universe=int(np.asarray(a).shape[0]))
+
+
+def _cs_point_queries(sk: BiasAwareCSSketch,
+                      coords: np.ndarray) -> np.ndarray:
+    """Median-of-k decode of residual values at ``coords`` — the
+    median-of-three point estimate of arXiv 2102.02193."""
+    if coords.size == 0:
+        return np.empty((0,), np.float64)
+    cj = jnp.asarray(coords, jnp.int32)
+    reps, mt = sk.tables.shape
+    ests = np.empty((reps, coords.size), np.float64)
+    for j in range(reps):
+        sb, ss = _cs_seeds(sk.seed, j)
+        buckets = np.asarray(hash_bucket(sb, cj, mt))
+        signs = np.asarray(hash_sign(ss, cj), np.float64)
+        ests[j] = signs * sk.tables[j, buckets]
+    return np.median(ests, axis=0)
+
+
+def estimate_bias_aware_cs(sa: BiasAwareCSSketch,
+                           sb: BiasAwareCSSketch) -> float:
+    """Head ∩ head exact + point-query cross terms + median-of-k table
+    inner products for the tail.  Robust to Zipfian collisions, but the
+    median is NOT unbiased — documented trade (module docstring)."""
+    if sa.tables.shape != sb.tables.shape or sa.seed != sb.seed:
+        raise ValueError("CS sketches must share table shape and seed")
+    est = 0.0
+    if sa.head_idx.size and sb.head_idx.size:
+        pos = np.searchsorted(sb.head_idx, sa.head_idx)
+        pos = np.clip(pos, 0, sb.head_idx.size - 1)
+        match = sb.head_idx[pos] == sa.head_idx
+        est += float(np.sum(np.where(
+            match, sa.head_val.astype(np.float64)
+            * sb.head_val[pos].astype(np.float64), 0.0)))
+    only_a = sa.head_idx[~np.isin(sa.head_idx, sb.head_idx,
+                                  assume_unique=True)]
+    only_b = sb.head_idx[~np.isin(sb.head_idx, sa.head_idx,
+                                  assume_unique=True)]
+    va = sa.head_val[~np.isin(sa.head_idx, sb.head_idx,
+                              assume_unique=True)].astype(np.float64)
+    vb = sb.head_val[~np.isin(sb.head_idx, sa.head_idx,
+                              assume_unique=True)].astype(np.float64)
+    est += float(np.sum(va * _cs_point_queries(sb, only_a)))
+    est += float(np.sum(vb * _cs_point_queries(sa, only_b)))
+    # tail x tail: median of the k per-table inner products
+    est += float(np.median(np.sum(sa.tables.astype(np.float64)
+                                  * sb.tables.astype(np.float64), axis=1)))
+    return est

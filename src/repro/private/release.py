@@ -1,0 +1,270 @@
+"""Differentially-private release of coordinated sampling sketches
+(DESIGN.md §20).
+
+A raw sketch leaks *exactly which coordinates a row kept* — membership of
+a coordinate in the kept set is a deterministic function of that record's
+weight.  :func:`private_release` turns any d=1/d>1
+:class:`~repro.engine.containers.PayloadSketch` (or legacy ``Sketch``)
+into a :class:`PrivateSketch` that can be handed to an untrusted reader:
+
+1. **Horvitz-Thompson rescale at the curator** — released values are
+   ``z_i = clip(v_i, ±C) / p_eff_i`` with ``p_eff = clip(p_i, p_floor,
+   1)``, computed from the *true* inclusion probability ``p_i = min(1,
+   tau w_i)`` before anything is noised.  Every downstream estimator is
+   then *linear* in the released values, which is what makes debiasing
+   under noise possible at all (Algorithm 2's ``min(p_a, p_b)``
+   denominator cannot be privately debiased — see §20).  ``|z| <= Z =
+   C / p_floor`` bounds the sensitivity.
+2. **Randomized response on membership** — each kept entry survives into
+   the release with probability ``q = e^{eps_mem} / (1 + e^{eps_mem})``;
+   every non-surviving slot (RR-dropped, or capacity padding) is replaced
+   by a **decoy**: a uniformly random coordinate with value 0.  The
+   release always has exactly ``capacity`` slots, so neither the sketch
+   size nor which slots are real is visible.
+3. **Calibrated value noise** — every slot (decoys included) gets
+   ``Laplace(scale = 2 d Z / eps_val)`` noise per payload lane: one
+   record's add/remove moves one slot's L1 payload mass by at most
+   ``2 d Z``.
+
+Per-record cost is ``eps = eps_mem + eps_val`` (one membership bit + one
+slot's values), spent on a strict
+:class:`~repro.private.accountant.PrivacyAccountant` *before* the release
+is produced.  Releases of disjoint rows compose in parallel (one charge
+covers a whole corpus release); re-releasing after the data changed is a
+new sequential charge; querying a cached release is free post-processing.
+
+**What is NOT protected** (§20): ``tau`` itself is a function of the
+weight profile and is therefore *not* included in the release; the clamp
+``C`` and ``p_floor`` must be domain constants, not data-derived; decoys
+give appearance-deniability against a reader who cannot enumerate the
+universe, not classical RR over all ``universe`` coordinates.
+
+Estimator unbiasedness (up to the deterministic clamp/floor gap
+:func:`repro.core.variance.dp_debias_gap`):
+
+- :func:`estimate_private_dense` — private sketch vs a fully known
+  vector: always unbiased (``E[(1/q) sum z~_j b[idx_j]] = sum p_i z_i
+  b_i``).
+- :func:`estimate_private_product` — private vs private: unbiased only
+  when the two sketches were built with **independent seeds**; with
+  coordinated seeds the joint inclusion probability is ``min(p_a, p_b)``
+  (not ``p_a p_b``) and the released values cannot see the partner's
+  ``p``.  Privacy costs the coordination trick — honestly accounted as a
+  wider :func:`repro.core.variance.dp_variance_bound`.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Union
+
+import numpy as np
+
+from repro.core.sketches import INVALID_IDX, Sketch
+from repro.private.accountant import PrivacyAccountant
+
+_VARIANTS = ("l2", "l1", "uniform")
+
+
+class DPParams(NamedTuple):
+    """Release calibration.  ``epsilon`` splits ``mem_fraction`` to the
+    membership channel and the rest to the value channel; ``clamp`` and
+    ``p_floor`` must be domain constants (a data-derived clamp leaks)."""
+
+    epsilon: float = 1.0
+    delta: float = 0.0
+    mem_fraction: float = 0.5
+    clamp: float = 1.0
+    p_floor: float = 0.05
+
+    @property
+    def eps_mem(self) -> float:
+        return self.epsilon * self.mem_fraction
+
+    @property
+    def eps_val(self) -> float:
+        return self.epsilon * (1.0 - self.mem_fraction)
+
+    @property
+    def survival(self) -> float:
+        """RR survival probability q = e^eps_mem / (1 + e^eps_mem)."""
+        return math.exp(self.eps_mem) / (1.0 + math.exp(self.eps_mem))
+
+    @property
+    def value_bound(self) -> float:
+        """Z = C / p_floor, the released-value magnitude bound."""
+        return self.clamp / self.p_floor
+
+    def noise_scale(self, d: int = 1) -> float:
+        """Laplace scale b = 2 d Z / eps_val (L1 sensitivity of one slot's
+        d payload lanes under add/remove of one record)."""
+        return 2.0 * d * self.value_bound / self.eps_val
+
+    def validate(self) -> "DPParams":
+        if self.epsilon <= 0:
+            raise ValueError("epsilon must be positive")
+        if not (0.0 < self.mem_fraction < 1.0):
+            raise ValueError("mem_fraction must be in (0, 1)")
+        if self.clamp <= 0:
+            raise ValueError("clamp must be positive")
+        if not (0.0 < self.p_floor <= 1.0):
+            raise ValueError("p_floor must be in (0, 1]")
+        if self.delta < 0:
+            raise ValueError("delta must be nonnegative")
+        return self
+
+
+class PrivateSketch(NamedTuple):
+    """A released sketch: coordinates + noised HT-rescaled payloads.
+
+    Deliberately does **not** carry ``tau`` (it leaks the weight profile)
+    — the values are pre-rescaled so no estimator needs it.  ``idx`` has
+    a fixed ``capacity`` slots (decoys hide size and membership);
+    ``z`` is ``(..., capacity)`` for vector releases and
+    ``(..., capacity, d)`` for payload releases.
+    """
+
+    idx: np.ndarray       # int32 (..., cap): real coords and decoys, mixed
+    z: np.ndarray         # f32 noised z-values, 0-mean noise at decoys
+    universe: int         # coordinate universe the decoys were drawn from
+    params: DPParams
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[-1]
+
+
+def _as_rng(rng) -> np.random.Generator:
+    if isinstance(rng, np.random.Generator):
+        return rng
+    return np.random.default_rng(rng)
+
+
+def _weights(val2d: np.ndarray, variant: str) -> np.ndarray:
+    """(..., cap, d) payload -> (..., cap) sampling weight (numpy twin of
+    ``repro.engine.containers.payload_weight``)."""
+    if variant == "l2":
+        return np.sum(val2d * val2d, axis=-1)
+    if variant == "l1":
+        return np.sum(np.abs(val2d), axis=-1)
+    if variant == "uniform":
+        return np.any(val2d != 0, axis=-1).astype(np.float32)
+    raise ValueError(f"unknown variant {variant!r}; expected {_VARIANTS}")
+
+
+def private_release_corpus(idx: np.ndarray, val: np.ndarray,
+                           tau: np.ndarray, universe: int,
+                           params: DPParams, *,
+                           rng, variant: str = "l2",
+                           accountant: Optional[PrivacyAccountant] = None,
+                           label: str = "corpus-release") -> PrivateSketch:
+    """Release a whole corpus of disjoint rows in one charge.
+
+    ``idx``: int32 (D, cap); ``val``: f32 (D, cap) or (D, cap, d);
+    ``tau``: f32 (D,).  Rows are disjoint records, so the accountant is
+    charged **once** (parallel composition) for the whole release.
+    """
+    params.validate()
+    if accountant is not None:
+        # strict: charge (and possibly raise) before any noise is drawn
+        accountant.spend(params.epsilon, params.delta, label=label)
+    rng = _as_rng(rng)
+    idx = np.asarray(idx, np.int32)
+    val = np.asarray(val, np.float32)
+    vec = val.ndim == idx.ndim          # (D, cap) vector layout
+    pay = val[..., None] if vec else val
+    d = pay.shape[-1]
+    tau = np.asarray(tau, np.float32).reshape(idx.shape[:-1] + (1,))
+    if universe < 1:
+        raise ValueError("universe must be >= 1")
+
+    valid = idx != INVALID_IDX
+    w = _weights(pay, variant)
+    # inf tau * 0 weight at padding: route through `where` to avoid NaN
+    with np.errstate(over="ignore", invalid="ignore"):
+        p = np.where(valid & (w > 0), np.minimum(1.0, tau * w), 0.0)
+    p_eff = np.clip(p, params.p_floor, 1.0)
+    z = np.clip(pay, -params.clamp, params.clamp) / p_eff[..., None]
+    z = np.where(valid[..., None], z, 0.0)
+
+    survive = valid & (rng.random(idx.shape) < params.survival)
+    decoy_idx = rng.integers(0, universe, size=idx.shape, dtype=np.int64)
+    out_idx = np.where(survive, idx, decoy_idx.astype(np.int32))
+    out_z = np.where(survive[..., None], z, 0.0)
+    out_z = out_z + rng.laplace(0.0, params.noise_scale(d), size=out_z.shape)
+    out_z = out_z.astype(np.float32)
+    if vec:
+        out_z = out_z[..., 0]
+    # released order must not reveal which slots are real: sort by coord
+    order = np.argsort(out_idx, axis=-1, kind="stable")
+    out_idx = np.take_along_axis(out_idx, order, axis=-1)
+    out_z = np.take_along_axis(
+        out_z, order if vec else order[..., None], axis=-1 if vec else -2)
+    return PrivateSketch(idx=out_idx, z=out_z, universe=int(universe),
+                         params=params)
+
+
+def private_release(sketch: Union[Sketch, "PayloadSketch"], universe: int,
+                    params: DPParams, *, rng,
+                    variant: str = "l2",
+                    accountant: Optional[PrivacyAccountant] = None,
+                    label: str = "release") -> PrivateSketch:
+    """Release one sketch (legacy ``Sketch`` or payload-generic
+    ``PayloadSketch``); see module docstring for the mechanism."""
+    if hasattr(sketch, "payload"):      # engine PayloadSketch
+        idx = np.asarray(sketch.idx)[None]
+        val = np.asarray(sketch.payload)[None]
+    else:                               # core Sketch
+        idx = np.asarray(sketch.idx)[None]
+        val = np.asarray(sketch.val)[None]
+    tau = np.asarray(sketch.tau).reshape(1)
+    rel = private_release_corpus(idx, val, tau, universe, params, rng=rng,
+                                 variant=variant, accountant=accountant,
+                                 label=label)
+    return PrivateSketch(idx=rel.idx[0], z=rel.z[0], universe=rel.universe,
+                         params=rel.params)
+
+
+def estimate_private_dense(ps: PrivateSketch, b: np.ndarray) -> np.ndarray:
+    """Debiased estimate of ``<a, b>`` from a's release and a fully known
+    ``b``: ``(1/q) sum_j z~_j b[idx_j]``.
+
+    Unbiased for the clamped/floored target ``sum_i p_i z_i b_i`` —
+    decoys and the Laplace noise are zero-mean, RR survival divides out.
+    Supports a leading batch axis on ``ps`` ((D, cap) releases -> (D,)
+    estimates).
+    """
+    if ps.z.ndim > ps.idx.ndim:
+        raise ValueError("dense estimation is defined for d=1 releases")
+    b = np.asarray(b, np.float64)
+    terms = np.asarray(ps.z, np.float64) * b[np.asarray(ps.idx, np.int64)]
+    return terms.sum(axis=-1) / ps.params.survival
+
+
+def estimate_private_product(pa: PrivateSketch,
+                             pb: PrivateSketch) -> float:
+    """Debiased private x private estimate: ``(1/(q_a q_b)) sum_{idx
+    match} z~_a z~_b``.
+
+    Requires the two releases to come from **independently seeded**
+    sketches (coordinated seeds bias the joint inclusion through
+    ``min(p_a, p_b)`` — DESIGN.md §20); the caller owns that contract.
+    Noise-noise and decoy cross terms are zero-mean, so the estimate is
+    unbiased for ``sum_i (p_a p_b z_a z_b)_i`` = the clamp/floor target.
+    """
+    if pa.universe != pb.universe:
+        raise ValueError("releases must share a coordinate universe")
+    ia = np.asarray(pa.idx, np.int64)
+    ib = np.asarray(pb.idx, np.int64)
+    za = np.asarray(pa.z, np.float64)
+    zb = np.asarray(pb.z, np.float64)
+    # both sides may hold duplicate coords (decoy collisions): join on the
+    # sorted b side, summing b-side duplicates per unique coordinate
+    uniq, start = np.unique(ib, return_index=True)
+    csum = np.concatenate([[0.0], np.cumsum(zb)])
+    end = np.concatenate([start[1:], [ib.size]])
+    per_coord = csum[end] - csum[start]          # sum of zb per unique coord
+    upos = np.searchsorted(uniq, ia)
+    upos = np.clip(upos, 0, uniq.size - 1)
+    match = uniq[upos] == ia
+    est = float(np.sum(np.where(match, za * per_coord[upos], 0.0)))
+    return est / (pa.params.survival * pb.params.survival)

@@ -88,16 +88,42 @@ class SketchIndex:
     ``nonfinite``: ``"raise"`` (default) rejects NaN/Inf input with a clear
     error, ``"sanitize"`` zeroes it (weight-0 entries are never sampled) —
     the input-hardening contract of DESIGN.md §16.
+
+    Estimation modes (DESIGN.md §20): ``query(..., mode=...)`` selects
+
+    - ``"plain"`` — the Algorithm-2 bucketized kernel path (default);
+    - ``"bias_aware"`` — the kernel path plus an exact-head correction:
+      each row's top-``head_h`` coordinates (tracked at ingest) contribute
+      their exact product with the known query vector instead of the
+      sampled Horvitz-Thompson term, taming heavy-coordinate variance;
+    - ``"private"`` — estimates against a differentially-private corpus
+      release (``dp=DPParams(...)`` required).  The release is built
+      lazily, charged **once** on the index's
+      :class:`~repro.private.accountant.PrivacyAccountant` (disjoint rows
+      compose in parallel), cached until the corpus mutates, and repeated
+      queries against the cached release are free post-processing.
+      ``privacy_budget`` pins a finite epsilon budget; overdrawing raises
+      :class:`~repro.private.accountant.PrivacyBudgetExceeded` *before*
+      any release is produced.
     """
 
     def __init__(self, m: int = 256, *, n_buckets: int = 512, slots: int = 4,
                  seed: int = 11, initial_capacity: int = 64,
-                 nonfinite: str = "raise"):
+                 nonfinite: str = "raise", head_h: int = 16,
+                 dp=None, privacy_budget: Optional[float] = None):
+        from repro.private import PrivacyAccountant
         self.m = m
         self.n_buckets = n_buckets
         self.slots = slots
         self.seed = seed
         self.nonfinite = check_nonfinite_policy(nonfinite)
+        # unlike bias_aware_sketch (where the head eats into the m budget),
+        # the serving head rides *beside* the sketch, so any h >= 0 is legal
+        if head_h < 0:
+            raise ValueError(f"need head_h >= 0, got {head_h}")
+        self.head_h = int(head_h)
+        self.dp = dp.validate() if dp is not None else None
+        self.accountant = PrivacyAccountant(epsilon_budget=privacy_budget)
         self._dim: Optional[int] = None  # universe size, fixed on first add
         self._name_set: set = set()
         self._names: list = []
@@ -116,6 +142,14 @@ class SketchIndex:
         self._stats_epoch = 0
         self._stats_rows_computed = 0  # introspection: dirty-row accounting
         self._discovery = None         # lazy DiscoveryEngine (tile caches)
+        # bias-aware head state (§20): per-row exact top-head_h coords,
+        # values, and whether each landed in the bucketized kept set
+        self._head_idx = np.full((self._cap, self.head_h), -1, np.int64)
+        self._head_val = np.zeros((self._cap, self.head_h), np.float32)
+        self._head_kept = np.zeros((self._cap, self.head_h), bool)
+        # private release cache: (PrivateSketch over rows [0, D)) or None
+        self._private_release = None
+        self._release_count = 0
 
     def __len__(self):
         return len(self._names)
@@ -143,7 +177,39 @@ class SketchIndex:
         self._dropped = extend(self._dropped, 0)
         self._g = extend(self._g, 0)
         self._kn = extend(self._kn, 0)
+        self._head_idx = extend(self._head_idx, -1)
+        self._head_val = extend(self._head_val, 0)
+        self._head_kept = extend(self._head_kept, False)
         self._cap = new_cap
+
+    def _set_head_row(self, d: int, coords: np.ndarray,
+                      vals: np.ndarray) -> None:
+        """Record row ``d``'s exact head: the top-``head_h`` nonzero
+        candidates by l2 weight, sorted by coordinate, plus whether each
+        landed in the row's bucketized kept set (the bias-aware correction
+        needs to know what the kernel will match).  Must run *after* the
+        row's bucketized blocks are written."""
+        h = self.head_h
+        if h == 0:
+            return
+        coords = np.asarray(coords, np.int64)
+        vals = np.asarray(vals, np.float32)
+        live = vals != 0
+        coords, vals = coords[live], vals[live]
+        if coords.size > h:
+            part = np.argpartition(-(vals.astype(np.float64) ** 2),
+                                   h - 1)[:h]
+            coords, vals = coords[part], vals[part]
+        order = np.argsort(coords)
+        coords, vals = coords[order], vals[order]
+        k = coords.size
+        self._head_idx[d, :k] = coords
+        self._head_idx[d, k:] = -1
+        self._head_val[d, :k] = vals
+        self._head_val[d, k:] = 0
+        row = self._idx[d].ravel()
+        self._head_kept[d, :k] = np.isin(coords, row[row != INVALID_IDX])
+        self._head_kept[d, k:] = False
 
     def _refresh_row_stats(self, lo: int, hi: int) -> None:
         """Recompute the ceiling summaries for rows [lo, hi) only — the
@@ -212,10 +278,16 @@ class SketchIndex:
             self._val[d] = np.asarray(b.val)
             self._tau[d] = float(b.tau)
             self._dropped[d] = int(b.dropped)
+            if vector is not None:
+                nz = np.flatnonzero(vector)
+                self._set_head_row(d, nz, vector[nz])
+            else:
+                self._set_head_row(d, indices, values)
             self._names.append(name)
             self._name_set.add(name)
             self._refresh_row_stats(d, d + 1)
             self._device_corpus = None  # re-upload (not re-bucketize) lazily
+            self._private_release = None  # corpus mutated: next release pays
             if obs.enabled():
                 obs.quality_monitor().observe_ingest(self._tau[d], self._dropped[d])
 
@@ -253,10 +325,14 @@ class SketchIndex:
             self._val[d0:d0 + D] = np.asarray(bc.val)
             self._tau[d0:d0 + D] = np.asarray(bc.tau)
             self._dropped[d0:d0 + D] = np.asarray(bc.dropped)
+            for k in range(D):
+                nz = np.flatnonzero(matrix[k])
+                self._set_head_row(d0 + k, nz, matrix[k, nz])
             self._names.extend(names)
             self._name_set.update(names)
             self._refresh_row_stats(d0, d0 + D)
             self._device_corpus = None
+            self._private_release = None
             if obs.enabled():
                 obs.quality_monitor().observe_ingest(self._tau[d0:d0 + D],
                                              self._dropped[d0:d0 + D])
@@ -276,8 +352,12 @@ class SketchIndex:
             self._dropped[d] = 0
             self._g[d] = 0
             self._kn[d] = 0
+            self._head_idx[d] = -1
+            self._head_val[d] = 0
+            self._head_kept[d] = False
         self._stats_epoch += 1
         self._device_corpus = None
+        self._private_release = None
 
     def _corpus(self) -> BucketizedSketch:
         """Occupied corpus prefix on device, rounded up to a power of two so
@@ -290,24 +370,111 @@ class SketchIndex:
                 jnp.asarray(self._tau[:c]), jnp.asarray(self._dropped[:c]))
         return self._device_corpus
 
-    def query(self, vector: np.ndarray, top_k: Optional[int] = None):
+    def query(self, vector: np.ndarray, top_k: Optional[int] = None, *,
+              mode: str = "plain"):
         """Inner-product estimates of ``vector`` against every indexed
-        vector; one bucketized kernel launch."""
+        vector; one bucketized kernel launch.  ``mode`` selects the plain
+        Algorithm-2 path, the bias-aware exact-head correction, or the
+        DP-released corpus (class docstring; DESIGN.md §20)."""
+        if mode not in ("plain", "bias_aware", "private"):
+            raise ValueError(f"unknown mode {mode!r}; expected "
+                             "'plain'|'bias_aware'|'private'")
         if not self._names:
             raise ValueError("query on an empty index: add vectors before "
                              "querying")
         with obs.op("serve.index.query") as sp:
             sp.set("rows", len(self._names))
+            sp.set("mode", mode)
             vector = check_vector(vector, "query vector", dim=self._dim,
                                   nonfinite=self.nonfinite)
-            sq = priority_sketch(jnp.asarray(vector), self.m, self.seed)
-            q = bucketize(sq, n_buckets=self.n_buckets, slots=self.slots)
-            est = np.asarray(query_corpus(
-                q, self._corpus()))[: len(self._names)]
+            if mode == "private":
+                est = self._query_private(vector)
+            else:
+                sq = priority_sketch(jnp.asarray(vector), self.m, self.seed)
+                q = bucketize(sq, n_buckets=self.n_buckets, slots=self.slots)
+                est = np.asarray(query_corpus(
+                    q, self._corpus()), np.float64)[: len(self._names)]
+                if mode == "bias_aware":
+                    est = est + self._bias_aware_correction(
+                        q, float(sq.tau), vector)
             if top_k is None:
                 return list(zip(self._names, est.tolist()))
             order = _top_k_desc(est, top_k)
             return [(self._names[i], float(est[i])) for i in order]
+
+    def _bias_aware_correction(self, q, tau_q: float,
+                               vector: np.ndarray) -> np.ndarray:
+        """Exact-head correction (DESIGN.md §20): per row, subtract the
+        kernel's sampled Horvitz-Thompson contribution of the row's head
+        coordinates (present only when a coordinate is kept in *both*
+        bucketized structures) and add the exact product with the known
+        query vector.  Unbiased for any ``head_h`` — the kernel term over
+        non-head coordinates is untouched Algorithm 2."""
+        D = len(self._names)
+        if self.head_h == 0:
+            return np.zeros(D)
+        hi = self._head_idx[:D]
+        valid = hi >= 0
+        hic = np.where(valid, hi, 0)
+        hv = self._head_val[:D].astype(np.float64)
+        qv = np.where(valid, np.asarray(vector, np.float64)[hic], 0.0)
+        exact = hv * qv
+        # the kernel matched a head coord only if both bucketized kept sets
+        # hold it (bucket placement is a pure function of the coordinate)
+        q_idx = np.asarray(q.idx).ravel()
+        kept_q = np.isin(hic, q_idx[q_idx != INVALID_IDX]) & valid
+        kept = kept_q & self._head_kept[:D]
+        wq, wr = qv * qv, hv * hv
+        tau_r = self._tau[:D, None].astype(np.float64)
+        with np.errstate(over="ignore", invalid="ignore"):
+            p_q = np.where(wq > 0, np.minimum(1.0, tau_q * wq), 1.0)
+            p_r = np.where(wr > 0, np.minimum(1.0, tau_r * wr), 1.0)
+        p_min = np.minimum(p_q, p_r)
+        sampled = np.where(kept & (exact != 0),
+                           exact / np.where(p_min > 0, p_min, 1.0), 0.0)
+        if obs.enabled():
+            n_valid = int(valid.sum())
+            obs.gauge("repro_biasaware_head_fraction",
+                      "fraction of head entries the plain sketch kept").set(
+                          float(kept[valid].mean()) if n_valid else 0.0)
+        return (exact - sampled).sum(axis=1)
+
+    def _ensure_private_release(self):
+        """Lazy cached DP release of the whole corpus: one accountant
+        charge per release epoch (rows are disjoint records — parallel
+        composition); invalidated by any corpus mutation.  Strict: raises
+        :class:`~repro.private.accountant.PrivacyBudgetExceeded` before
+        producing anything when the budget would be overdrawn."""
+        if self.dp is None:
+            raise ValueError("private mode needs the index constructed "
+                             "with dp=DPParams(...)")
+        if self._private_release is None:
+            from repro.private import private_release_corpus
+            D = len(self._names)
+            flat_idx = self._idx[:D].reshape(D, -1)
+            flat_val = self._val[:D].reshape(D, -1)
+            # compact the (B, S) blocks to m slots: valid coords sort ahead
+            # of the INVALID sentinel (int32 max) and a row keeps <= m
+            order = np.argsort(flat_idx, axis=1, kind="stable")
+            idx_c = np.take_along_axis(flat_idx, order, axis=1)[:, : self.m]
+            val_c = np.take_along_axis(flat_val, order, axis=1)[:, : self.m]
+            self._release_count += 1
+            rng = np.random.default_rng((self.seed, self._release_count))
+            self._private_release = private_release_corpus(
+                idx_c, val_c, self._tau[:D], self._dim, self.dp, rng=rng,
+                accountant=self.accountant,
+                label=f"index-release-{self._release_count}")
+        return self._private_release
+
+    def _query_private(self, vector: np.ndarray) -> np.ndarray:
+        from repro.private import estimate_private_dense
+        rel = self._ensure_private_release()
+        est = np.asarray(estimate_private_dense(rel, vector))
+        if obs.enabled():
+            obs.gauge("repro_dp_epsilon_spent",
+                      "cumulative epsilon charged on this index's "
+                      "accountant").set(self.accountant.spent_epsilon)
+        return est
 
     def all_pairs(self, *, use_pallas: bool = True) -> np.ndarray:
         """(D, D) inner-product estimate matrix over the indexed vectors in
@@ -360,6 +527,10 @@ class SketchIndex:
         D = len(self._names)
         if D == 0:
             return
+        # a merged release would reveal both inputs' randomness: compose the
+        # peer's privacy ledger sequentially (strict — raises, mutating
+        # nothing, if the combined spend does not fit this budget)
+        self.accountant.merge_from(other.accountant)
         with obs.op("serve.index.merge_from") as sp:
             sp.set("rows", D)
             mine = BucketizedSketch(
@@ -374,9 +545,22 @@ class SketchIndex:
             self._val[:D] = np.asarray(merged.val)
             self._tau[:D] = np.asarray(merged.tau)
             self._dropped[:D] = np.asarray(merged.dropped)
+            if self.head_h:
+                # disjoint coordinate partitions: the merged head is the
+                # top-head_h of the union of both slices' heads, values
+                # exact (a coord is nonzero in exactly one partition);
+                # kept flags recompute against the merged blocks
+                for d in range(D):
+                    hm, ho = self._head_idx[d], other._head_idx[d]
+                    coords = np.concatenate([hm[hm >= 0], ho[ho >= 0]])
+                    vals = np.concatenate(
+                        [self._head_val[d][hm >= 0],
+                         other._head_val[d][ho >= 0]])
+                    self._set_head_row(d, coords, vals)
             # every row's kept set / tau changed: all D rows are dirty
             self._refresh_row_stats(0, D)
             self._device_corpus = None
+            self._private_release = None
 
 
 class MatrixSketchStore:
@@ -609,14 +793,18 @@ class ShardedSketchIndex:
                 self._shards[s].add_many([names[k] for k in rows],
                                          matrix[rows])
 
-    def query(self, vector: np.ndarray, top_k: Optional[int] = None):
-        """Fan out one bucketized launch per shard, reassemble globally."""
+    def query(self, vector: np.ndarray, top_k: Optional[int] = None, *,
+              mode: str = "plain"):
+        """Fan out one bucketized launch per shard, reassemble globally.
+        ``mode`` forwards to each shard (each shard charges its *own*
+        accountant for a private release — its rows are disjoint)."""
         if not self._names:
             raise ValueError("query on an empty index: add vectors before "
                              "querying")
         with obs.op("serve.sharded.query") as sp:
             sp.set("shards", self.num_shards)
-            per = [s.query(vector) if len(s) else [] for s in self._shards]
+            per = [s.query(vector, mode=mode) if len(s) else []
+                   for s in self._shards]
             est = np.empty(len(self._names), np.float32)
             for g, (s, r) in enumerate(self._homes):
                 est[g] = per[s][r][1]
