@@ -83,7 +83,7 @@ def run(quick: bool = True) -> Csv:
         band = float(dp_chebyshev_halfwidth(
             float(fa_n.astype(np.float64) @ fa_n),
             float(fb.astype(np.float64) @ fb), m,
-            q=params.survival, noise_scale=params.noise_scale(),
+            q=params.survival, noise_scale=params.noise_scale(m),
             clamp=params.clamp, p_floor=params.p_floor, capacity=m,
             universe=n_keys, delta=0.05))
         rel_direct, rel_plain, rel_ba, rel_priv = [], [], [], []

@@ -71,7 +71,7 @@ def _dp_frontier(csv: Csv, rng, *, n_keys, rows, m, trials) -> bool:
         # from the model-tau variance bound (defined before any draw)
         var = float(dp_variance_bound(
             jnp.asarray(a), jnp.asarray(b), m, q=params.survival,
-            noise_scale=params.noise_scale(), clamp=params.clamp,
+            noise_scale=params.noise_scale(m), clamp=params.clamp,
             p_floor=params.p_floor, universe=a.shape[0],
             capacity=m, method="priority"))
         gap = float(dp_debias_gap(

@@ -198,6 +198,12 @@ def dp_variance_bound(a, b, m, *, q, noise_scale, clamp, p_floor,
     twin of :func:`variance_bound` — full-vector form for tests and the
     ``benchmarks/sketchdp_dryrun.py`` band gate.
 
+    ``noise_scale`` is the mechanism's per-slot Laplace scale — under the
+    row-level calibration that is
+    ``DPParams.noise_scale(capacity)`` (= ``2 capacity Z / epsilon``),
+    matching the scale :func:`repro.private.release.private_release`
+    actually draws with.
+
     ``mode="dense"``: ``a`` privately released, ``b`` fully known
     (:func:`repro.private.release.estimate_private_dense`).  Per
     coordinate the contribution variance is ``b_i^2 (p_i (z_i^2 +

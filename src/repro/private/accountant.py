@@ -23,6 +23,15 @@ The accountant is strict: a spend that would exceed the budget raises
 ledger is not charged.  Merging two sketches' releases merges their
 ledgers sequentially (:meth:`merge_from`) — a merged release reveals both
 inputs' randomness.
+
+**Formal vs informal.**  Only the value-channel ``epsilon`` of a release
+is formal DP and counted against the budget.  The membership channel of
+:func:`~repro.private.release.private_release` (decoy survival filter)
+is appearance deniability, *not* a DP mechanism — its ``mem_epsilon``
+knob is recorded per ledger entry and surfaced via
+:attr:`PrivacyAccountant.informal_mem_epsilon` so the weaker guarantee
+is visible, but it is never summed into ``spent_epsilon`` and never
+gates the budget (DESIGN.md §20).
 """
 from __future__ import annotations
 
@@ -44,10 +53,15 @@ class PrivacyBudgetExceeded(RuntimeError):
 
 @dataclass(frozen=True)
 class ReleaseRecord:
-    """One ledger entry: what was spent and on which release."""
+    """One ledger entry: what was spent and on which release.
+
+    ``mem_epsilon`` is the release's informal membership-deniability
+    parameter — annotation only, never part of the (epsilon, delta)
+    guarantee (module docstring)."""
     label: str
     epsilon: float
     delta: float
+    mem_epsilon: float = 0.0
 
 
 class PrivacyAccountant:
@@ -90,6 +104,13 @@ class PrivacyAccountant:
     def remaining_delta(self) -> float:
         return self.delta_budget - self.spent_delta
 
+    @property
+    def informal_mem_epsilon(self) -> float:
+        """Sum of the recorded membership-deniability parameters — an
+        *annotation* of how much informal membership exposure the ledger
+        has seen, NOT a DP bound and NOT counted against the budget."""
+        return float(sum(r.mem_epsilon for r in self._ledger))
+
     # -- charging -------------------------------------------------------
 
     def can_spend(self, epsilon: float, delta: float = 0.0) -> bool:
@@ -99,12 +120,15 @@ class PrivacyAccountant:
                 <= self.delta_budget + _EPS_SLACK)
 
     def spend(self, epsilon: float, delta: float = 0.0, *,
-              label: str = "release") -> ReleaseRecord:
+              label: str = "release",
+              mem_epsilon: float = 0.0) -> ReleaseRecord:
         """Charge one release sequentially; strict — raises without
-        recording when the budget would be overdrawn."""
+        recording when the budget would be overdrawn.  ``mem_epsilon``
+        annotates the entry with the release's informal deniability
+        parameter (recorded, never budgeted)."""
         epsilon = float(epsilon)
         delta = float(delta)
-        if epsilon < 0 or delta < 0:
+        if epsilon < 0 or delta < 0 or mem_epsilon < 0:
             raise ValueError("cannot spend negative privacy budget")
         if not self.can_spend(epsilon, delta):
             raise PrivacyBudgetExceeded(
@@ -113,7 +137,8 @@ class PrivacyAccountant:
                 f"delta={self.remaining_delta:g}) of the "
                 f"(eps={self.epsilon_budget:g}, "
                 f"delta={self.delta_budget:g}) budget remains")
-        rec = ReleaseRecord(label=str(label), epsilon=epsilon, delta=delta)
+        rec = ReleaseRecord(label=str(label), epsilon=epsilon, delta=delta,
+                            mem_epsilon=float(mem_epsilon))
         self._ledger.append(rec)
         return rec
 

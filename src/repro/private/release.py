@@ -5,7 +5,16 @@ A raw sketch leaks *exactly which coordinates a row kept* — membership of
 a coordinate in the kept set is a deterministic function of that record's
 weight.  :func:`private_release` turns any d=1/d>1
 :class:`~repro.engine.containers.PayloadSketch` (or legacy ``Sketch``)
-into a :class:`PrivateSketch` that can be handed to an untrusted reader:
+into a :class:`PrivateSketch` that can be handed to an untrusted reader.
+
+**Adjacency.**  The unit of protection is one whole input row (one
+indexed vector): neighboring datasets swap a single row for another.
+This matches the serving accountant's parallel-composition argument —
+each row of a corpus release is a disjoint record — and it is what makes
+the sensitivity analysis below airtight: swapping a row may change
+*every* slot of that row's release (including through the row's
+data-dependent ``tau``, which perturbs every ``p_eff`` in the row), and
+the noise is calibrated for exactly that.
 
 1. **Horvitz-Thompson rescale at the curator** — released values are
    ``z_i = clip(v_i, ±C) / p_eff_i`` with ``p_eff = clip(p_i, p_floor,
@@ -14,30 +23,46 @@ into a :class:`PrivateSketch` that can be handed to an untrusted reader:
    then *linear* in the released values, which is what makes debiasing
    under noise possible at all (Algorithm 2's ``min(p_a, p_b)``
    denominator cannot be privately debiased — see §20).  ``|z| <= Z =
-   C / p_floor`` bounds the sensitivity.
-2. **Randomized response on membership** — each kept entry survives into
-   the release with probability ``q = e^{eps_mem} / (1 + e^{eps_mem})``;
-   every non-surviving slot (RR-dropped, or capacity padding) is replaced
-   by a **decoy**: a uniformly random coordinate with value 0.  The
-   release always has exactly ``capacity`` slots, so neither the sketch
-   size nor which slots are real is visible.
+   C / p_floor`` bounds the per-lane magnitude.
+2. **Decoy survival filter on membership** — each kept entry survives
+   into the release with probability ``q = e^{mem_epsilon} / (1 +
+   e^{mem_epsilon})``; every non-surviving slot (dropped, or capacity
+   padding) is replaced by a **decoy**: a uniformly random coordinate
+   with value 0.  The release always has exactly ``capacity`` slots, so
+   neither the sketch size nor which slots are real is visible.  This is
+   **appearance deniability, not formal DP** — an absent coordinate can
+   only appear as a uniform decoy, so the membership likelihood ratio is
+   not bounded by ``e^{mem_epsilon}``.  ``mem_epsilon`` is therefore
+   recorded on the ledger as an *informal* annotation and never booked
+   as budget (DESIGN.md §20).
 3. **Calibrated value noise** — every slot (decoys included) gets
-   ``Laplace(scale = 2 d Z / eps_val)`` noise per payload lane: one
-   record's add/remove moves one slot's L1 payload mass by at most
-   ``2 d Z``.
+   ``Laplace(scale = 2 capacity d Z / epsilon)`` noise per payload lane:
+   swapping one row moves the row's release by at most ``2 capacity d
+   Z`` in L1 (``capacity`` slots x ``d`` lanes x ``2 Z`` each), so the
+   value channel is ``epsilon``-DP under row-level adjacency.
 
-Per-record cost is ``eps = eps_mem + eps_val`` (one membership bit + one
-slot's values), spent on a strict
-:class:`~repro.private.accountant.PrivacyAccountant` *before* the release
-is produced.  Releases of disjoint rows compose in parallel (one charge
-covers a whole corpus release); re-releasing after the data changed is a
-new sequential charge; querying a cached release is free post-processing.
+The formal per-release cost is ``epsilon`` (the value channel alone),
+spent on a strict :class:`~repro.private.accountant.PrivacyAccountant`
+*before* the release is produced.  Releases of disjoint rows compose in
+parallel (one charge covers a whole corpus release); re-releasing after
+the data changed is a new sequential charge; querying a cached release
+is free post-processing.
 
-**What is NOT protected** (§20): ``tau`` itself is a function of the
-weight profile and is therefore *not* included in the release; the clamp
-``C`` and ``p_floor`` must be domain constants, not data-derived; decoys
-give appearance-deniability against a reader who cannot enumerate the
-universe, not classical RR over all ``universe`` coordinates.
+**Randomness.**  The ``rng`` that drives survival coins, decoys, and
+Laplace noise is *secret curator state*: it must come from OS entropy
+(``np.random.default_rng()`` with no seed) or a separately held secret
+key.  Deriving it from anything the reader knows — in particular the
+public sketch coordination seed — lets the reader replay the mechanism
+and invert the release (the serving layer draws from OS entropy by
+default; see ``SketchIndex(dp_rng=...)``).
+
+**What is formally protected and what is not** (§20): the released
+*values* are ``epsilon``-DP under row-level adjacency, tau-induced
+cross-slot effects included (the full-row sensitivity bound covers
+them); ``tau`` itself is still withheld from the release.  The released
+*support* (which coordinates appear) is protected only by the decoy
+mixture of step 2 — deniability, not DP.  The clamp ``C`` and
+``p_floor`` must be domain constants, not data-derived.
 
 Estimator unbiasedness (up to the deterministic clamp/floor gap
 :func:`repro.core.variance.dp_debias_gap`):
@@ -66,44 +91,45 @@ _VARIANTS = ("l2", "l1", "uniform")
 
 
 class DPParams(NamedTuple):
-    """Release calibration.  ``epsilon`` splits ``mem_fraction`` to the
-    membership channel and the rest to the value channel; ``clamp`` and
-    ``p_floor`` must be domain constants (a data-derived clamp leaks)."""
+    """Release calibration under row-level adjacency (module docstring).
+
+    ``epsilon`` is the **formal** charge, spent entirely on the value
+    channel (Laplace noise).  ``mem_epsilon`` tunes the decoy survival
+    filter — an *informal* appearance-deniability knob that is recorded
+    on the ledger but never booked as budget (the membership channel is
+    not a DP mechanism; DESIGN.md §20).  ``clamp`` and ``p_floor`` must
+    be domain constants (a data-derived clamp leaks)."""
 
     epsilon: float = 1.0
     delta: float = 0.0
-    mem_fraction: float = 0.5
+    mem_epsilon: float = 1.0
     clamp: float = 1.0
     p_floor: float = 0.05
 
     @property
-    def eps_mem(self) -> float:
-        return self.epsilon * self.mem_fraction
-
-    @property
-    def eps_val(self) -> float:
-        return self.epsilon * (1.0 - self.mem_fraction)
-
-    @property
     def survival(self) -> float:
-        """RR survival probability q = e^eps_mem / (1 + e^eps_mem)."""
-        return math.exp(self.eps_mem) / (1.0 + math.exp(self.eps_mem))
+        """Decoy-filter survival probability
+        q = e^mem_epsilon / (1 + e^mem_epsilon)."""
+        return math.exp(self.mem_epsilon) / (1.0 + math.exp(self.mem_epsilon))
 
     @property
     def value_bound(self) -> float:
         """Z = C / p_floor, the released-value magnitude bound."""
         return self.clamp / self.p_floor
 
-    def noise_scale(self, d: int = 1) -> float:
-        """Laplace scale b = 2 d Z / eps_val (L1 sensitivity of one slot's
-        d payload lanes under add/remove of one record)."""
-        return 2.0 * d * self.value_bound / self.eps_val
+    def noise_scale(self, slots: int, d: int = 1) -> float:
+        """Laplace scale b = 2 slots d Z / epsilon: swapping one row
+        changes all ``slots`` release slots x ``d`` payload lanes, each
+        by at most ``2 Z`` in L1 (row-level adjacency)."""
+        if slots < 1:
+            raise ValueError("slots must be >= 1")
+        return 2.0 * slots * d * self.value_bound / self.epsilon
 
     def validate(self) -> "DPParams":
         if self.epsilon <= 0:
             raise ValueError("epsilon must be positive")
-        if not (0.0 < self.mem_fraction < 1.0):
-            raise ValueError("mem_fraction must be in (0, 1)")
+        if self.mem_epsilon <= 0:
+            raise ValueError("mem_epsilon must be positive")
         if self.clamp <= 0:
             raise ValueError("clamp must be positive")
         if not (0.0 < self.p_floor <= 1.0):
@@ -162,20 +188,26 @@ def private_release_corpus(idx: np.ndarray, val: np.ndarray,
     ``idx``: int32 (D, cap); ``val``: f32 (D, cap) or (D, cap, d);
     ``tau``: f32 (D,).  Rows are disjoint records, so the accountant is
     charged **once** (parallel composition) for the whole release.
+
+    ``rng`` is secret curator state: pass OS entropy
+    (``np.random.default_rng()``), never anything derived from the
+    public sketch seed (module docstring).
     """
     params.validate()
-    if accountant is not None:
-        # strict: charge (and possibly raise) before any noise is drawn
-        accountant.spend(params.epsilon, params.delta, label=label)
-    rng = _as_rng(rng)
     idx = np.asarray(idx, np.int32)
     val = np.asarray(val, np.float32)
     vec = val.ndim == idx.ndim          # (D, cap) vector layout
     pay = val[..., None] if vec else val
     d = pay.shape[-1]
+    cap = idx.shape[-1]
     tau = np.asarray(tau, np.float32).reshape(idx.shape[:-1] + (1,))
     if universe < 1:
         raise ValueError("universe must be >= 1")
+    if accountant is not None:
+        # strict: charge (and possibly raise) before any noise is drawn
+        accountant.spend(params.epsilon, params.delta, label=label,
+                         mem_epsilon=params.mem_epsilon)
+    rng = _as_rng(rng)
 
     valid = idx != INVALID_IDX
     w = _weights(pay, variant)
@@ -190,7 +222,8 @@ def private_release_corpus(idx: np.ndarray, val: np.ndarray,
     decoy_idx = rng.integers(0, universe, size=idx.shape, dtype=np.int64)
     out_idx = np.where(survive, idx, decoy_idx.astype(np.int32))
     out_z = np.where(survive[..., None], z, 0.0)
-    out_z = out_z + rng.laplace(0.0, params.noise_scale(d), size=out_z.shape)
+    out_z = out_z + rng.laplace(0.0, params.noise_scale(cap, d),
+                                size=out_z.shape)
     out_z = out_z.astype(np.float32)
     if vec:
         out_z = out_z[..., 0]
@@ -250,9 +283,17 @@ def estimate_private_product(pa: PrivateSketch,
     ``min(p_a, p_b)`` — DESIGN.md §20); the caller owns that contract.
     Noise-noise and decoy cross terms are zero-mean, so the estimate is
     unbiased for ``sum_i (p_a p_b z_a z_b)_i`` = the clamp/floor target.
+    Defined for single-row d=1 releases only (the sorted-join below
+    would silently mix coordinates across rows of a batched release).
     """
     if pa.universe != pb.universe:
         raise ValueError("releases must share a coordinate universe")
+    if pa.idx.ndim != 1 or pb.idx.ndim != 1 \
+            or pa.z.ndim != 1 or pb.z.ndim != 1:
+        raise ValueError(
+            "estimate_private_product needs two single-row d=1 releases "
+            f"(1-D idx/z); got idx {pa.idx.shape} x {pb.idx.shape}, "
+            f"z {pa.z.shape} x {pb.z.shape}")
     ia = np.asarray(pa.idx, np.int64)
     ib = np.asarray(pb.idx, np.int64)
     za = np.asarray(pa.z, np.float64)

@@ -104,13 +104,17 @@ class SketchIndex:
       queries against the cached release are free post-processing.
       ``privacy_budget`` pins a finite epsilon budget; overdrawing raises
       :class:`~repro.private.accountant.PrivacyBudgetExceeded` *before*
-      any release is produced.
+      any release is produced.  Release randomness is drawn from OS
+      entropy, never from the public coordination ``seed`` (a
+      seed-deriving reader could replay and invert the mechanism);
+      ``dp_rng`` injects a deterministic generator for tests only.
     """
 
     def __init__(self, m: int = 256, *, n_buckets: int = 512, slots: int = 4,
                  seed: int = 11, initial_capacity: int = 64,
                  nonfinite: str = "raise", head_h: int = 16,
-                 dp=None, privacy_budget: Optional[float] = None):
+                 dp=None, privacy_budget: Optional[float] = None,
+                 dp_rng=None):
         from repro.private import PrivacyAccountant
         self.m = m
         self.n_buckets = n_buckets
@@ -123,6 +127,12 @@ class SketchIndex:
             raise ValueError(f"need head_h >= 0, got {head_h}")
         self.head_h = int(head_h)
         self.dp = dp.validate() if dp is not None else None
+        # DP release randomness is SECRET curator state: default to OS
+        # entropy.  It must never be derived from the public sketch seed —
+        # a reader knowing the seed could replay the survival coins /
+        # decoys / noise and invert the release.  ``dp_rng`` is a
+        # deterministic override for tests only.
+        self._dp_rng = dp_rng
         self.accountant = PrivacyAccountant(epsilon_budget=privacy_budget)
         self._dim: Optional[int] = None  # universe size, fixed on first add
         self._name_set: set = set()
@@ -459,7 +469,8 @@ class SketchIndex:
             idx_c = np.take_along_axis(flat_idx, order, axis=1)[:, : self.m]
             val_c = np.take_along_axis(flat_val, order, axis=1)[:, : self.m]
             self._release_count += 1
-            rng = np.random.default_rng((self.seed, self._release_count))
+            rng = (self._dp_rng if self._dp_rng is not None
+                   else np.random.default_rng())   # OS entropy, unseeded
             self._private_release = private_release_corpus(
                 idx_c, val_c, self._tau[:D], self._dim, self.dp, rng=rng,
                 accountant=self.accountant,

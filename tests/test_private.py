@@ -186,6 +186,75 @@ def test_private_product_unbiased_with_independent_seeds():
     assert abs(ests.mean() - true) <= 5 * se
 
 
+def test_noise_scale_row_level_calibration():
+    """Row-level adjacency: the Laplace scale must cover ALL slots of a
+    row's release (x payload lanes), not one slot — a release of ``cap``
+    slots draws at scale 2 cap d Z / epsilon."""
+    p = DPParams(epsilon=2.0, clamp=1.0, p_floor=0.05)
+    Z = p.clamp / p.p_floor
+    assert p.noise_scale(1) == pytest.approx(2 * Z / p.epsilon)
+    assert p.noise_scale(64) == pytest.approx(64 * p.noise_scale(1))
+    assert p.noise_scale(64, d=3) == pytest.approx(3 * p.noise_scale(64))
+    with pytest.raises(ValueError):
+        p.noise_scale(0)
+
+
+def test_release_noise_matches_row_level_scale():
+    """The realized per-slot noise of an actual release matches the
+    advertised 2 cap Z / eps calibration (all-padding rows release pure
+    decoy noise, so the sample std is directly measurable)."""
+    cap, D = 32, 64
+    idx = np.full((D, cap), -1, np.int32)   # INVALID everywhere
+    val = np.zeros((D, cap), np.float32)
+    tau = np.ones(D, np.float32)
+    params = DPParams(epsilon=1.0, clamp=1.0, p_floor=0.05)
+    rel = private_release_corpus(idx, val, tau, 10_000, params,
+                                 rng=np.random.default_rng(123))
+    want = params.noise_scale(cap) * math.sqrt(2.0)  # Laplace(b) std
+    got = float(np.asarray(rel.z, np.float64).std())
+    assert got == pytest.approx(want, rel=0.1)
+
+
+def test_accountant_mem_epsilon_annotation_not_budgeted():
+    """mem_epsilon is an informal deniability annotation: recorded and
+    surfaced, but never summed into the formal spend and never able to
+    overdraw the budget."""
+    acct = PrivacyAccountant(epsilon_budget=1.0)
+    acct.spend(1.0, label="r", mem_epsilon=50.0)
+    assert acct.spent_epsilon == pytest.approx(1.0)
+    assert acct.informal_mem_epsilon == pytest.approx(50.0)
+    assert acct.ledger[0].mem_epsilon == pytest.approx(50.0)
+    with pytest.raises(ValueError):
+        acct.spend(0.0, mem_epsilon=-1.0)
+    # a release stamps its params.mem_epsilon onto the ledger entry
+    rng = np.random.default_rng(0)
+    a, _ = _small_pair(rng)
+    sk = priority_sketch(jnp.asarray(a), 32, 3)
+    acct2 = PrivacyAccountant()
+    private_release(sk, a.shape[0], DPParams(epsilon=0.5, mem_epsilon=2.0),
+                    rng=rng, accountant=acct2)
+    assert acct2.spent_epsilon == pytest.approx(0.5)
+    assert acct2.informal_mem_epsilon == pytest.approx(2.0)
+
+
+def test_private_product_rejects_batched_releases():
+    """(D, cap) corpus releases must be refused, not silently flattened
+    into a meaningless joint cumsum."""
+    rng = np.random.default_rng(21)
+    a, b = _small_pair(rng)
+    sk = priority_sketch(jnp.asarray(a), 32, 3)
+    idx = np.stack([np.asarray(sk.idx)] * 3)
+    val = np.stack([np.asarray(sk.val)] * 3)
+    tau = np.full(3, float(sk.tau), np.float32)
+    batched = private_release_corpus(idx, val, tau, a.shape[0],
+                                     DPParams(), rng=rng)
+    single = private_release(sk, a.shape[0], DPParams(), rng=rng)
+    with pytest.raises(ValueError, match="single-row"):
+        estimate_private_product(batched, single)
+    with pytest.raises(ValueError, match="single-row"):
+        estimate_private_product(single, batched)
+
+
 def test_dp_variance_bound_widens_theorem_band():
     rng = np.random.default_rng(4)
     a, b = _small_pair(rng)
@@ -193,7 +262,7 @@ def test_dp_variance_bound_widens_theorem_band():
     m = 32
     params = DPParams(epsilon=1.0, clamp=1.0, p_floor=0.05)
     dp_var = float(dp_variance_bound(
-        aj, bj, m, q=params.survival, noise_scale=params.noise_scale(),
+        aj, bj, m, q=params.survival, noise_scale=params.noise_scale(m),
         clamp=params.clamp, p_floor=params.p_floor, universe=a.shape[0],
         capacity=m, method="priority"))
     plain_var = float(variance_bound(aj, bj, m, method="priority"))
@@ -204,7 +273,7 @@ def test_dp_variance_bound_widens_theorem_band():
     params_hi = DPParams(epsilon=8.0, clamp=1.0, p_floor=0.05)
     dp_var_hi = float(dp_variance_bound(
         aj, bj, m, q=params_hi.survival,
-        noise_scale=params_hi.noise_scale(), clamp=params_hi.clamp,
+        noise_scale=params_hi.noise_scale(m), clamp=params_hi.clamp,
         p_floor=params_hi.p_floor, universe=a.shape[0], capacity=m,
         method="priority"))
     assert dp_var_hi < dp_var
@@ -215,7 +284,7 @@ def test_dp_chebyshev_halfwidth_monotone_in_eps():
     for eps in (0.5, 1.0, 4.0):
         p = DPParams(epsilon=eps, clamp=1.0, p_floor=0.05)
         widths.append(float(dp_chebyshev_halfwidth(
-            50.0, 50.0, 64, q=p.survival, noise_scale=p.noise_scale(),
+            50.0, 50.0, 64, q=p.survival, noise_scale=p.noise_scale(64),
             clamp=p.clamp, p_floor=p.p_floor, capacity=64, universe=1000)))
     assert widths[0] > widths[1] > widths[2] > 0
 
@@ -406,6 +475,30 @@ def test_serve_private_accounting_lifecycle():
         idx.query(q, mode="private")   # third release would overdraw 2.5
     # plain serving is unaffected by an exhausted privacy budget
     assert len(idx.query(q)) == 4
+
+
+def test_serve_release_randomness_not_derived_from_public_seed():
+    """Two indexes with identical (public) coordination seed and identical
+    corpora must NOT produce identical private releases — release
+    randomness comes from OS entropy, so a seed-knowing reader cannot
+    replay the mechanism.  An explicit dp_rng override (tests only)
+    restores determinism."""
+    rng = np.random.default_rng(22)
+    v = rng.uniform(0, 1, 300).astype(np.float32)
+    q = rng.normal(size=300).astype(np.float32)
+
+    def release_of(dp_rng=None):
+        idx = _mk_index(head_h=0, dp=DPParams(epsilon=1.0), dp_rng=dp_rng)
+        idx.add("x", v)
+        idx.query(q, mode="private")
+        return idx._private_release
+
+    ra, rb = release_of(), release_of()
+    assert not np.array_equal(np.asarray(ra.z), np.asarray(rb.z))
+    rc = release_of(np.random.default_rng(99))
+    rd = release_of(np.random.default_rng(99))
+    np.testing.assert_array_equal(np.asarray(rc.z), np.asarray(rd.z))
+    np.testing.assert_array_equal(np.asarray(rc.idx), np.asarray(rd.idx))
 
 
 def test_serve_merge_from_composes_accountants_and_heads():
